@@ -1,0 +1,68 @@
+"""Table IV: ATCS ("auto") vs uniform ("fixed") training-eps selection,
+across estimators and datasets; MAE/MSE on random and uniform testing eps."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import EPOCHS, emit, get_data, save_json
+from repro.core import atcs
+from repro.data.groundtruth import cardinality_table, eps_grid_for_metric
+from repro.models import make_estimator
+
+DATASETS = ("glove", "word2vec", "gist", "nuswide")
+MODELS = ("nn", "rmi", "selnet", "linear")
+S_SAMPLES = 6
+M_GRID = 100
+
+
+def _eval(est, S, grid, sub, idx):
+    X = np.concatenate([S, grid[idx]], axis=1)
+    y = np.take_along_axis(sub, idx, axis=1)[:, 0]
+    pred = est.predict(X)
+    return float(np.mean(np.abs(pred - y))), float(np.mean((pred - y) ** 2))
+
+
+def run(datasets=DATASETS, models=MODELS) -> list:
+    rows = []
+    for ds in datasets:
+        R, S, spec = get_data(ds)
+        grid = eps_grid_for_metric(spec.metric, M_GRID)
+        table = cardinality_table(R, R, grid, spec.metric, backend="jnp",
+                                  exclude_self=True,
+                                  cache_key=("bench-atcs-R", ds, len(R)))
+        sub = cardinality_table(S, R, grid, spec.metric, backend="jnp",
+                                cache_key=("bench-atcs-S", ds, len(S)))
+        rng = np.random.default_rng(1)
+        rand_idx = rng.integers(0, M_GRID, size=(len(S), 1))
+        unif_idx = np.linspace(0, M_GRID - 1, 7).round().astype(np.int64)
+        unif_idx = np.tile(unif_idx[None, :1], (len(S), 1))  # one uniform col
+
+        for model in models:
+            for strat, select in (("fixed", atcs.uniform_select),
+                                  ("auto", atcs.atcs_select)):
+                idx = select(table, S_SAMPLES, seed=0)
+                X, y = atcs.build_training_tuples(R, grid, table, idx)
+                est = make_estimator(model, X.shape[1], **(
+                    {"epochs": EPOCHS} if model != "linear" else {}))
+                import time
+                t0 = time.perf_counter()
+                est.fit(X, y)
+                fit_s = time.perf_counter() - t0
+                r_mae, r_mse = _eval(est, S, grid, sub, rand_idx)
+                u_mae, u_mse = _eval(est, S, grid, sub, unif_idx)
+                rows.append({"dataset": ds, "model": model, "strategy": strat,
+                             "rand_mae": r_mae, "rand_mse": r_mse,
+                             "unif_mae": u_mae, "unif_mse": u_mse,
+                             "fit_s": fit_s})
+                emit(f"atcs/{ds}/{model}/{strat}", fit_s * 1e6,
+                     f"mae={r_mae:.3f}")
+    save_json("table4_atcs", rows)
+    # headline: per (dataset, model), did auto beat fixed?
+    wins = sum(1 for i in range(0, len(rows), 2)
+               if rows[i + 1]["rand_mae"] <= rows[i]["rand_mae"])
+    emit("atcs/auto_wins", 0.0, f"{wins}/{len(rows)//2}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

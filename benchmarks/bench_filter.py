@@ -1,0 +1,46 @@
+"""Table VI: filter effectiveness — Xling (mean/FPR XDT) vs LSBF:
+FPR, FNR, #Nbrs found by the gated join, #PPQ, #ANPQ."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_filter, save_json, true_counts
+from repro.core.joins.lsbf import LSBF
+from repro.core.xdt import filter_rates
+
+DATASETS = ("fasttext", "word2vec", "sift", "nuswide")
+EPS_LIST = (0.4, 0.45, 0.5)
+
+
+def _stats(verdicts, truth):
+    r = filter_rates(verdicts, truth, 0)
+    n_ppq = int(verdicts.sum())
+    n_nbrs = int(truth[verdicts].sum())     # neighbors found by gated search
+    return {"fpr": r["fpr"], "fnr": r["fnr"], "n_nbrs": n_nbrs,
+            "n_ppq": n_ppq, "anpq": n_nbrs / max(n_ppq, 1)}
+
+
+def run(datasets=DATASETS) -> list:
+    rows = []
+    for ds in datasets:
+        filt, R, S, spec = get_filter(ds)
+        lsbf = LSBF(R, spec.metric, k=18, l=10, theta=0.7,
+                    W=2.5 if spec.kind == "text" else 2.0)
+        for eps in EPS_LIST:
+            truth = true_counts(R, S, eps, spec.metric)
+            entries = {
+                "lsbf": lsbf.query(S),
+                "xling_mean": filt.query(S, eps, 0, mode="mean")[0],
+                "xling_fpr": filt.query(S, eps, 0, mode="fpr")[0],
+            }
+            for name, v in entries.items():
+                st = _stats(v, truth)
+                rows.append({"dataset": ds, "eps": eps, "filter": name, **st})
+                emit(f"filter/{ds}/eps{eps}/{name}", 0.0,
+                     f"fpr={st['fpr']:.3f};fnr={st['fnr']:.3f};anpq={st['anpq']:.1f}")
+    save_json("table6_filter_effectiveness", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

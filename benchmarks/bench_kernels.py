@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: the fused range_count + estimator-MLP paths.
+
+On this CPU container we time the XLA:CPU jnp path (production fast path
+off-TPU) and validate the Pallas kernel in interpret mode; the TPU roofline
+numbers for the same shapes come from the dry-run (§Roofline)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.kernels import ops, ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    for (nq, nr, d, m) in ((1024, 8192, 300, 100), (2048, 16384, 128, 100)):
+        q = rng.normal(size=(nq, d)).astype(np.float32)
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        r = rng.normal(size=(nr, d)).astype(np.float32)
+        r /= np.linalg.norm(r, axis=1, keepdims=True)
+        eps = np.linspace(0.3, 1.2, m).astype(np.float32)
+        out, _ = None, None
+        # warm + time the jnp path
+        ops.range_count_hist(q, r, eps, metric="cosine", backend="jnp")
+        t0 = time.perf_counter()
+        out = ops.range_count_hist(q, r, eps, metric="cosine", backend="jnp")
+        np.asarray(out)
+        dt = time.perf_counter() - t0
+        flops = 2.0 * nq * nr * d + nq * nr * m
+        # validate pallas (interpret) on a slice
+        got = np.asarray(ops.range_count_hist(q[:64], r[:512], eps,
+                                              metric="cosine",
+                                              backend="pallas", block_q=32,
+                                              block_r=128, eps_chunk=4))
+        want = np.asarray(ref.range_count_hist(q[:64], r[:512], eps, "cosine"))
+        assert (got == want).all()
+        tpu_compute_s = flops / PEAK_FLOPS
+        rows.append({"kernel": "range_count_hist", "nq": nq, "nr": nr,
+                     "d": d, "m": m, "cpu_s": dt, "flops": flops,
+                     "cpu_gflops": flops / dt / 1e9,
+                     "tpu_roofline_s": tpu_compute_s})
+        emit(f"kernel/range_count/{nq}x{nr}x{d}", dt * 1e6,
+             f"gflops={flops/dt/1e9:.1f}")
+
+    # estimator MLP
+    widths = (512, 512, 256, 128)
+    dims = (301,) + widths + (1,)
+    params = [(rng.normal(size=(a, b)).astype(np.float32) * 0.05,
+               np.zeros((1, b), np.float32))
+              for a, b in zip(dims[:-1], dims[1:])]
+    x = rng.normal(size=(8192, 301)).astype(np.float32)
+    ops.mlp_forward(params, x, backend="jnp")
+    t0 = time.perf_counter()
+    np.asarray(ops.mlp_forward(params, x, backend="jnp"))
+    dt = time.perf_counter() - t0
+    flops = 2 * 8192 * sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+    got = np.asarray(ops.mlp_forward(params, x[:128], backend="pallas",
+                                     block_n=64))
+    want = np.asarray(ref.mlp_forward(params, x[:128]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    rows.append({"kernel": "fused_mlp", "n": 8192, "cpu_s": dt,
+                 "flops": flops, "cpu_gflops": flops / dt / 1e9})
+    emit("kernel/fused_mlp/8192", dt * 1e6, f"gflops={flops/dt/1e9:.1f}")
+    save_json("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

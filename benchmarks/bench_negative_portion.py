@@ -1,0 +1,31 @@
+"""Table III: portion of negative queries per dataset per eps."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_data, save_json, true_counts
+
+PAPER = {  # (eps=0.4, 0.45, 0.5) from Table III
+    "fasttext": (0.110, 0.044, 0.012), "glove": (0.867, 0.785, 0.664),
+    "word2vec": (0.288, 0.168, 0.080), "gist": (0.844, 0.394, 0.103),
+    "sift": (0.558, 0.349, 0.153), "nuswide": (0.974, 0.965, 0.954),
+}
+
+
+def run() -> list:
+    rows = []
+    for name, paper in PAPER.items():
+        R, S, spec = get_data(name)
+        ours = []
+        for eps in (0.4, 0.45, 0.5):
+            t = true_counts(R, S, eps, spec.metric)
+            ours.append(float((t == 0).mean()))
+        rows.append({"dataset": name, "ours": ours, "paper": list(paper)})
+        emit(f"neg_portion/{name}", 0.0,
+             "|".join(f"{o:.3f}" for o in ours))
+    save_json("table3_negative_portion", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

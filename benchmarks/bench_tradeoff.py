@@ -1,0 +1,73 @@
+"""Figure 3: speed-quality trade-off curves — vary the key parameter of
+each approximate method (and tau/XDT-mode for XJoin; Xling-enhanced variants
+of LSH/KmeansTree/IVFPQ use mean-XDT tau=0 as in the paper)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, get_filter, save_json, true_counts
+from repro.core import enhance_with_xling, make_join
+from repro.core.xjoin import FilteredJoin
+
+DATASET = "glove"
+EPS = 0.45
+
+
+def _measure(fn, truth):
+    t0 = time.perf_counter()
+    counts = np.asarray(fn())
+    dt = time.perf_counter() - t0
+    rec = float(np.minimum(counts, truth).sum() / max(truth.sum(), 1))
+    return dt, rec
+
+
+def run(dataset=DATASET) -> list:
+    filt, R, S, spec = get_filter(dataset)
+    truth = true_counts(R, S, EPS, spec.metric)
+    naive = make_join("naive", R, spec.metric, backend="jnp")
+    naive.query_counts(S[:32], EPS)
+    rows = []
+
+    def record(method, param, fn):
+        dt, rec = _measure(fn, truth)
+        rows.append({"method": method, "param": param, "time_s": dt,
+                     "recall": rec})
+        emit(f"tradeoff/{method}/{param}", dt * 1e6 / len(S),
+             f"recall={rec:.4f}")
+
+    # XJoin: vary (xdt_mode, tau)
+    for mode, tau in (("mean", 0), ("mean", 5), ("fpr", 0), ("fpr", 5),
+                      ("fpr", 50)):
+        xj = FilteredJoin(naive, filter=filt, tau=tau, xdt_mode=mode)
+        record("xjoin", f"{mode}-tau{tau}", lambda xj=xj: xj.run(S, EPS).counts)
+
+    # LSH and LSH-Xling: vary n_probes
+    for n_p in (1, 2, 4, 8):
+        lsh = make_join("lsh", R, spec.metric, k=14, l=10, n_probes=n_p, W=2.5)
+        record("lsh", f"np{n_p}", lambda j=lsh: j.query_counts(S, EPS))
+        enh = enhance_with_xling(lsh, filt, tau=0)
+        record("lsh-xling", f"np{n_p}", lambda e=enh: e.run(S, EPS).counts)
+
+    # KmeansTree and enhanced: vary rho
+    for rho in (0.01, 0.02, 0.05, 0.1):
+        km = make_join("kmeanstree", R, spec.metric, branching=3, rho=rho)
+        record("kmeanstree", f"rho{rho}", lambda j=km: j.query_counts(S, EPS))
+        enh = enhance_with_xling(km, filt, tau=0)
+        record("kmeanstree-xling", f"rho{rho}", lambda e=enh: e.run(S, EPS).counts)
+
+    # IVFPQ and enhanced: vary n_probe
+    for n_p in (4, 16, 48):
+        ivf = make_join("ivfpq", R, spec.metric, C=128, n_probe=n_p,
+                        n_candidates=1000)
+        record("ivfpq", f"np{n_p}", lambda j=ivf: j.query_counts(S, EPS))
+        enh = enhance_with_xling(ivf, filt, tau=0)
+        record("ivfpq-xling", f"np{n_p}", lambda e=enh: e.run(S, EPS).counts)
+
+    save_json("fig3_tradeoff", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

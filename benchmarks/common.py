@@ -1,0 +1,77 @@
+"""Shared benchmark machinery: scaled datasets, cached fitted filters,
+timing, CSV emission (format: name,us_per_call,derived)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import XlingConfig, XlingFilter           # noqa: E402
+from repro.data import load_dataset                       # noqa: E402
+from repro.utils import cache_path                        # noqa: E402
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+N = {"small": 6000, "medium": 20000, "full": 150000}[SCALE]
+EPOCHS = {"small": 12, "medium": 20, "full": 60}[SCALE]
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def timed_call(fn, *args, warmup: int = 0, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)
+
+
+def get_data(name: str, n: int | None = None, sample: int = 1):
+    return load_dataset(name, n=n or N, seed=0, sample=sample)
+
+
+def get_filter(dataset: str, *, estimator: str = "nn", n: int | None = None,
+               m: int = 100, epochs: int | None = None, strategy: str = "atcs",
+               seed: int = 0) -> tuple[XlingFilter, np.ndarray, np.ndarray, object]:
+    """Fitted Xling filter with a disk cache (shared across benchmarks)."""
+    n = n or N
+    epochs = epochs or EPOCHS
+    R, S, spec = get_data(dataset, n)
+    key = ("xfilter-v2", dataset, estimator, n, m, epochs, strategy, seed)
+    path = cache_path(*key)
+    cfg = XlingConfig(estimator=estimator, metric=spec.metric, m=m,
+                      epochs=epochs, strategy=strategy, seed=seed,
+                      backend="jnp")
+    if os.path.exists(path):
+        filt = XlingFilter.load(path, cfg)
+    else:
+        filt = XlingFilter(cfg).fit(R, cache_key=("bench", dataset, n))
+        filt.save(path)
+    return filt, R, S, spec
+
+
+def true_counts(R, S, eps, metric):
+    from repro.kernels import ops
+    key = ("bench-true", len(R), len(S), round(float(eps), 6), metric,
+           float(R[0, 0]), float(S[0, 0]))
+    path = cache_path(*key)
+    if os.path.exists(path):
+        with np.load(path) as z:
+            return z["t"]
+    t = np.asarray(ops.range_count(S, R, float(eps), metric=metric,
+                                   backend="jnp"))
+    np.savez_compressed(path, t=t)
+    return t

@@ -1,0 +1,53 @@
+"""Benchmark runner — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines; details land in
+experiments/bench/*.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only tab3,tab4,...]
+  REPRO_BENCH_SCALE=small|medium|full  (default small)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,kernels,perf")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only != "all" else None
+
+    from benchmarks import (bench_atcs, bench_e2e, bench_filter,
+                            bench_generalization, bench_kernels,
+                            bench_negative_portion, bench_perf_xjoin,
+                            bench_tradeoff, bench_xdt)
+    suites = [
+        ("tab3", "Table III negative-query portions", bench_negative_portion.run),
+        ("tab4", "Table IV ATCS vs fixed eps selection", bench_atcs.run),
+        ("tab5", "Table V XDT selection x target mode", bench_xdt.run),
+        ("tab6", "Table VI Xling vs LSBF effectiveness", bench_filter.run),
+        ("fig2", "Figure 2 end-to-end join", bench_e2e.run),
+        ("fig3", "Figure 3 speed-quality trade-off", bench_tradeoff.run),
+        ("fig45", "Figures 4/5 generalization", bench_generalization.run),
+        ("kernels", "Kernel micro-benchmarks", bench_kernels.run),
+        ("perf", "Perf: XJoin paper-faithful vs optimized", bench_perf_xjoin.run),
+    ]
+    print("name,us_per_call,derived")
+    for key, title, fn in suites:
+        if want is not None and key not in want:
+            continue
+        print(f"# === {key}: {title} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"# {key} FAILED: {e}", file=sys.stderr, flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,31 @@
+"""Xling as a generic plugin: accelerate LSH and k-means-tree joins and
+print the speed/quality trade-off (paper Fig. 3 in miniature).
+
+    PYTHONPATH=src python examples/plugin_tradeoff.py
+"""
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+from benchmarks.common import get_filter
+from repro.core import enhance_with_xling, make_join
+
+# filter cost is O(1)/query while index probing is O(index): the plugin pays
+# off from ~20k points up (disk-cached from the benchmark run)
+EPS, N = 0.45, 20000
+filt, R, S, spec = get_filter("glove", n=N)
+naive = make_join("naive", R, spec.metric, backend="jnp")
+truth = naive.query_counts(S, EPS)
+
+print(f"{'method':24s} {'time ms':>9s} {'recall':>8s}")
+for name, params in (("lsh", dict(k=14, l=10, n_probes=4, W=2.5)),
+                     ("kmeanstree", dict(branching=3, rho=0.02))):
+    base = make_join(name, R, spec.metric, **params)
+    for tag, runner in ((name, lambda: base.query_counts(S, EPS)),
+                        (f"{name}-xling",
+                         lambda: enhance_with_xling(base, filt).run(S, EPS).counts)):
+        runner()  # warm
+        t0 = time.time(); counts = np.asarray(runner()); dt = time.time() - t0
+        rec = np.minimum(counts, truth).sum() / max(truth.sum(), 1)
+        print(f"{tag:24s} {dt*1e3:9.1f} {rec:8.3f}")

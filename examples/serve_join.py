@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper's production scenario): batched
+similarity-join requests against an indexed corpus, gated by Xling.
+
+    PYTHONPATH=src python examples/serve_join.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+sys.argv = ["serve_join", "--dataset", "glove", "--n", "8000",
+            "--eps", "0.45", "--tau", "5", "--batches", "6",
+            "--batch-size", "256", "--epochs", "12"]
+serve.main()

@@ -1,0 +1,25 @@
+"""Train a reduced LM arch with the full distributed runtime: sharded train
+step, gradient compression, checkpointing, a simulated failure at step 60
+and automatic restore — a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [arch] [steps]
+"""
+import sys, os, shutil
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.runtime.loop import TrainLoopConfig, run_training
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama_1_1b"
+steps = int(sys.argv[2]) if len(sys.argv) > 2 else 200
+
+ckpt = "/tmp/repro_example_ckpt"
+shutil.rmtree(ckpt, ignore_errors=True)
+cfg = get_config(arch, smoke=True)
+print(f"training reduced {cfg.name} for {steps} steps "
+      f"(failure injected at step 60)...")
+hist = run_training(cfg, TrainLoopConfig(
+    total_steps=steps, batch=8, seq=128, ckpt_dir=ckpt, ckpt_every=25,
+    compression="int8", fail_at_step=min(60, steps - 1), log_every=25))
+print(f"done: final loss {hist['final_loss']:.4f}, "
+      f"restarts {hist['restarts']}, steps run {len(hist['loss'])}")

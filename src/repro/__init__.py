@@ -1,0 +1,3 @@
+"""repro — Xling/XJoin (learned-filter similarity join) as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+from repro.archs.transformer import Model, build_model, layer_pattern, param_specs
+from repro.archs.encdec import EncDecModel
+from repro.archs.frontends import input_specs, make_batch
+
+__all__ = ["Model", "EncDecModel", "build_model", "layer_pattern",
+           "param_specs", "input_specs", "make_batch"]

@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder (whisper-base).
+
+The conv/audio frontend is a STUB per the assignment: `frames` arrive as
+precomputed frame embeddings [B, S_enc, d_model]. Encoder: bidirectional
+attention. Decoder: causal self-attention (KV cache) + cross-attention over
+the encoder states (cross K/V precomputed at prefill). Positions are
+sinusoidal (added) — whisper does not use RoPE, so rope_theta=0 disables it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.archs import layers as L
+from repro.archs.spec import ParamSpec, init_params, abstract_params
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import constrain_act, constrain_logits
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "attn": L.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.dtype),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.dtype),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "attn": L.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.dtype),
+        "cross": L.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim, cfg.dtype),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.dtype),
+    }
+
+
+def _stack(specs: dict, n: int):
+    from repro.archs.spec import is_spec
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+def _cross_attend(p, x, enc_k, enc_v, norm_eps, chunk):
+    h = L.rmsnorm(p["norm"], x, norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    o = L.attention(q, enc_k, enc_v, causal=False, chunk=chunk)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+@dataclass
+class EncDecModel:
+    cfg: ArchConfig
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "emb": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), cfg.dtype),
+            "head": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.dtype),
+            "enc_norm": L.rmsnorm_spec(cfg.d_model),
+            "final_norm": L.rmsnorm_spec(cfg.d_model),
+            "enc_layers": _stack(_enc_layer_specs(cfg), cfg.enc_layers),
+            "dec_layers": _stack(_dec_layer_specs(cfg), cfg.n_layers),
+        }
+
+    def init(self, key, dtype_override=None):
+        return init_params(key, self.param_specs(), dtype_override)
+
+    def abstract_params(self, dtype_override=None):
+        return abstract_params(self.param_specs(), dtype_override)
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        cfg = self.cfg
+        S = frames.shape[1]
+        x = frames.astype(cfg.dtype) + sinusoidal(jnp.arange(S), cfg.d_model
+                                                  ).astype(cfg.dtype)[None]
+        positions = jnp.arange(S)
+
+        def layer(h, p):
+            h = constrain_act(h)
+            h, _ = L.gqa_prefill(p["attn"], h, positions=positions,
+                                 causal=False, rope_theta=0.0,
+                                 norm_eps=cfg.norm_eps, chunk=cfg.attn_chunk)
+            h = L.mlp_apply(p["mlp"], h, cfg.mlp_kind, cfg.norm_eps)
+            return constrain_act(h), None
+
+        fn = jax.checkpoint(layer) if cfg.remat else layer
+        x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+        return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ------------------------------------------------------------- decoder
+    def _decoder(self, params, tokens, enc_out, with_cache: bool):
+        cfg = self.cfg
+        S = tokens.shape[1]
+        x = params["emb"][tokens].astype(cfg.dtype)
+        x = x + sinusoidal(jnp.arange(S), cfg.d_model).astype(cfg.dtype)[None]
+        positions = jnp.arange(S)
+
+        def layer(h, p):
+            h = constrain_act(h)
+            h, c = L.gqa_prefill(p["attn"], h, positions=positions,
+                                 causal=True, rope_theta=0.0,
+                                 norm_eps=cfg.norm_eps, chunk=cfg.attn_chunk,
+                                 with_cache=with_cache)
+            ek, ev = _cross_kv(p["cross"], enc_out)
+            h = _cross_attend(p["cross"], h, ek, ev, cfg.norm_eps, cfg.attn_chunk)
+            h = L.mlp_apply(p["mlp"], h, cfg.mlp_kind, cfg.norm_eps)
+            ys = {}
+            if with_cache:
+                ys = {"k": c[0], "v": c[1], "ek": ek, "ev": ev}
+            return h, ys
+
+        fn = jax.checkpoint(layer) if cfg.remat else layer
+        x, ys = jax.lax.scan(fn, x, params["dec_layers"])
+        return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), ys
+
+    # ------------------------------------------------------------ training
+    def train_loss(self, params, batch: dict):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out, False)
+        logits = constrain_logits(
+            jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype)))
+        pred = logits[:, :-1].astype(jnp.float32)
+        labels = batch["tokens"][:, 1:]
+        lse = jax.nn.logsumexp(pred, axis=-1)
+        ll = jnp.take_along_axis(pred, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(lse - ll)
+        return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, batch: dict):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x, ys = self._decoder(params, batch["tokens"], enc_out, True)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            params["head"].astype(x.dtype))[:, 0]
+        S = batch["tokens"].shape[1]
+        ns = cfg.kv_shards if S % max(cfg.kv_shards, 1) == 0 else 1
+
+        def reshape_kv(v):
+            G, B, S_, K, D = v.shape
+            return v.reshape(G, B, ns, S_ // ns, K, D)
+
+        cache = {"k": reshape_kv(ys["k"]), "v": reshape_kv(ys["v"]),
+                 "ek": ys["ek"], "ev": ys["ev"]}
+        return logits, cache
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = params["emb"][token].astype(cfg.dtype)
+        pe = sinusoidal(pos[None], cfg.d_model).astype(cfg.dtype)
+        x = x + pe[None]
+
+        def layer(h, xs):
+            p, c = xs
+            h, nc_self = L.gqa_decode(p["attn"], h, {"k": c["k"], "v": c["v"]},
+                                      pos, rope_theta=0.0, norm_eps=cfg.norm_eps)
+            hq = L.rmsnorm(p["cross"]["norm"], h, cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", hq, p["cross"]["wq"])
+            valid = jnp.ones((c["ek"].shape[1],), bool)
+            o = L._masked_decode(q, c["ek"], c["ev"], valid)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"])
+            h = L.mlp_apply(p["mlp"], h, cfg.mlp_kind, cfg.norm_eps)
+            return h, {"k": nc_self["k"], "v": nc_self["v"],
+                       "ek": c["ek"], "ev": c["ev"]}
+
+        x, new_cache = jax.lax.scan(layer, x, (params["dec_layers"], cache))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))[:, 0]
+        return logits, new_cache
+
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        G = cfg.n_layers
+        ns = cfg.kv_shards if max_len % max(cfg.kv_shards, 1) == 0 else 1
+        K, D = cfg.n_kv_heads, cfg.head_dim
+        shapes = {
+            "k": ((G, batch_size, ns, max_len // ns, K, D), cfg.dtype),
+            "v": ((G, batch_size, ns, max_len // ns, K, D), cfg.dtype),
+            "ek": ((G, batch_size, cfg.cross_len, K, D), cfg.dtype),
+            "ev": ((G, batch_size, cfg.cross_len, K, D), cfg.dtype),
+        }
+        make = (lambda sd: jax.ShapeDtypeStruct(*sd)) if abstract else \
+               (lambda sd: jnp.zeros(*sd))
+        return {k: make(v) for k, v in shapes.items()}

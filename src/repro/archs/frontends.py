@@ -1,0 +1,51 @@
+"""Modality-frontend STUBS + input_specs for every (arch x shape) cell.
+
+Per the assignment, [audio]/[vlm] entries specify the transformer BACKBONE
+only: input_specs() provides precomputed frame/patch embeddings as
+ShapeDtypeStructs (dry-run) or synthetic arrays (smoke tests / driver).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for one step's inputs (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision_stub":
+            n_tok = S - cfg.n_patches
+            return {"tokens": jax.ShapeDtypeStruct((B, n_tok), i32),
+                    "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model),
+                                                    cfg.dtype)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def make_batch(cfg: ArchConfig, cell_kind: str, batch: int, seq: int,
+               seed: int = 0) -> dict:
+    """Concrete synthetic inputs (smoke tests, the training driver)."""
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(batch, seq), dtype=np.int32))
+    if cell_kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            frames = jnp.asarray(rng.normal(size=(batch, seq, cfg.d_model))
+                                 .astype(np.float32) * 0.02, cfg.dtype)
+            return {"frames": frames, "tokens": toks}
+        if cfg.frontend == "vision_stub":
+            n_tok = max(seq - cfg.n_patches, 8)
+            patches = jnp.asarray(rng.normal(size=(batch, cfg.n_patches, cfg.d_model))
+                                  .astype(np.float32) * 0.02, cfg.dtype)
+            return {"tokens": toks[:, :n_tok], "patches": patches}
+        return {"tokens": toks}
+    return {"token": toks[:, :1], "pos": jnp.asarray(seq // 2, jnp.int32)}

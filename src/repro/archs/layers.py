@@ -1,0 +1,516 @@
+"""Composable transformer layers: norms, RoPE, chunked (flash-style)
+attention, GQA/MQA/MLA attention blocks with KV caches, SWA ring buffers,
+sharded flash-decode, and MLPs.
+
+Memory discipline (the spike showed naive S x S attention costs 273 GB/dev
+temp at 4k): prefill/train attention is *chunked* — an online-softmax scan
+over KV chunks, so live intermediates are O(S * chunk) not O(S^2).
+
+Decode attention uses the "sharded flash decode" layout: the KV cache is
+stored as [B, NS, Sc, K, Dh] with the NS axis sharded over the `model` mesh
+axis; each shard computes a partial (m, l, acc) and the combine is an
+elementwise log-sum-exp merge over NS (tiny tensors). This is how MQA/GQA
+archs with n_kv < TP (granite kv=1!) scale decode across the model axis —
+head-sharding is impossible there.
+
+MLA (MiniCPM3) uses the DeepSeek-V2 absorption trick: attention runs as MQA
+over the latent c_kv (+ shared rope key); per-head projections are absorbed
+into the query / applied after attention. The cache holds only the latent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.archs.spec import ParamSpec
+
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x [..., S, H, D] (D even), positions [..., S] or [S].
+    theta == 0 disables RoPE (archs with absolute/sinusoidal positions)."""
+    if theta == 0:
+        return x
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # [.., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                          # head axis
+    sin = sin[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------- flash attention
+def _attn_mask(key_pos, q_pos, kv_valid, causal, window):
+    mask = key_pos[None, :] < kv_valid
+    if causal:
+        mask = mask & (key_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        mask = mask & (key_pos[None, :] > q_pos[:, None] - window)
+    return mask  # [S, chunk]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, kv_valid: int = -1, chunk: int = 512):
+    """Memory-linear attention with a hand-written VJP.
+
+    Autodiff of an online-softmax scan stores O(n_chunks * S * D) carries per
+    layer (measured: 142 GB/dev on the 4k train cell) — the custom backward
+    recomputes each chunk's probabilities from the saved logsumexp instead,
+    keeping residuals at O(S * D): q,k,v,out,lse. This is the standard
+    flash-attention backward, expressed in jnp (the Pallas TPU kernel for it
+    lives in future work; XLA fuses this form well).
+
+    q [B,S,H,Dk]; k [B,T,K,Dk]; v [B,T,K,Dv]; T % chunk == 0; kv_valid < 0
+    means all T keys are valid.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_valid, chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_valid, chunk):
+    B, S, H, Dk = q.shape
+    T, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    nc = T // chunk
+    scale = 1.0 / np.sqrt(Dk)
+    valid = T if kv_valid < 0 else kv_valid
+
+    qg = q.reshape(B, S, K, G, Dk)
+    ks = jnp.moveaxis(k.reshape(B, nc, chunk, K, Dk), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, chunk, K, Dv), 1, 0)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, ci = xs
+        # native-dtype (bf16) operands with f32 accumulation: an .astype(f32)
+        # on the KV operand materializes a full f32 copy in HBM (measured in
+        # the dry-run HLO) — preferred_element_type avoids it.
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        key_pos = ci * chunk + jnp.arange(chunk)
+        mask = _attn_mask(key_pos, q_pos, valid, causal, window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))                  # [B,K,G,S]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, Dv).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, kv_valid, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_valid, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, kv_valid, chunk, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, Dk = q.shape
+    T, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    nc = T // chunk
+    scale = 1.0 / np.sqrt(Dk)
+    valid = T if kv_valid < 0 else kv_valid
+
+    qg = q.reshape(B, S, K, G, Dk)
+    dog = jnp.moveaxis(dout.reshape(B, S, K, G, Dv), 1, 3)    # [B,K,G,S,Dv]
+    outg = jnp.moveaxis(out.reshape(B, S, K, G, Dv), 1, 3)
+    delta = jnp.einsum("bkgsd,bkgsd->bkgs", dog, outg,
+                       preferred_element_type=jnp.float32)    # [B,K,G,S]
+    q_pos = q_offset + jnp.arange(S)
+    ks = jnp.moveaxis(k.reshape(B, nc, chunk, K, Dk), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, chunk, K, Dv), 1, 0)
+
+    def body(dq_acc, xs):
+        kc, vc, ci = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        key_pos = ci * chunk + jnp.arange(chunk)
+        mask = _attn_mask(key_pos, q_pos, valid, causal, window)
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - lse[..., None]), 0.0)       # [B,K,G,S,c]
+        pb = p.astype(v.dtype)
+        dv_c = jnp.einsum("bkgst,bkgsd->btkd", pb, dog,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkgsd,btkd->bkgst", dog, vc,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None]) * scale)
+        dsb = ds.astype(k.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bskgd", dsb, kc,
+                                     preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bkgst,bskgd->btkd", dsb, qg,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, S, K, G, Dk), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(nc)))
+    dq = dq.reshape(B, S, H, Dk).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, K, Dk).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, K, Dv).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ------------------------------------------------------- chunked attention
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0, q_offset=0,
+                      kv_valid: Optional[jax.Array] = None,
+                      chunk: int = 512) -> jax.Array:
+    """Online-softmax attention. q [B,S,H,Dk], k [B,T,K,Dk], v [B,T,K,Dv],
+    H % K == 0. Returns [B,S,H,Dv]. T % chunk must be 0 (pad + kv_valid)."""
+    B, S, H, Dk = q.shape
+    T, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    chunk = min(chunk, T)
+    if T % chunk:  # pad keys to a chunk multiple; kv_valid masks the tail
+        pad = chunk - T % chunk
+        k = jnp.concatenate([k, jnp.zeros((B, pad, K, Dk), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, K, Dv), v.dtype)], axis=1)
+        kv_valid = jnp.minimum(jnp.asarray(T if kv_valid is None else kv_valid), T)
+        T = T + pad
+    nc = T // chunk
+    scale = 1.0 / np.sqrt(Dk)
+
+    qg = q.reshape(B, S, K, G, Dk)
+    ks = jnp.moveaxis(k.reshape(B, nc, chunk, K, Dk), 1, 0)   # [nc,B,c,K,Dk]
+    vs = jnp.moveaxis(v.reshape(B, nc, chunk, K, Dv), 1, 0)
+    q_pos = q_offset + jnp.arange(S)
+    kv_valid = jnp.asarray(T if kv_valid is None else kv_valid)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, ci = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale        # [B,K,G,S,c]
+        key_pos = ci * chunk + jnp.arange(chunk)
+        mask = key_pos[None, :] < kv_valid
+        if causal:
+            mask = mask & (key_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (key_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # [B,K,G,S,Dv]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, Dv)
+    return out.astype(q.dtype)
+
+
+def sharded_flash_decode(q: jax.Array, kc: jax.Array, vc: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Single-token decode over a seq-sharded cache.
+
+    q [B,1,H,Dk]; kc [B,NS,Sc,K,Dk]; vc [B,NS,Sc,K,Dv] (NS sharded over
+    `model`). Returns [B,1,H,Dv]. Partial softmax per shard + LSE combine.
+    """
+    B, _, H, Dk = q.shape
+    _, NS, Sc, K, _ = kc.shape
+    Dv = vc.shape[-1]
+    G = H // K
+    scale = 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, K, G, Dk)
+
+    s = jnp.einsum("bkgd,bnskd->bnkgs", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    key_pos = (jnp.arange(NS)[:, None] * Sc + jnp.arange(Sc)[None, :])
+    mask = (key_pos < valid_len)[None, :, None, None, :]       # [1,NS,1,1,Sc]
+    s = jnp.where(mask, s, _NEG)
+    m = jnp.max(s, axis=-1)                                    # [B,NS,K,G]
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                                    # [B,NS,K,G]
+    acc = jnp.einsum("bnkgs,bnskd->bnkgd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+
+    # combine partials across shards (tiny tensors -> cheap collective)
+    M = jnp.max(m, axis=1, keepdims=True)                      # [B,1,K,G]
+    w = jnp.exp(m - M)                                         # [B,NS,K,G]
+    l_tot = jnp.sum(l * w, axis=1)                             # [B,K,G]
+    acc_tot = jnp.sum(acc * w[..., None], axis=1)              # [B,K,G,Dv]
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def cache_update(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
+                 v1: jax.Array, pos: jax.Array):
+    """Insert one token's K/V into the sharded [B,NS,Sc,K,D] cache."""
+    B, NS, Sc, K, Dk = cache_k.shape
+    shard = pos // Sc
+    off = pos % Sc
+    zero = jnp.zeros((), pos.dtype)
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, k1[:, None, None].astype(cache_k.dtype),
+        (zero, shard, off, zero, zero))
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, v1[:, None, None].astype(cache_v.dtype),
+        (zero, shard, off, zero, zero))
+    return ck, cv
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, chunk=512,
+              impl: str = "xla"):
+    """Training/prefill attention entry point: pads KV to a chunk multiple
+    and dispatches to flash_attention (custom-VJP, memory-linear XLA path)
+    or the fused Pallas TPU kernel (impl="pallas": serving/prefill forward;
+    keeps score tiles in VMEM and skips causal-masked kv blocks — see
+    kernels/flash_attention.py and EXPERIMENTS.md §Perf)."""
+    B, T, K, Dk = k.shape[0], k.shape[1], k.shape[2], k.shape[3]
+    Dv = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.concatenate([k, jnp.zeros((B, pad, K, Dk), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, K, Dv), v.dtype)], axis=1)
+    if impl == "pallas" and window == 0 and q_offset == 0:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(
+            q, k, v, causal=causal, block_q=min(64, q.shape[1]),
+            block_kv=chunk, kv_valid=T if pad else -1,
+            interpret=jax.default_backend() != "tpu")
+    return flash_attention(q, k, v, causal, window, q_offset,
+                           T if pad else -1, chunk)
+
+
+# ------------------------------------------------------------ GQA attention
+def gqa_specs(d: int, n_heads: int, n_kv: int, d_head: int, dtype) -> dict:
+    return {
+        "norm": rmsnorm_spec(d),
+        "wq": ParamSpec((d, n_heads, d_head), ("embed", "heads", "head_dim"), dtype),
+        "wk": ParamSpec((d, n_kv, d_head), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": ParamSpec((d, n_kv, d_head), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": ParamSpec((n_heads, d_head, d), ("heads", "head_dim", "embed"), dtype,
+                        init="scaled"),
+    }
+
+
+def gqa_prefill(p: dict, x: jax.Array, *, positions, causal=True, window=0,
+                rope_theta=1e4, norm_eps=1e-5, chunk=512, kv_valid=None,
+                with_cache=False):
+    """Full-sequence attention block. Returns (y, (k, v) or None)."""
+    h = rmsnorm(p["norm"], x, norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    o = attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    y = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return (y, (k, v)) if with_cache else (y, None)
+
+
+def gqa_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, *,
+               window=0, rope_theta=1e4, norm_eps=1e-5):
+    """One-token decode. x [B,1,D]. cache {"k","v"}: [B,NS,Sc,K,Dh] (or ring
+    [B,1,W,K,Dh] when window>0). Returns (y, new_cache)."""
+    h = rmsnorm(p["norm"], x, norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k1 = jnp.einsum("bsd,dhk->bshk", h, p["wk"])[:, 0]
+    v1 = jnp.einsum("bsd,dhk->bshk", h, p["wv"])[:, 0]
+    q = rope(q, pos[None], rope_theta)
+    k1 = rope(k1[:, None], pos[None], rope_theta)[:, 0]
+
+    if window > 0:
+        # ring buffer: slot = pos % W; key positions are reconstructable
+        W = cache["k"].shape[2]
+        slot = pos % W
+        ck, cv = cache_update(cache["k"], cache["v"], k1, v1,
+                              jnp.asarray(slot))
+        # slot i holds position p_i = pos - ((pos - i) mod W), valid if >= 0
+        idx = jnp.arange(W)
+        key_pos = pos - ((pos - idx) % W)
+        # map to "valid length" semantics via masked flash decode: treat the
+        # ring as a single shard and mask invalid slots by key position.
+        o = _masked_decode(q, ck[:, 0], cv[:, 0], key_pos >= 0)
+    else:
+        ck, cv = cache_update(cache["k"], cache["v"], k1, v1, pos)
+        o = sharded_flash_decode(q, ck, cv, pos + 1)
+    y = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def _masked_decode(q, k, v, valid_mask):
+    """q [B,1,H,Dk], k/v [B,T,K,D*], valid_mask [T] bool."""
+    B, _, H, Dk = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, K, G, Dk)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid_mask[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid_mask[None, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, v.shape[-1]).astype(q.dtype)
+
+
+# ------------------------------------------------------------ MLA attention
+def mla_specs(d: int, n_heads: int, *, q_lora: int, kv_lora: int,
+              d_nope: int, d_rope: int, d_v: int, dtype) -> dict:
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_dq": ParamSpec((d, q_lora), ("embed", "latent"), dtype),
+        "w_uq": ParamSpec((q_lora, n_heads, d_nope + d_rope),
+                          ("latent", "heads", "head_dim"), dtype),
+        "w_dkv": ParamSpec((d, kv_lora), ("embed", "latent"), dtype),
+        "w_kr": ParamSpec((d, d_rope), ("embed", "head_dim"), dtype),
+        "w_uk": ParamSpec((kv_lora, n_heads, d_nope),
+                          ("latent", "heads", "head_dim"), dtype),
+        "w_uv": ParamSpec((kv_lora, n_heads, d_v),
+                          ("latent", "heads", "head_dim"), dtype),
+        "wo": ParamSpec((n_heads, d_v, d), ("heads", "head_dim", "embed"),
+                        dtype, init="scaled"),
+    }
+
+
+def _mla_absorbed_q(p, h, positions, rope_theta, d_nope, d_rope):
+    """Queries in the latent space: q_abs [B,S,H, kv_lora + d_rope]."""
+    q = jnp.einsum("bsd,dr->bsr", h, p["w_dq"])
+    q = jnp.einsum("bsr,rhk->bshk", q, p["w_uq"])          # [B,S,H,dn+dr]
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = rope(q_rope, positions, rope_theta)
+    # absorb w_uk: q_abs = q_nope @ w_uk^T  -> latent dims
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    return jnp.concatenate([q_abs, q_rope], axis=-1)        # [B,S,H,r+dr]
+
+
+def mla_prefill(p: dict, x: jax.Array, *, positions, d_nope: int, d_rope: int,
+                rope_theta=1e4, norm_eps=1e-5, chunk=512, with_cache=False,
+                absorb: bool = False):
+    """MLA prefill.
+
+    absorb=False (default, §Perf iteration 1 on minicpm3): materialize
+    per-head K [B,S,H,d_nope+d_rope] / V [B,S,H,d_v] — score dims 96 vs the
+    absorbed form's kv_lora+d_rope=288 and value dims 64 vs 256, a ~3.4x
+    attention-FLOP reduction at prefill. The absorbed (MQA-over-latent) form
+    only pays off at decode, where it shrinks the CACHE; the prefill cache
+    returned here is the latent either way.
+    """
+    h = rmsnorm(p["norm"], x, norm_eps)
+    c_kv = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])         # [B,S,r]
+    k_rope = rope(jnp.einsum("bsd,dk->bsk", h, p["w_kr"])[:, :, None, :],
+                  positions, rope_theta)[:, :, 0]           # [B,S,dr]
+    if absorb:
+        q_abs = _mla_absorbed_q(p, h, positions, rope_theta, d_nope, d_rope)
+        k = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        v = c_kv[:, :, None, :]                             # [B,S,1,r]
+        o_lat = attention(q_abs, k, v, causal=True, chunk=chunk)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])  # [B,S,H,d_v]
+    else:
+        q = jnp.einsum("bsd,dr->bsr", h, p["w_dq"])
+        q = jnp.einsum("bsr,rhk->bshk", q, p["w_uq"])       # [B,S,H,dn+dr]
+        q_rope = rope(q[..., d_nope:], positions, rope_theta)
+        q = jnp.concatenate([q[..., :d_nope], q_rope], axis=-1)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        H = k_nope.shape[2]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_rope.shape[:2] + (H, d_rope))], axis=-1)
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])    # [B,S,H,d_v]
+        o = attention(q, k, v, causal=True, chunk=chunk)
+    y = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if with_cache:
+        lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        return y, (lat,)
+    return y, None
+
+
+def mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, *,
+               d_nope: int, d_rope: int, rope_theta=1e4, norm_eps=1e-5):
+    """cache {"k": [B,NS,Sc,1,r+dr]} — latent-only cache (the MLA win)."""
+    r = p["w_dkv"].shape[1]
+    h = rmsnorm(p["norm"], x, norm_eps)
+    c_kv = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])[:, 0]
+    k_rope = rope(jnp.einsum("bsd,dk->bsk", h, p["w_kr"]),
+                  pos[None], rope_theta)[:, 0]
+    k1 = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None, :]    # [B,1,r+dr]
+    q_abs = _mla_absorbed_q(p, h, pos[None], rope_theta, d_nope, d_rope)
+    ck = cache["k"]
+    zero = jnp.zeros((), pos.dtype)
+    Sc = ck.shape[2]
+    ck = jax.lax.dynamic_update_slice(
+        ck, k1[:, None, None].astype(ck.dtype),
+        (zero, pos // Sc, pos % Sc, zero, zero))
+    vcache = ck[..., :r]
+    o_lat = sharded_flash_decode(q_abs, ck, vcache, pos + 1)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])
+    y = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, {"k": ck}
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_specs(d: int, f: int, kind: str, dtype) -> dict:
+    if kind == "swiglu":
+        return {
+            "norm": rmsnorm_spec(d),
+            "w_gate": ParamSpec((d, f), ("embed", "mlp"), dtype),
+            "w_up": ParamSpec((d, f), ("embed", "mlp"), dtype),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"), dtype, init="scaled"),
+        }
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_in": ParamSpec((d, f), ("embed", "mlp"), dtype),
+        "w_out": ParamSpec((f, d), ("mlp", "embed"), dtype, init="scaled"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, kind: str, norm_eps=1e-5) -> jax.Array:
+    h = rmsnorm(p["norm"], x, norm_eps)
+    if kind == "swiglu":
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+        return x + jnp.einsum("bsf,fd->bsd", g * u, p["w_down"])
+    hh = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["w_in"]))
+    return x + jnp.einsum("bsf,fd->bsd", hh, p["w_out"])

@@ -1,0 +1,168 @@
+"""Mamba2 / SSD block (state-space duality, Dao & Gu 2024) — mamba2-780m and
+the mamba layers of jamba.
+
+Chunked SSD: the sequence is split into chunks; within a chunk the quadratic
+(attention-like) form runs on the MXU, across chunks a tiny recurrent state
+[B,H,P,N] is carried by lax.scan — O(L) time, O(L * chunk) memory, exactly
+the TPU-friendly formulation of the paper's algorithm. Decode is the O(1)
+recurrence on the same state, which is the whole reason the long_500k cell
+runs for SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.archs.layers import rmsnorm, rmsnorm_spec
+from repro.archs.spec import ParamSpec
+
+CONV_K = 4  # depthwise causal conv width
+
+
+def mamba2_specs(d: int, *, d_state: int, head_dim: int = 64, expand: int = 2,
+                 dtype=jnp.bfloat16) -> dict:
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state          # x, B, C go through the conv
+    return {
+        "norm": rmsnorm_spec(d),
+        # in_proj emits [z, x, B, C, dt]
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * d_state + n_heads),
+                          ("embed", "mlp"), dtype),
+        "conv_w": ParamSpec((CONV_K, conv_dim), (None, "mlp"), dtype),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), dtype, init="zeros"),
+        "A_log": ParamSpec((n_heads,), ("heads",), jnp.float32, init="zeros"),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), jnp.float32, init="zeros"),
+        "D": ParamSpec((n_heads,), ("heads",), jnp.float32, init="ones"),
+        "out_norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "w_out": ParamSpec((d_inner, d), ("mlp", "embed"), dtype, init="scaled"),
+    }
+
+
+def _split_in(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    B = proj[..., 2 * d_inner:2 * d_inner + d_state]
+    C = proj[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B,S,C] with kernel [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def mamba2_forward(p: dict, u: jax.Array, *, d_state: int, head_dim: int = 64,
+                   chunk: int = 256, norm_eps: float = 1e-5,
+                   with_state: bool = False):
+    """u [B,S,D] -> [B,S,D]. Chunked SSD scan."""
+    Bsz, S, D = u.shape
+    d_inner = p["w_out"].shape[0]
+    n_heads = d_inner // head_dim
+
+    h = rmsnorm(p["norm"], u, norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    z, x, Bm, Cm, dt = _split_in(proj, d_inner, d_state, n_heads)
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)     # pre-conv (cached)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + d_state],
+                 xbc[..., d_inner + d_state:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                          # [H] < 0
+    xh = x.reshape(Bsz, S, n_heads, head_dim).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)                                       # [B,S,N]
+    Cf = Cm.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    while S % chunk != 0:
+        chunk //= 2
+    nc = S // chunk
+    a = (dt * A[None, None, :]).reshape(Bsz, nc, chunk, n_heads)      # <= 0
+    xc = xh.reshape(Bsz, nc, chunk, n_heads, head_dim)
+    bc = Bf.reshape(Bsz, nc, chunk, d_state)
+    cc = Cf.reshape(Bsz, nc, chunk, d_state)
+    dtc = dt.reshape(Bsz, nc, chunk, n_heads)
+
+    cum_a = jnp.cumsum(a, axis=2)                                     # [B,nc,c,H]
+
+    def body(state, xs):
+        a_c, cum_c, x_c, b_c, c_c, dt_c = xs
+        # state: [B,H,P,N]
+        # inter-chunk contribution: y_inter = C_t * exp(cum_a_t) @ state
+        decay_in = jnp.exp(cum_c)                                     # [B,c,H]
+        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", c_c, state, decay_in)
+        # intra-chunk (quadratic) term with decay matrix L
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]             # [B,c,c,H]
+        causal = jnp.tril(jnp.ones((seg.shape[1], seg.shape[1]), bool))
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bcn,bsn->bcs", c_c, b_c)                 # [B,c,c]
+        y_intra = jnp.einsum("bcs,bcsh,bsh,bshp->bchp",
+                             scores, L, dt_c, x_c)
+        # state update: S' = exp(sum a) S + sum_t exp(cum_end - cum_t) dt_t B_t x_t^T
+        decay_out = jnp.exp(cum_c[:, -1:, :] - cum_c)                 # [B,c,H]
+        new_state = (jnp.exp(cum_c[:, -1, :])[:, :, None, None] * state
+                     + jnp.einsum("bch,bch,bchp,bcn->bhpn",
+                                  decay_out, dt_c, x_c, b_c))
+        return new_state, y_inter + y_intra
+
+    state0 = jnp.zeros((Bsz, n_heads, head_dim, d_state), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (a, cum_a, xc, bc, cc, dtc))
+    # checkpoint the chunk body: autodiff-of-scan would otherwise store the
+    # O(chunk^2) intra-chunk decay/score tensors for every chunk
+    final_state, ys = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, n_heads, head_dim)
+    y = y + p["D"][None, None, :, None] * xh                          # skip
+    y = y.reshape(Bsz, S, d_inner).astype(u.dtype)
+
+    # gated output norm (mamba2: RMSNorm(y * silu(z)))
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z), norm_eps)
+    out = u + jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if with_state:
+        # decode needs the last K-1 PRE-conv inputs
+        conv_state = xbc_raw[:, -(CONV_K - 1):, :].astype(u.dtype)
+        if S < CONV_K - 1:
+            pad = jnp.zeros((Bsz, CONV_K - 1 - S, conv_state.shape[-1]), u.dtype)
+            conv_state = jnp.concatenate([pad, conv_state], axis=1)
+        return out, {"ssm": final_state, "conv": conv_state}
+    return out, None
+
+
+def mamba2_decode(p: dict, u: jax.Array, cache: dict, *, d_state: int,
+                  head_dim: int = 64, norm_eps: float = 1e-5):
+    """One-token recurrent step. u [B,1,D]; cache {"ssm":[B,H,P,N],
+    "conv":[B,K-1,conv_dim]}. O(1) in context length."""
+    Bsz, _, D = u.shape
+    d_inner = p["w_out"].shape[0]
+    n_heads = d_inner // head_dim
+
+    h = rmsnorm(p["norm"], u, norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    z, x, Bm, Cm, dt = _split_in(proj, d_inner, d_state, n_heads)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)                   # [B,1,conv]
+    hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"]
+    conv_out = sum(hist[:, i, :] * w[i][None, :] for i in range(CONV_K))
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"][None, :])           # [B,conv]
+    x1 = xbc1[:, :d_inner]
+    B1 = xbc1[:, d_inner:d_inner + d_state].astype(jnp.float32)
+    C1 = xbc1[:, d_inner + d_state:].astype(jnp.float32)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt1 * A[None, :])                                # [B,H]
+    xh1 = x1.reshape(Bsz, n_heads, head_dim).astype(jnp.float32)
+    new_state = (da[:, :, None, None] * cache["ssm"]
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt1, xh1, B1))
+    y = jnp.einsum("bn,bhpn->bhp", C1, new_state)
+    y = y + p["D"][None, :, None] * xh1
+    y = y.reshape(Bsz, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z), norm_eps)
+    out = u + jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_conv = hist[:, 1:, :]
+    return out, {"ssm": new_state, "conv": new_conv}

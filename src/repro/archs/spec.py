@@ -1,0 +1,99 @@
+"""Parameter specs: shapes + logical sharding axes, materializable either as
+real arrays (smoke tests, the training driver) or as ShapeDtypeStructs with
+NamedShardings (the multi-pod dry-run). Models define their parameters once
+as a ParamSpec pytree; everything else (init, sharding, optimizer-state
+sharding, checkpoint layout) derives from it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                 # logical axis name per dim (None = replicated)
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"           # "normal" | "zeros" | "ones" | "scaled"
+    scale: float = 0.02
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key: jax.Array, specs, dtype_override=None):
+    """Materialize a ParamSpec pytree into real arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = dtype_override or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            scale = s.scale
+            if s.init == "scaled":           # 1/sqrt(fan_in) output-proj style
+                scale = 1.0 / np.sqrt(max(int(np.prod(s.shape[:-1])), 1))
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype_override=None):
+    """ParamSpec pytree -> ShapeDtypeStruct pytree (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype_override or s.dtype),
+        specs, is_leaf=is_spec)
+
+
+# Logical-axis -> mesh-axis rules (MaxText-style). "fsdp" is the combined
+# (pod, data) axis group; "model" is tensor/expert parallelism.
+def logical_to_mesh_axes(logical: tuple, mesh: jax.sharding.Mesh,
+                         rules: dict) -> jax.sharding.PartitionSpec:
+    from jax.sharding import PartitionSpec as P
+    axes = []
+    for name in logical:
+        mapped = rules.get(name)
+        if mapped is None:
+            axes.append(None)
+            continue
+        axes.append(mapped)
+    return P(*axes)
+
+
+def shardings_for(specs, mesh: jax.sharding.Mesh, rules: dict):
+    from jax.sharding import NamedSharding
+
+    def one(s: ParamSpec):
+        # drop mappings whose mesh axis size does not divide the dim, and
+        # dedupe mesh axes within one spec (first dim wins — e.g. MoE
+        # [experts, embed, mlp]: experts takes `model`, mlp replicates)
+        axes = []
+        used: set = set()
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for dim, name in zip(s.shape, s.logical):
+            mapped = rules.get(name)
+            if mapped is None:
+                axes.append(None)
+                continue
+            flat = mapped if isinstance(mapped, tuple) else (mapped,)
+            if any(a in used for a in flat):
+                axes.append(None)
+                continue
+            size = int(np.prod([mesh_shape[a] for a in flat]))
+            if dim % size == 0:
+                axes.append(mapped)
+                used.update(flat)
+            else:
+                axes.append(None)
+        from jax.sharding import PartitionSpec as P
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, specs, is_leaf=is_spec)

@@ -1,0 +1,349 @@
+"""Decoder-only composable model covering the dense / moe / ssm / hybrid /
+vlm assigned architectures.
+
+Layer-pattern machinery: each arch reduces to a repeating GROUP of
+sub-blocks (jamba: 8 layers = 7 mamba + 1 attn, MoE on every 2nd FFN;
+dense: group of 1). Parameters are stacked over groups and the forward is a
+lax.scan over the stacked pytree — HLO size stays O(group), which is what
+keeps 512-partition compiles at seconds per cell (spike measurement).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import layers as L
+from repro.archs import mamba2, moe
+from repro.archs.spec import ParamSpec, init_params, abstract_params, is_spec
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import constrain_act, constrain_logits
+
+
+class BlockDesc(NamedTuple):
+    kind: str   # "attn" | "mamba"
+    ffn: str    # "dense" | "moe" | "none"
+
+
+def layer_pattern(cfg: ArchConfig) -> tuple[list[BlockDesc], int]:
+    period = 1
+    if cfg.hybrid_period:
+        period = cfg.hybrid_period
+    if cfg.n_experts:
+        period = int(period * cfg.moe_every // math.gcd(period, cfg.moe_every))
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    descs = []
+    for j in range(period):
+        if cfg.attn_kind == "none":
+            kind = "mamba"
+        elif cfg.hybrid_period:
+            kind = "attn" if j % cfg.hybrid_period == cfg.attn_position else "mamba"
+        else:
+            kind = "attn"
+        if cfg.d_ff == 0 and not cfg.n_experts:
+            ffn = "none"
+        elif cfg.n_experts and (j % cfg.moe_every == cfg.moe_every - 1):
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        descs.append(BlockDesc(kind, ffn))
+    return descs, cfg.n_layers // period
+
+
+# ------------------------------------------------------------------- params
+def _block_specs(cfg: ArchConfig, desc: BlockDesc) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    out = {}
+    if desc.kind == "attn":
+        if cfg.attn_kind == "mla":
+            out["attn"] = L.mla_specs(d, cfg.n_heads, q_lora=cfg.q_lora,
+                                      kv_lora=cfg.kv_lora, d_nope=cfg.d_nope,
+                                      d_rope=cfg.d_rope, d_v=cfg.d_v, dtype=dt)
+        else:
+            out["attn"] = L.gqa_specs(d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.head_dim, dt)
+    else:
+        out["mamba"] = mamba2.mamba2_specs(d, d_state=cfg.ssm_state,
+                                           head_dim=cfg.ssm_head_dim,
+                                           expand=cfg.ssm_expand, dtype=dt)
+    if desc.ffn == "dense":
+        out["mlp"] = L.mlp_specs(d, cfg.d_ff, cfg.mlp_kind, dt)
+    elif desc.ffn == "moe":
+        out["moe"] = moe.moe_specs(d, cfg.d_ff, cfg.n_experts, dt)
+        if cfg.dense_residual_ff:
+            out["mlp"] = L.mlp_specs(d, cfg.dense_residual_ff, cfg.mlp_kind, dt)
+    return out
+
+
+def _stack_specs(specs, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    descs, n_groups = layer_pattern(cfg)
+    d, dt = cfg.d_model, cfg.dtype
+    group = {f"b{j}": _block_specs(cfg, desc) for j, desc in enumerate(descs)}
+    out = {
+        "emb": ParamSpec((cfg.vocab, d), ("vocab", "embed"), dt),
+        "final_norm": L.rmsnorm_spec(d),
+        "layers": _stack_specs(group, n_groups),
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"), dt)
+    if cfg.frontend == "vision_stub":
+        out["projector"] = ParamSpec((d, d), ("embed", "mlp"), dt)
+    return out
+
+
+# ------------------------------------------------------------------ forward
+def _block_forward(cfg: ArchConfig, desc: BlockDesc, p: dict, x, positions,
+                   with_cache: bool):
+    cache = {}
+    if desc.kind == "attn":
+        if cfg.attn_kind == "mla":
+            x, c = L.mla_prefill(p["attn"], x, positions=positions,
+                                 d_nope=cfg.d_nope, d_rope=cfg.d_rope,
+                                 rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                                 chunk=cfg.attn_chunk, with_cache=with_cache)
+            if with_cache:
+                cache["k"] = c[0]
+        else:
+            x, c = L.gqa_prefill(p["attn"], x, positions=positions,
+                                 window=cfg.window, rope_theta=cfg.rope_theta,
+                                 norm_eps=cfg.norm_eps, chunk=cfg.attn_chunk,
+                                 with_cache=with_cache)
+            if with_cache:
+                cache["k"], cache["v"] = c
+    else:
+        x, st = mamba2.mamba2_forward(p["mamba"], x, d_state=cfg.ssm_state,
+                                      head_dim=cfg.ssm_head_dim,
+                                      norm_eps=cfg.norm_eps,
+                                      with_state=with_cache)
+        if with_cache:
+            cache.update(st)
+    if desc.ffn == "moe":
+        y = moe.moe_apply(p["moe"], x, top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor,
+                          group_size=cfg.moe_group, norm_eps=cfg.norm_eps)
+        if cfg.dense_residual_ff:
+            y = y + (L.mlp_apply(p["mlp"], x, cfg.mlp_kind, cfg.norm_eps) - x)
+        x = y
+    elif desc.ffn == "dense":
+        x = L.mlp_apply(p["mlp"], x, cfg.mlp_kind, cfg.norm_eps)
+    return x, cache
+
+
+def _stack_forward(cfg: ArchConfig, params_layers, x, positions,
+                   with_cache: bool):
+    descs, n_groups = layer_pattern(cfg)
+
+    def group_fn(h, gparams):
+        caches = {}
+        h = constrain_act(h)
+        for j, desc in enumerate(descs):
+            h, c = _block_forward(cfg, desc, gparams[f"b{j}"], h, positions,
+                                  with_cache)
+            h = constrain_act(h)
+            if with_cache:
+                caches[f"b{j}"] = c
+        return h, caches
+
+    fn = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    if cfg.scan_layers:
+        return jax.lax.scan(fn, x, params_layers)
+    # unrolled path (useful for body-cost analysis and small smokes)
+    caches = []
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda a: a[g], params_layers)
+        x, c = fn(x, gp)
+        caches.append(c)
+    stacked = (jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+               if with_cache else None)
+    return x, stacked
+
+
+def _embed(cfg: ArchConfig, params, batch: dict):
+    tok = batch["tokens"]
+    x = params["emb"][tok].astype(cfg.dtype)
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"].astype(cfg.dtype)
+        patches = jnp.einsum("bpd,de->bpe", patches, params["projector"])
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _logits(cfg: ArchConfig, params, x):
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    return constrain_logits(jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)))
+
+
+# -------------------------------------------------------------------- model
+@dataclass
+class Model:
+    cfg: ArchConfig
+
+    # .... parameters ....
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def init(self, key, dtype_override=None):
+        return init_params(key, self.param_specs(), dtype_override)
+
+    def abstract_params(self, dtype_override=None):
+        return abstract_params(self.param_specs(), dtype_override)
+
+    # .... training ....
+    def train_loss(self, params, batch: dict):
+        cfg = self.cfg
+        x = constrain_act(_embed(cfg, params, batch))
+        S_total = x.shape[1]
+        positions = jnp.arange(S_total)
+        x, _ = _stack_forward(cfg, params["layers"], x, positions, False)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _logits(cfg, params, x)
+        tok = batch["tokens"]
+        n_prefix = S_total - tok.shape[1]          # vlm: patch positions
+        pred = logits[:, n_prefix:-1].astype(jnp.float32)
+        labels = tok[:, 1:]
+        lse = jax.nn.logsumexp(pred, axis=-1)
+        ll = jnp.take_along_axis(pred, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(lse - ll)
+        return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+    # .... serving ....
+    def prefill(self, params, batch: dict):
+        """Returns (last_logits [B,V], cache). Cache layout = decode layout."""
+        cfg = self.cfg
+        x = constrain_act(_embed(cfg, params, batch))
+        S_total = x.shape[1]
+        positions = jnp.arange(S_total)
+        x, raw = _stack_forward(cfg, params["layers"], x, positions, True)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _logits(cfg, params, x[:, -1:])[:, 0]
+        cache = self._cache_from_prefill(raw, S_total)
+        return logits, cache
+
+    def _cache_from_prefill(self, raw, S: int):
+        """Reshape scan-stacked prefill K/V into the decode cache layout."""
+        cfg = self.cfg
+        descs, _ = layer_pattern(cfg)
+
+        def reshape_kv(x):
+            G, B, S_, K, D = x.shape       # [G,B,S,K,D] from scan ys
+            if cfg.window:
+                W = cfg.window
+                if S_ >= W:
+                    # ring buffer: slot(p) = p % W for the last W positions
+                    last = x[:, :, S_ - W:]
+                    return jnp.roll(last, shift=(S_ - W) % W, axis=2)[:, :, None]
+                pad = jnp.zeros((G, B, W - S_, K, D), x.dtype)
+                return jnp.concatenate([x, pad], axis=2)[:, :, None]
+            ns = cfg.kv_shards if S_ % max(cfg.kv_shards, 1) == 0 else 1
+            return x.reshape(G, B, ns, S_ // ns, K, D)
+
+        out = {}
+        for j, desc in enumerate(descs):
+            c = raw[f"b{j}"]
+            if desc.kind == "attn":
+                out[f"b{j}"] = {k: reshape_kv(v) for k, v in c.items()}
+            else:
+                out[f"b{j}"] = c          # mamba ssm/conv states are decode-ready
+        return out
+
+    def decode_step(self, params, cache, token, pos):
+        """token [B,1] int32, pos scalar int32. Returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        descs, _ = layer_pattern(cfg)
+        x = params["emb"][token].astype(cfg.dtype)
+
+        def group_fn(h, xs):
+            gparams, gcache = xs
+            new_cache = {}
+            for j, desc in enumerate(descs):
+                p, c = gparams[f"b{j}"], gcache[f"b{j}"]
+                if desc.kind == "attn":
+                    if cfg.attn_kind == "mla":
+                        h, nc = L.mla_decode(p["attn"], h, c, pos,
+                                             d_nope=cfg.d_nope, d_rope=cfg.d_rope,
+                                             rope_theta=cfg.rope_theta,
+                                             norm_eps=cfg.norm_eps)
+                    else:
+                        h, nc = L.gqa_decode(p["attn"], h, c, pos,
+                                             window=cfg.window,
+                                             rope_theta=cfg.rope_theta,
+                                             norm_eps=cfg.norm_eps)
+                else:
+                    h, nc = mamba2.mamba2_decode(p["mamba"], h, c,
+                                                 d_state=cfg.ssm_state,
+                                                 head_dim=cfg.ssm_head_dim,
+                                                 norm_eps=cfg.norm_eps)
+                if desc.ffn == "moe":
+                    y = moe.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                      capacity_factor=cfg.capacity_factor,
+                                      group_size=cfg.moe_group,
+                                      norm_eps=cfg.norm_eps)
+                    if cfg.dense_residual_ff:
+                        y = y + (L.mlp_apply(p["mlp"], h, cfg.mlp_kind,
+                                             cfg.norm_eps) - h)
+                    h = y
+                elif desc.ffn == "dense":
+                    h = L.mlp_apply(p["mlp"], h, cfg.mlp_kind, cfg.norm_eps)
+                new_cache[f"b{j}"] = nc
+            return h, new_cache
+
+        x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _logits(cfg, params, x)[:, 0]
+        return logits, new_cache
+
+    # .... cache construction ....
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        descs, n_groups = layer_pattern(cfg)
+        dt = cfg.dtype
+
+        def one(desc: BlockDesc):
+            c = {}
+            if desc.kind == "attn":
+                ns = cfg.kv_shards if max_len % max(cfg.kv_shards, 1) == 0 else 1
+                if cfg.window:
+                    shape_k = (n_groups, batch_size, 1, cfg.window,
+                               cfg.n_kv_heads, cfg.head_dim)
+                    c["k"] = (shape_k, dt)
+                    c["v"] = (shape_k, dt)
+                elif cfg.attn_kind == "mla":
+                    c["k"] = ((n_groups, batch_size, ns, max_len // ns, 1,
+                               cfg.kv_lora + cfg.d_rope), dt)
+                else:
+                    shape_k = (n_groups, batch_size, ns, max_len // ns,
+                               cfg.n_kv_heads, cfg.head_dim)
+                    c["k"] = (shape_k, dt)
+                    c["v"] = (shape_k, dt)
+            else:
+                d_inner = cfg.ssm_expand * cfg.d_model
+                h = d_inner // cfg.ssm_head_dim
+                c["ssm"] = ((n_groups, batch_size, h, cfg.ssm_head_dim,
+                             cfg.ssm_state), jnp.float32)
+                c["conv"] = ((n_groups, batch_size, mamba2.CONV_K - 1,
+                              d_inner + 2 * cfg.ssm_state), dt)
+            return c
+
+        tree = {f"b{j}": one(d) for j, d in enumerate(descs)}
+        make = (lambda sd: jax.ShapeDtypeStruct(*sd)) if abstract else \
+               (lambda sd: jnp.zeros(*sd))
+        return jax.tree.map(make, tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], tuple))
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "audio":
+        from repro.archs.encdec import EncDecModel
+        return EncDecModel(cfg)
+    return Model(cfg)

@@ -1,0 +1,37 @@
+"""Config registry: --arch <id> resolves here. Each module has CONFIG (the
+exact assigned configuration) and SMOKE (a reduced same-family config for
+CPU smoke tests)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "whisper_base",
+    "jamba_1_5_large_398b",
+    "llava_next_34b",
+    "h2o_danube_3_4b",
+    "tinyllama_1_1b",
+    "minicpm3_4b",
+    "granite_34b",
+    "mamba2_780m",
+    "arctic_480b",
+    "dbrx_132b",
+]
+
+_ALIASES = {m.replace("_", "-"): m for m in ARCH_IDS}
+
+
+def _module(arch: str):
+    key = arch.replace("-", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = _module(arch)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

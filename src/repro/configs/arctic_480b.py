@@ -1,0 +1,17 @@
+# arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 (per expert)
+# vocab=32000, MoE 128e top-2 PLUS a parallel dense residual FFN.
+# [hf:Snowflake/snowflake-arctic-base; hf]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab=32000, n_experts=128, top_k=2, moe_every=1,
+    dense_residual_ff=9728, kv_shards=16, grad_accum=16,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=32, vocab=256, n_experts=8, top_k=2,
+                      dense_residual_ff=64, param_dtype="float32",
+                      kv_shards=1, attn_chunk=32, moe_group=64,
+                      capacity_factor=8.0)

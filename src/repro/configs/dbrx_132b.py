@@ -1,0 +1,14 @@
+# dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+# MoE 16e top-4 (fine-grained). [hf:databricks/dbrx-base; unverified]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=10752,
+    vocab=100352, n_experts=16, top_k=4, moe_every=1, kv_shards=16, grad_accum=8,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab=256, n_experts=4, top_k=2,
+                      param_dtype="float32", kv_shards=1, attn_chunk=32,
+                      moe_group=64, capacity_factor=8.0)

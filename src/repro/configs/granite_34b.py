@@ -1,0 +1,16 @@
+# granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576
+# vocab=49152; llama-arch code model, gpt-bigcode-style plain-GELU MLP
+# (SwiGLU at ff=24576 would overshoot 34B params). [arXiv:2405.04324; hf]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, d_head=128,
+    d_ff=24576, vocab=49152, mlp_kind="gelu",
+    kv_shards=16,  # MQA: kv heads cannot shard -> shard the cache seq dim
+    grad_accum=16,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+                      d_head=16, d_ff=128, vocab=256, param_dtype="float32",
+                      kv_shards=1, attn_chunk=32)

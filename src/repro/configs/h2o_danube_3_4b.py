@@ -1,0 +1,16 @@
+# h2o-danube-3-4b [dense]: 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+# vocab=32000; llama+mistral mix with sliding-window attention.
+# [arXiv:2401.16818; unverified]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_head=120,
+    d_ff=10240, vocab=32000, window=4096,
+    kv_shards=1,  # SWA ring cache is window-bounded: replicate, shard heads
+    grad_accum=4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_head=16, d_ff=128, vocab=256, window=32,
+                      param_dtype="float32", attn_chunk=16)

@@ -1,0 +1,17 @@
+# jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+# vocab=65536, MoE 16e top-2; Mamba+attn 1:7 interleave (1 attention layer
+# per 8-layer block), MoE every 2nd layer. [arXiv:2403.19887; hf]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=24576,
+    vocab=65536, n_experts=16, top_k=2, moe_every=2,
+    hybrid_period=8, attn_position=3, ssm_state=128, ssm_head_dim=64,
+    kv_shards=16, grad_accum=16,
+)
+
+SMOKE = CONFIG.scaled(n_layers=8, d_model=128, n_heads=8, n_kv_heads=2,
+                      d_ff=256, vocab=512, n_experts=4, top_k=2,
+                      ssm_state=32, param_dtype="float32", kv_shards=1,
+                      attn_chunk=32, moe_group=64, capacity_factor=8.0)

@@ -1,0 +1,15 @@
+# llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+# vocab=64000; anyres tiling -> patch-embedding STUB (input_specs provides
+# precomputed patch embeddings). [hf:llava-hf/llava-v1.6; unverified]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=20480,
+    vocab=64000, frontend="vision_stub", n_patches=576, rope_theta=5e6,
+    kv_shards=16, grad_accum=16,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=256, n_patches=8,
+                      param_dtype="float32", kv_shards=1, attn_chunk=32)

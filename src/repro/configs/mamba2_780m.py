@@ -1,0 +1,13 @@
+# mamba2-780m [ssm]: 48L d_model=1536, attention-free, d_ff=0, vocab=50280,
+# ssm_state=128 — SSD (state-space duality). [arXiv:2405.21060; unverified]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab=50280, attn_kind="none", ssm_state=128, ssm_head_dim=64,
+    ssm_expand=2, tie_embeddings=True, grad_accum=8,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, vocab=256, ssm_state=16,
+                      ssm_head_dim=16, param_dtype="float32")

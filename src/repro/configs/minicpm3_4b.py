@@ -1,0 +1,17 @@
+# minicpm3-4b [dense]: 62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448;
+# MLA (multi-head latent attention): q_lora=768, kv_lora=256, rope dim 32,
+# nope dim 64, v dim 64 — the cache holds only the latent + rope key.
+# [hf:openbmb/MiniCPM3-4B; hf]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_ff=6400,
+    vocab=73448, attn_kind="mla", q_lora=768, kv_lora=256,
+    d_nope=64, d_rope=32, d_v=64, d_head=96, kv_shards=16, grad_accum=8,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=128, vocab=256, q_lora=32, kv_lora=16,
+                      d_nope=16, d_rope=8, d_v=16, d_head=24,
+                      param_dtype="float32", kv_shards=1, attn_chunk=32)

@@ -1,0 +1,16 @@
+# whisper-base [audio]: 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865
+# enc-dec; conv frontend is a STUB (input_specs provides precomputed frame
+# embeddings per the assignment). [arXiv:2212.04356; unverified]
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, enc_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865, mlp_kind="gelu", attn_kind="gqa",
+    frontend="audio_stub", cross_len=1500, rope_theta=1e4,
+    kv_shards=16, grad_accum=4,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab=256, cross_len=32,
+                      param_dtype="float32", kv_shards=1, attn_chunk=32)

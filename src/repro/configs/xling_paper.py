@@ -1,0 +1,19 @@
+# The paper's OWN workload: Xling-filtered similarity join over an
+# embedding corpus. Used by launch/serve.py and the paper-workload dry-run
+# cells (filter_step / join_step on the production mesh).
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class JoinWorkload:
+    name: str = "xling-join"
+    dim: int = 300                    # embedding dimensionality (FastText-like)
+    n_index: int = 1_000_000          # |R| at production scale
+    query_batch: int = 65536          # queries per join step (global)
+    m: int = 100                      # eps-grid size for target building
+    metric: str = "cosine"
+    estimator_widths: tuple = (512, 512, 256, 128)
+
+
+CONFIG = JoinWorkload()
+SMOKE = JoinWorkload(n_index=4096, query_batch=512, m=16)

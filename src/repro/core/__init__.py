@@ -1,0 +1,15 @@
+"""The paper's primary contribution:
+
+  xling.py — the learned metric-space Bloom filter (estimator + XDT)
+  atcs.py  — adaptive training-condition selection (Algorithm 1)
+  xdt.py   — FPR/mean XDT selection + Eq. 2 interpolated targets
+  xjoin.py — XJoin and the generic filter-plugin join wrapper
+  joins/   — baseline join methods (naive/grid/LSH/LSBF/kmeans-tree/IVFPQ)
+"""
+from repro.core.xling import XlingConfig, XlingFilter
+from repro.core.xjoin import FilteredJoin, JoinResult, build_xjoin, enhance_with_xling
+from repro.core import atcs, xdt
+from repro.core.joins import JOINS, make_join
+
+__all__ = ["XlingConfig", "XlingFilter", "FilteredJoin", "JoinResult",
+           "build_xjoin", "enhance_with_xling", "atcs", "xdt", "JOINS", "make_join"]

@@ -1,0 +1,32 @@
+"""Join-method registry. Every method implements:
+
+    __init__(R, metric, **params)   # build the index on R
+    query_counts(Q, eps) -> int32 [q]   # found-neighbor counts per query
+
+plus `.exact` (bool) and `.name`. Counting (not pair materialization) is the
+framework-wide result representation: with an exact searcher, pair-level
+recall equals count-level recall (found ⊆ true and per-query exactness), and
+counts keep every shape static for XLA.
+"""
+from repro.core.joins.grid import GridJoin
+from repro.core.joins.ivfpq import IVFPQJoin
+from repro.core.joins.kmeans_tree import KmeansTreeJoin
+from repro.core.joins.lsbf import LSBF
+from repro.core.joins.lsh import LSHJoin
+from repro.core.joins.naive import NaiveJoin
+
+JOINS = {
+    "naive": NaiveJoin,
+    "grid": GridJoin,
+    "lsh": LSHJoin,
+    "kmeanstree": KmeansTreeJoin,
+    "ivfpq": IVFPQJoin,
+}
+
+
+def make_join(name: str, R, metric: str, **params):
+    return JOINS[name](R, metric, **params)
+
+
+__all__ = ["JOINS", "make_join", "NaiveJoin", "GridJoin", "LSHJoin",
+           "KmeansTreeJoin", "IVFPQJoin", "LSBF"]

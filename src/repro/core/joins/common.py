@@ -1,0 +1,98 @@
+"""Shared machinery for index-based joins: k-means, candidate verification.
+
+The joins follow a host/device split that mirrors a production FAISS-on-TPU
+style serving stack: index *probing* (data-dependent, pointer-heavy) runs on
+host; candidate *verification* (dense distance math) runs on device in
+static-shape blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kmeans(X: np.ndarray, k: int, *, iters: int = 10, seed: int = 0,
+           sample: int | None = 8192) -> np.ndarray:
+    """Lloyd's k-means (jit'd distance steps). Returns centroids [k, d]."""
+    rng = np.random.default_rng(seed)
+    data = X[rng.choice(len(X), min(sample or len(X), len(X)), replace=False)]
+    cent = data[rng.choice(len(data), k, replace=False)].copy()
+
+    @jax.jit
+    def assign(c, x):
+        d = (jnp.sum(x * x, 1)[:, None] - 2 * x @ c.T + jnp.sum(c * c, 1)[None, :])
+        return jnp.argmin(d, axis=1)
+
+    for _ in range(iters):
+        a = np.asarray(assign(jnp.asarray(cent), jnp.asarray(data)))
+        for ci in range(k):
+            mask = a == ci
+            if mask.any():
+                cent[ci] = data[mask].mean(axis=0)
+            else:  # empty cluster: reseed on a random point
+                cent[ci] = data[rng.integers(len(data))]
+    return cent.astype(np.float32)
+
+
+def assign_nearest(X: np.ndarray, centroids: np.ndarray, block: int = 4096) -> np.ndarray:
+    @jax.jit
+    def go(c, x):
+        d = jnp.sum(x * x, 1)[:, None] - 2 * x @ c.T + jnp.sum(c * c, 1)[None, :]
+        return jnp.argmin(d, axis=1)
+    out = [np.asarray(go(jnp.asarray(centroids), jnp.asarray(X[i:i + block])))
+           for i in range(0, len(X), block)]
+    return np.concatenate(out)
+
+
+def build_capacity_table(assignments: np.ndarray, n_buckets: int,
+                         cap: int | None = None) -> np.ndarray:
+    """Dense [n_buckets, cap] member table (-1 padded) from bucket ids."""
+    order = np.argsort(assignments, kind="stable")
+    sorted_b = assignments[order]
+    counts = np.bincount(assignments, minlength=n_buckets)
+    if cap is None:
+        cap = max(int(counts.max()), 1)
+    table = np.full((n_buckets, cap), -1, np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for b in np.nonzero(counts)[0]:
+        c = min(counts[b], cap)
+        table[b, :c] = order[starts[b]:starts[b] + c]
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _verify_block(R, q, cand, eps, *, metric):
+    """counts of unique candidates within eps. q [bq,d], cand [bq,C] (-1 pad)."""
+    cand_sorted = jnp.sort(cand, axis=1)
+    dup = jnp.concatenate([jnp.zeros((cand.shape[0], 1), bool),
+                           cand_sorted[:, 1:] == cand_sorted[:, :-1]], axis=1)
+    valid = (cand_sorted >= 0) & ~dup
+    x = R[jnp.maximum(cand_sorted, 0)]                   # [bq, C, d]
+    dots = jnp.einsum("qcd,qd->qc", x.astype(jnp.float32), q.astype(jnp.float32))
+    if metric == "cosine":
+        d = 1.0 - dots
+    else:
+        d = jnp.sqrt(jnp.maximum(2.0 - 2.0 * dots, 0.0))
+    return jnp.sum(valid & (d <= eps), axis=1, dtype=jnp.int32)
+
+
+def verify_candidates(R: np.ndarray, Q: np.ndarray, cand_ids: np.ndarray,
+                      eps: float, metric: str, *, block: int = 32) -> np.ndarray:
+    """Exact verification of candidate lists. cand_ids [q, C] int32 (-1 pad).
+    Returns int32 [q] counts of unique true neighbors among candidates."""
+    Rj = jnp.asarray(R)
+    out = np.empty((len(Q),), np.int32)
+    for i in range(0, len(Q), block):
+        j = min(i + block, len(Q))
+        qb = jnp.asarray(Q[i:j])
+        cb = jnp.asarray(cand_ids[i:j])
+        # pad the final partial block to keep shapes static
+        if j - i < block:
+            qb = jnp.concatenate([qb, jnp.zeros((block - (j - i),) + qb.shape[1:], qb.dtype)])
+            cb = jnp.concatenate([cb, jnp.full((block - (j - i),) + cb.shape[1:], -1, cb.dtype)])
+        cnt = _verify_block(Rj, qb, cb, jnp.float32(eps), metric=metric)
+        out[i:j] = np.asarray(cnt)[:j - i]
+    return out

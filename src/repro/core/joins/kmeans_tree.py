@@ -1,0 +1,57 @@
+"""K-means-tree approximate join (paper baseline "KmeansTree", FLANN-style).
+
+A hierarchical k-means partition (branching factor bf) down to bounded-size
+leaves; a query ranks leaves by centroid distance and brute-force-verifies
+the best rho-fraction of them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.joins.common import assign_nearest, kmeans, verify_candidates
+
+
+class KmeansTreeJoin:
+    name = "kmeanstree"
+    exact = False
+
+    def __init__(self, R: np.ndarray, metric: str, *, branching: int = 3,
+                 leaf_size: int = 128, rho: float = 0.02, seed: int = 0, **_):
+        self.R = np.asarray(R, np.float32)
+        self.metric = metric
+        self.rho = rho
+        leaves: list[np.ndarray] = []
+
+        def split(ids: np.ndarray, depth: int):
+            if len(ids) <= leaf_size or depth > 12:
+                leaves.append(ids)
+                return
+            cent = kmeans(self.R[ids], branching, iters=5,
+                          seed=seed + depth, sample=4096)
+            a = assign_nearest(self.R[ids], cent)
+            for b in range(branching):
+                sub = ids[a == b]
+                if len(sub) == 0:
+                    continue
+                if len(sub) == len(ids):   # degenerate split: stop here
+                    leaves.append(sub)
+                    return
+                split(sub, depth + 1)
+
+        split(np.arange(len(self.R), dtype=np.int32), 0)
+        cap = max(len(v) for v in leaves)
+        self.leaf_members = np.full((len(leaves), cap), -1, np.int32)
+        for i, v in enumerate(leaves):
+            self.leaf_members[i, :len(v)] = v
+        self.leaf_centroids = np.stack(
+            [self.R[v].mean(axis=0) for v in leaves]).astype(np.float32)
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        Q = np.asarray(Q, np.float32)
+        n_leaves = len(self.leaf_centroids)
+        n_inspect = max(1, int(np.ceil(self.rho * n_leaves)))
+        d = (np.sum(Q * Q, 1)[:, None] - 2 * Q @ self.leaf_centroids.T
+             + np.sum(self.leaf_centroids ** 2, 1)[None, :])
+        top = np.argpartition(d, n_inspect - 1, axis=1)[:, :n_inspect]
+        cand = self.leaf_members[top].reshape(len(Q), -1)
+        return verify_candidates(self.R, Q, cand, float(eps), self.metric)

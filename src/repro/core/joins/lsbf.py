@@ -1,0 +1,47 @@
+"""Locality-Sensitive Bloom Filter (Hua et al. 2012) — the MSBF baseline.
+
+Mirrors a Bloom filter with LSH functions: an item sets l bits (one per
+hash group of k LSH functions, each group's values hashed to a position in
+the bit array). A query is POSITIVE iff at least `theta` fraction of its l
+probe bits are set. This is the filter the paper's Naive-LSBF baseline
+gates the nested-loop join with — and the structure whose data-unawareness
+(problems 1-3 in §I) Xling is designed to fix.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class LSBF:
+    name = "lsbf"
+
+    def __init__(self, R: np.ndarray, metric: str, *, k: int = 18, l: int = 10,
+                 n_bits: int | None = None, W: float = 2.5, theta: float = 1.0,
+                 seed: int = 0, **_):
+        R = np.asarray(R, np.float32)
+        self.metric = metric
+        self.k, self.l, self.W, self.theta = k, l, W, theta
+        self.n_bits = n_bits or (len(R) * k)     # paper: |R| * k
+        rng = np.random.default_rng(seed)
+        d = R.shape[1]
+        self.proj = rng.normal(size=(l, k, d)).astype(np.float32)
+        self.bias = rng.uniform(0, W, size=(l, k)).astype(np.float32)
+        self.salt = rng.integers(1, 2 ** 31, size=(l, k)).astype(np.int64)
+        self.bits = np.zeros((self.n_bits,), bool)
+        self.bits[self._positions(R).reshape(-1)] = True
+
+    def _positions(self, X: np.ndarray) -> np.ndarray:
+        """[n, l] bit positions."""
+        h = np.einsum("nd,lkd->nlk", X.astype(np.float32), self.proj)
+        if self.metric == "cosine":
+            codes = (h > 0).astype(np.int64)
+        else:
+            codes = np.floor((h + self.bias[None]) / self.W).astype(np.int64)
+        mixed = (codes * self.salt[None]).sum(axis=2)
+        return (mixed % self.n_bits).astype(np.int64)
+
+    def query(self, Q: np.ndarray) -> np.ndarray:
+        """bool verdicts [q]: True = predicted to have a neighbor."""
+        pos = self._positions(np.asarray(Q, np.float32))      # [q, l]
+        frac = self.bits[pos].mean(axis=1)
+        return frac >= self.theta

@@ -1,0 +1,148 @@
+"""Xling: the learned metric-space Bloom filter (paper §IV).
+
+Composition (Fig. 1): a learned cardinality estimator (any registry model)
++ the XDT decision threshold, trained offline on the R side of the join:
+
+    fit:    R --(range_count kernel)--> target table over the eps grid
+              --(ATCS, Alg. 1)--> s training tuples/point --> estimator
+    query:  (q, eps, tau) --> predicted count  vs  XDT(eps, tau) --> +/-
+
+"Filtering-by-counting": tau > 0 asks "more than tau neighbors", not just
+"any neighbor"; tau = 0 degrades Xling to a classic MSBF.
+
+XDT is computed offline per (eps, tau, mode) from training-set predictions
+and Eq.-2-interpolated targets, and cached — zero online overhead (§V-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import atcs as atcs_mod
+from repro.core import xdt as xdt_mod
+from repro.data.groundtruth import cardinality_table, eps_grid_for_metric
+from repro.models import make_estimator
+
+
+@dataclass
+class XlingConfig:
+    estimator: str = "rmi"            # registry key
+    metric: str = "cosine"
+    m: int = 100                      # candidate-condition grid size
+    s: int = 6                        # ATCS sampling number (paper: 6)
+    strategy: str = "atcs"            # "atcs" | "uniform"
+    xdt_mode: str = "fpr"             # "fpr" | "mean"
+    fpr_tolerance: float = 0.05
+    target_mode: str = "interp"       # "interp" | "exact"
+    epochs: int = 30
+    lr: float = 1e-3
+    batch_size: int = 512
+    seed: int = 0
+    backend: str = "auto"             # kernel backend for counting/inference
+    estimator_kwargs: dict = field(default_factory=dict)
+
+
+class XlingFilter:
+    """Trained filter. Use `fit(R)` then `query(Q, eps, tau)`."""
+
+    def __init__(self, cfg: XlingConfig):
+        self.cfg = cfg
+        self.eps_grid = eps_grid_for_metric(cfg.metric, cfg.m)
+        self.estimator = None
+        self.train_points: Optional[np.ndarray] = None
+        self.target_table: Optional[np.ndarray] = None   # [n, m] ground truth
+        self._train_preds_cache: dict = {}
+        self._xdt_cache: dict = {}
+        self.stats: dict = {}
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, R: np.ndarray, *, cache_key: tuple | None = None,
+            target_table: np.ndarray | None = None) -> "XlingFilter":
+        cfg = self.cfg
+        self.train_points = np.asarray(R, np.float32)
+        if target_table is None:
+            target_table = cardinality_table(
+                self.train_points, self.train_points, self.eps_grid, cfg.metric,
+                backend=cfg.backend, cache_key=cache_key, exclude_self=True)
+        self.target_table = target_table
+
+        select = (atcs_mod.atcs_select if cfg.strategy == "atcs"
+                  else atcs_mod.uniform_select)
+        idx = select(self.target_table, cfg.s, seed=cfg.seed)
+        X, y = atcs_mod.build_training_tuples(self.train_points, self.eps_grid,
+                                              self.target_table, idx)
+        din = self.train_points.shape[1] + 1
+        self.estimator = make_estimator(
+            cfg.estimator, din, epochs=cfg.epochs, lr=cfg.lr,
+            batch_size=cfg.batch_size, seed=cfg.seed, **cfg.estimator_kwargs)
+        loss = self.estimator.fit(X, y)
+        self.stats = {"train_tuples": len(X), "final_loss": loss}
+        return self
+
+    # ------------------------------------------------------------ prediction
+    def predict_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        X = np.concatenate([np.asarray(Q, np.float32),
+                            np.full((len(Q), 1), eps, np.float32)], axis=1)
+        return self.estimator.predict(X, backend=self.cfg.backend)
+
+    def _train_predictions(self, eps: float) -> np.ndarray:
+        key = round(float(eps), 9)
+        if key not in self._train_preds_cache:
+            self._train_preds_cache[key] = self.predict_counts(self.train_points, eps)
+        return self._train_preds_cache[key]
+
+    def _targets_at(self, eps: float) -> np.ndarray:
+        if self.cfg.target_mode == "interp":
+            return xdt_mod.interp_targets(self.eps_grid, self.target_table, eps)
+        # "exact": the naive method — a fresh range count at this eps
+        from repro.kernels import ops
+        return np.asarray(ops.range_count(self.train_points, self.train_points,
+                                          float(eps), metric=self.cfg.metric,
+                                          backend=self.cfg.backend)) - 1  # self-match
+
+    def xdt(self, eps: float, tau: int = 0, *, mode: str | None = None,
+            fpr_tolerance: float | None = None) -> float:
+        mode = mode or self.cfg.xdt_mode
+        tol = self.cfg.fpr_tolerance if fpr_tolerance is None else fpr_tolerance
+        key = (round(float(eps), 9), int(tau), mode, round(tol, 6), self.cfg.target_mode)
+        if key not in self._xdt_cache:
+            preds = self._train_predictions(eps)
+            targets = self._targets_at(eps)
+            self._xdt_cache[key] = xdt_mod.select_xdt(preds, targets, tau,
+                                                      mode=mode, fpr_tolerance=tol)
+        return self._xdt_cache[key]
+
+    def query(self, Q: np.ndarray, eps: float, tau: int = 0, *,
+              mode: str | None = None, fpr_tolerance: float | None = None
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (positive verdicts bool [q], predicted counts float [q])."""
+        thr = self.xdt(eps, tau, mode=mode, fpr_tolerance=fpr_tolerance)
+        preds = self.predict_counts(Q, eps)
+        return preds > thr, preds
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        blob = {"eps_grid": self.eps_grid, "target_table": self.target_table,
+                "train_points": self.train_points,
+                "cfg_estimator": np.asarray(self.cfg.estimator),
+                "cfg_metric": np.asarray(self.cfg.metric)}
+        for k, v in self.estimator.state_dict().items():
+            blob[f"est_{k}"] = v
+        np.savez_compressed(path, **blob)
+
+    @classmethod
+    def load(cls, path: str, cfg: XlingConfig | None = None) -> "XlingFilter":
+        with np.load(path, allow_pickle=False) as z:
+            cfg = cfg or XlingConfig(estimator=str(z["cfg_estimator"]),
+                                     metric=str(z["cfg_metric"]))
+            obj = cls(cfg)
+            obj.eps_grid = z["eps_grid"]
+            obj.target_table = z["target_table"]
+            obj.train_points = z["train_points"]
+            est_state = {k[4:]: z[k] for k in z.files if k.startswith("est_")}
+        din = obj.train_points.shape[1] + 1
+        obj.estimator = make_estimator(cfg.estimator, din, **cfg.estimator_kwargs)
+        obj.estimator.load_state_dict(est_state)
+        return obj

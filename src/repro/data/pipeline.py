@@ -1,0 +1,62 @@
+"""Input pipelines.
+
+Two consumers:
+  * estimator training — ShardedBatcher over (point, eps, target) tuples:
+    epoch shuffling, drop-remainder static batches, device placement with an
+    optional data-axis sharding (so the same code feeds 1-device CPU runs
+    and multi-pod meshes).
+  * LM-arch training (the end-to-end driver) — token_batches: a synthetic
+    token stream with deterministic per-step RNG, sharded over the DP axis.
+    Per the assignment the modality frontends are stubs, so [audio]/[vlm]
+    archs consume precomputed frame/patch embeddings from input_specs()
+    instead of raw media.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ShardedBatcher:
+    """Epoch-shuffled, drop-remainder batches; optionally device-sharded."""
+
+    def __init__(self, arrays: tuple[np.ndarray, ...], batch_size: int,
+                 seed: int = 0, sharding: Optional[jax.sharding.Sharding] = None):
+        n = arrays[0].shape[0]
+        assert all(a.shape[0] == n for a in arrays)
+        self.arrays = arrays
+        self.n = n
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.sharding = sharding
+
+    def __len__(self) -> int:
+        return self.n // self.batch_size
+
+    def epoch(self) -> Iterator[tuple[jax.Array, ...]]:
+        perm = self.rng.permutation(self.n)
+        nb = len(self)
+        for b in range(nb):
+            idx = perm[b * self.batch_size:(b + 1) * self.batch_size]
+            batch = tuple(a[idx] for a in self.arrays)
+            if self.sharding is not None:
+                batch = tuple(jax.device_put(x, self.sharding) for x in batch)
+            yield batch
+
+
+def token_batches(vocab: int, global_batch: int, seq_len: int, *, seed: int = 0,
+                  sharding: Optional[jax.sharding.Sharding] = None
+                  ) -> Iterator[jax.Array]:
+    """Deterministic synthetic token stream for the LM training driver."""
+    step = 0
+    while True:
+        rng = np.random.default_rng((seed, step))
+        toks = rng.integers(0, vocab, size=(global_batch, seq_len), dtype=np.int32)
+        x = jnp.asarray(toks)
+        if sharding is not None:
+            x = jax.device_put(x, sharding)
+        yield x
+        step += 1

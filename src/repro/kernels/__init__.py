@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   range_count.py — fused tiled pairwise-distance + eps-histogram
+#                    (ground-truth targets + join verification)
+#   fused_mlp.py   — VMEM-resident estimator inference
+# ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused MLP-regressor inference (the Xling estimator).
+
+The estimator is evaluated for every query of every join — predictions are
+the filter's fast path, so per-layer HBM round-trips matter. This kernel
+pins ALL layer weights in VMEM (they are small: 4 hidden layers of width
+<=512 over <=1024-dim inputs ~= 2-3 MB) and streams query blocks through the
+whole network in one grid pass — one HBM read per input block, one write per
+output block, zero intermediate traffic.
+
+Weights use constant index_maps so every grid step sees the same VMEM-resident
+blocks; rows are tiled with Bn=256 (8x the f32 sublane tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(n_layers: int):
+    def kernel(x_ref, *refs):
+        out_ref = refs[-1]
+        wb = refs[:-1]
+        h = x_ref[...].astype(jnp.float32)
+        for li in range(n_layers):
+            w = wb[2 * li][...].astype(jnp.float32)
+            b = wb[2 * li + 1][...].astype(jnp.float32)
+            h = jax.lax.dot_general(h, w, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32) + b
+            if li < n_layers - 1:
+                h = jnp.maximum(h, 0.0)
+        out_ref[...] = h
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mlp_forward_pallas(params, x: jax.Array, *, block_n: int = 256,
+                       interpret: bool = True) -> jax.Array:
+    """params: tuple of (w [din,dout], b [1,dout]) pairs, final dout == 1.
+    x: [n, d0] with n % block_n == 0. Returns f32 [n].
+    """
+    n, d0 = x.shape
+    assert n % block_n == 0
+    n_layers = len(params)
+    assert params[-1][0].shape[1] == 1
+
+    flat = []
+    in_specs = [pl.BlockSpec((block_n, d0), lambda i: (i, 0))]
+    for w, b in params:
+        flat += [w, b]
+        in_specs += [
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0, 0)),
+        ]
+
+    out = pl.pallas_call(
+        _make_kernel(n_layers),
+        grid=(n // block_n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(x, *flat)
+    return out[:, 0]

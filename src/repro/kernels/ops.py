@@ -1,0 +1,124 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Backend selection:
+  * "pallas"  — the TPU kernel (interpret=True automatically on CPU, which
+    executes the kernel body in Python for correctness validation).
+  * "jnp"     — a blocked pure-jnp path (fast on this CPU container; same
+    math, compiled by XLA:CPU). Used as the default off-TPU so benchmarks
+    are not bottlenecked by interpret-mode overhead.
+  * "auto"    — pallas on TPU, jnp elsewhere.
+
+All padding/unpadding (row blocks, eps-chunk multiples, feature-dim
+alignment) is handled here so kernels only ever see aligned shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.fused_mlp import mlp_forward_pallas
+from repro.kernels.range_count import range_count_hist_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_r", "nr_valid"))
+def _jnp_blocked_hist(q, r, eps_grid, *, metric: str, block_r: int, nr_valid: int):
+    """lax.scan over R blocks: O(block) memory, XLA-fused compare+reduce."""
+    nr = r.shape[0]
+    nblk = nr // block_r
+    rb = r.reshape(nblk, block_r, r.shape[1])
+    eps = eps_grid.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        blk, base = xs
+        dots = qf @ blk.astype(jnp.float32).T
+        if metric == "cosine":
+            d = 1.0 - dots
+        else:
+            d = jnp.sqrt(jnp.maximum(2.0 - 2.0 * dots, 0.0))
+        valid = (base + jnp.arange(block_r)) < nr_valid
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        cnt = jnp.sum(d[:, :, None] <= eps[None, None, :], axis=1, dtype=jnp.int32)
+        return carry + cnt, None
+
+    init = jnp.zeros((q.shape[0], eps.shape[0]), jnp.int32)
+    bases = jnp.arange(nblk) * block_r
+    out, _ = jax.lax.scan(body, init, (rb, bases))
+    return out
+
+
+def range_count_hist(q, r, eps_grid, *, metric: str = "cosine",
+                     backend: str = "auto", block_q: int = 256,
+                     block_r: int = 512, eps_chunk: int = 8) -> jax.Array:
+    """counts[i, j] = #-neighbors of q[i] in r within eps_grid[j]. int32 [nq, m].
+
+    Handles arbitrary nq/nr/m by padding; eps_grid must be sorted ascending.
+    """
+    q = jnp.asarray(q)
+    r = jnp.asarray(r)
+    eps_grid = jnp.asarray(eps_grid, jnp.float32)
+    nq, m = q.shape[0], eps_grid.shape[0]
+    nr = r.shape[0]
+    be = _resolve(backend)
+
+    if be == "ref":
+        return ref.range_count_hist(q, r, eps_grid, metric)
+
+    if be == "jnp":
+        rp = _pad_rows(r, block_r)
+        out = _jnp_blocked_hist(q, rp, eps_grid, metric=metric,
+                                block_r=block_r, nr_valid=nr)
+        return out
+
+    if be == "pallas":
+        qp = _pad_rows(q, block_q)
+        rp = _pad_rows(r, block_r)
+        mp = (-m) % eps_chunk
+        # pad eps grid with +inf-like large values, slice the extra cols off
+        egp = jnp.concatenate([eps_grid, jnp.full((mp,), jnp.inf, jnp.float32)])
+        interpret = jax.default_backend() != "tpu"
+        out = range_count_hist_pallas(qp, rp, egp, metric=metric, nr_valid=nr,
+                                      block_q=block_q, block_r=block_r,
+                                      eps_chunk=eps_chunk, interpret=interpret)
+        return out[:nq, :m]
+
+    raise ValueError(f"unknown backend {be!r}")
+
+
+def range_count(q, r, eps: float, *, metric: str = "cosine",
+                backend: str = "auto", **kw) -> jax.Array:
+    """Neighbor count within a single eps. int32 [nq]."""
+    return range_count_hist(q, r, jnp.asarray([eps], jnp.float32),
+                            metric=metric, backend=backend, **kw)[:, 0]
+
+
+def mlp_forward(params, x, *, backend: str = "auto", block_n: int = 256) -> jax.Array:
+    """Fused estimator inference. params: tuple of (w, b [1,dout]) pairs."""
+    x = jnp.asarray(x)
+    be = _resolve(backend)
+    if be in ("jnp", "ref"):
+        return ref.mlp_forward(params, x)
+    n = x.shape[0]
+    xp = _pad_rows(x, block_n)
+    interpret = jax.default_backend() != "tpu"
+    out = mlp_forward_pallas(tuple((jnp.asarray(w), jnp.asarray(b)) for w, b in params),
+                             xp, block_n=block_n, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md sections from dry-run JSON records.
+
+  PYTHONPATH=src python -m repro.launch.report --dryrun experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        if p.endswith("summary.json"):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_e(x) -> str:
+    return f"{x:.2e}" if x else "0"
+
+
+def dryrun_table(recs: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | compile s | peak GB/dev | fits 16GB | "
+        "HLO flops/dev | HLO bytes/dev | coll bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) "
+                         "| | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        c = r["corrected"]
+        coll = ", ".join(f"{k}:{fmt_e(v)}" for k, v in sorted(
+            c.get("coll", {}).items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r.get('compile_s','-')} "
+            f"| {r['memory']['peak_gb']:.2f} | {'Y' if r.get('fits_16gb') else 'N'} "
+            f"| {fmt_e(c['flops'])} | {fmt_e(c['mem_bytes'])} "
+            f"| {fmt_e(c['coll_bytes'])} | {coll or '-'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound step ms | MODEL_FLOPS/dev | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != "single" or r["status"] != "ok" or "terms" not in r:
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} "
+            f"| {t['memory_s']:.4g} | {t['collective_s']:.4g} "
+            f"| {t['dominant'].replace('_s','')} "
+            f"| {t['step_s_lower_bound']*1e3:.3g} "
+            f"| {fmt_e(r.get('model_flops', 0))} "
+            f"| {r.get('useful_ratio', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dryrun)
+    print("## Dry-run — single-pod mesh (16, 16)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## Dry-run — multi-pod mesh (2, 16, 16)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## Roofline (single-pod, per device)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Step functions shared by the dry-run, the training driver and serve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, cosine_warmup
+from repro.utils import tree_size
+
+
+def make_optimizer(cfg, n_params: int):
+    """bf16 moments for >=30B params so optimizer state fits 16 GB/chip
+    (DESIGN.md §5); full-f32 moments below that."""
+    moment_dtype = jnp.bfloat16 if n_params >= 30e9 else jnp.float32
+    return adamw(lr=cosine_warmup(3e-4, 200, 10000), b1=0.9, b2=0.95,
+                 weight_decay=0.1, clip_norm=1.0, moment_dtype=moment_dtype)
+
+
+def make_train_step(model, opt):
+    accum = getattr(model.cfg, "grad_accum", 1)
+
+    def grad_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, opt_state, batch):
+        if accum <= 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            # gradient accumulation: microbatch scan divides the activation
+            # peak by ~accum (XLA overlaps each microbatch's reduce with the
+            # next microbatch's compute)
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_of(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / accum,
+                                   acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_all = jax.lax.scan(body, zeros, micro)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+        new_params, new_state = opt.apply(params, opt_state, grads)
+        return new_params, new_state, metrics
+    return step
+
+
+def make_prefill_step(model):
+    def step(params, batch):
+        return model.prefill(params, batch)
+    return step
+
+
+def make_decode_step(model):
+    def step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return step

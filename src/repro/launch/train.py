@@ -1,0 +1,52 @@
+"""Training driver CLI.
+
+Smoke-scale on CPU by default (reduced config); pass --full to use the
+assigned config (only sensible on a real TPU fleet, but the code path is
+identical — mesh + shardings scale, the loop does not change).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+      --steps 100 --batch 8 --seq 128 --ckpt /tmp/ckpt \
+      [--fail-at 50] [--compression topk]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.runtime.loop import TrainLoopConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--fail-at", type=int, default=-1)
+    ap.add_argument("--lose-devices", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    loop = TrainLoopConfig(total_steps=args.steps, batch=args.batch,
+                           seq=args.seq, ckpt_dir=args.ckpt,
+                           ckpt_every=args.ckpt_every,
+                           compression=args.compression,
+                           fail_at_step=args.fail_at,
+                           lose_devices=args.lose_devices,
+                           log_every=args.log_every)
+    hist = run_training(cfg, loop)
+    print(json.dumps({"final_loss": hist["final_loss"],
+                      "restarts": hist["restarts"],
+                      "mesh_shapes": [list(s) for s in hist["mesh_shapes"]],
+                      "steps": len(hist["loss"])}))
+
+
+if __name__ == "__main__":
+    main()

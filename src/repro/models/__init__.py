@@ -1,0 +1,36 @@
+"""Estimator registry — Xling is generic over anything satisfying:
+
+    fit(X [n, d+1], y [n]) -> loss
+    predict(X [n, d+1]) -> counts [n] (float)
+    state_dict() / load_state_dict(d)
+
+where X rows are (point ++ eps). Register new estimators here and every
+Xling feature (ATCS, XDT, XJoin, plugins) works with them unchanged — this
+is the paper's "any regression model can be encapsulated" claim, enforced
+by construction.
+"""
+from __future__ import annotations
+
+from repro.models.linear import LinearEstimator
+from repro.models.mlp import MLPEstimator
+from repro.models.rmi import RMIEstimator
+from repro.models.selnet import SelNetEstimator
+
+ESTIMATORS = {
+    "nn": MLPEstimator,
+    "rmi": RMIEstimator,
+    "selnet": SelNetEstimator,
+    "linear": LinearEstimator,
+}
+
+
+def make_estimator(name: str, din: int, **kwargs):
+    try:
+        cls = ESTIMATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown estimator {name!r}; have {sorted(ESTIMATORS)}") from None
+    return cls(din, **kwargs)
+
+
+__all__ = ["ESTIMATORS", "make_estimator", "MLPEstimator", "RMIEstimator",
+           "SelNetEstimator", "LinearEstimator"]

@@ -1,0 +1,48 @@
+"""Closed-form ridge regression baseline (stands in for the paper's non-deep
+XGB/LGBM/SVR baselines, which have no faithful JAX equivalent — recorded as
+an assumption change in DESIGN.md §3). Features: [point, eps, eps^2, eps^3].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinearEstimator:
+    name = "linear"
+
+    def __init__(self, din: int, *, l2: float = 1e-3, log_target: bool = True, **_):
+        self.l2 = l2
+        self.log_target = log_target
+        self.w = None
+
+    def _featurize(self, X: np.ndarray) -> np.ndarray:
+        eps = X[:, -1:]
+        return np.concatenate([X, eps ** 2, eps ** 3,
+                               np.ones((len(X), 1), np.float32)], axis=1)
+
+    def _transform(self, y):
+        return np.log1p(y.astype(np.float32)) if self.log_target else y.astype(np.float32)
+
+    def fit(self, X: np.ndarray, y: np.ndarray, weights=None):
+        F = self._featurize(X).astype(np.float64)
+        t = self._transform(y).astype(np.float64)
+        if weights is not None:
+            F = F * weights[:, None]
+            t = t * weights
+        A = F.T @ F + self.l2 * np.eye(F.shape[1])
+        self.w = np.linalg.solve(A, F.T @ t).astype(np.float32)
+        resid = F.astype(np.float32) @ self.w - t.astype(np.float32)
+        return float(np.mean(resid ** 2))
+
+    def predict(self, X, *, backend: str = "auto") -> np.ndarray:
+        raw = self._featurize(np.asarray(X, np.float32)) @ self.w
+        return np.asarray(jnp.expm1(raw) if self.log_target else raw, np.float32)
+
+    def state_dict(self) -> dict:
+        return {"kind": np.asarray("linear"), "w": self.w,
+                "log_target": np.asarray(self.log_target)}
+
+    def load_state_dict(self, d: dict):
+        self.w = np.asarray(d["w"])
+        self.log_target = bool(d["log_target"])

@@ -1,0 +1,90 @@
+"""The paper's "NN" estimator: a plain ReLU MLP regressor.
+
+Configuration follows §VI-A: 4 hidden layers of width 512/512/256/128 (one
+RMI sub-model). Inference can run through the fused Pallas kernel
+(kernels/fused_mlp.py) — `predict` selects backend automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.train import fit_regressor
+
+PAPER_WIDTHS = (512, 512, 256, 128)
+
+
+def init_mlp(key, din: int, widths=PAPER_WIDTHS, dtype=jnp.float32):
+    params = []
+    dims = (din,) + tuple(widths) + (1,)
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(k, (a, b), dtype) * jnp.sqrt(2.0 / a)
+        params.append((w, jnp.zeros((1, b), dtype)))
+    return tuple(params)
+
+
+def apply_mlp(params, x: jax.Array) -> jax.Array:
+    h = x.astype(jnp.float32)
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = jnp.maximum(h, 0.0)
+    return h[:, 0]
+
+
+class MLPEstimator:
+    """Estimator protocol: fit(X, y) / predict(X) in *count* space.
+
+    Internally regresses log1p(count) — counts span 5 orders of magnitude
+    and raw-scale MSE lets dense queries dominate. (Deviation from the
+    paper, which does not specify target scaling; toggle log_target=False
+    for the raw behavior.)
+    """
+
+    name = "nn"
+
+    def __init__(self, din: int, widths=PAPER_WIDTHS, *, lr=1e-3, epochs=30,
+                 batch_size=512, seed=0, log_target=True):
+        self.din, self.widths = din, tuple(widths)
+        self.lr, self.epochs, self.batch_size = lr, epochs, batch_size
+        self.seed, self.log_target = seed, log_target
+        self.params = init_mlp(jax.random.key(seed), din, widths)
+        self._jit_apply = jax.jit(apply_mlp)
+
+    def _transform(self, y):
+        return np.log1p(y.astype(np.float32)) if self.log_target else y.astype(np.float32)
+
+    def _untransform(self, p):
+        return jnp.expm1(p) if self.log_target else p
+
+    def fit(self, X: np.ndarray, y: np.ndarray, weights=None):
+        self.params, loss = fit_regressor(
+            self.params, apply_mlp, X, self._transform(y), weights=weights,
+            lr=self.lr, epochs=self.epochs, batch_size=self.batch_size,
+            seed=self.seed)
+        return loss
+
+    def predict(self, X, *, backend: str = "auto") -> np.ndarray:
+        if backend in ("pallas",):
+            raw = ops.mlp_forward(self.params, jnp.asarray(X), backend=backend)
+        else:
+            raw = self._jit_apply(self.params, jnp.asarray(X))
+        return np.asarray(self._untransform(raw), np.float32)
+
+    # persistence -----------------------------------------------------------
+    def state_dict(self) -> dict:
+        out = {"kind": np.asarray("nn"), "din": np.asarray(self.din),
+               "widths": np.asarray(self.widths), "log_target": np.asarray(self.log_target)}
+        for i, (w, b) in enumerate(self.params):
+            out[f"w{i}"], out[f"b{i}"] = np.asarray(w), np.asarray(b)
+        return out
+
+    def load_state_dict(self, d: dict):
+        import re
+        n = len([k for k in d if re.fullmatch(r"w\d+", k)])
+        self.params = tuple((jnp.asarray(d[f"w{i}"]), jnp.asarray(d[f"b{i}"]))
+                            for i in range(n))
+        self.log_target = bool(d["log_target"])

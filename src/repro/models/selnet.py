@@ -1,0 +1,88 @@
+"""SelNet-lite: query-dependent piecewise-linear selectivity curve.
+
+Faithful to the *mechanism* of SelNet (Wang et al. 2021): the network maps
+the query point to a monotone piecewise-linear eps->cardinality curve
+(softplus increments cumsum'd over fixed knots); the prediction interpolates
+that curve at the queried eps. Monotonicity in eps holds by construction —
+a property the test-suite checks (the true cardinality curve is monotone,
+Eq. 2's interpolation argument relies on it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.train import fit_regressor
+
+
+def _apply_trunk(params, x):
+    h = x.astype(jnp.float32)
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = jnp.maximum(h, 0.0)
+    return h  # [n, K+1]
+
+
+class SelNetEstimator:
+    name = "selnet"
+
+    def __init__(self, din: int, *, knots: int = 16, widths=(256, 256), lr=1e-3,
+                 epochs=30, batch_size=512, seed=0, log_target=True,
+                 eps_lo: float = 0.0, eps_hi: float = 2.0):
+        # input is the POINT only (din includes the appended eps column which
+        # we strip); curve knots cover the metric's eps range.
+        self.d_point = din - 1
+        self.knots = knots
+        self.eps_knots = jnp.linspace(eps_lo, eps_hi, knots)
+        self.lr, self.epochs, self.batch_size, self.seed = lr, epochs, batch_size, seed
+        self.log_target = log_target
+        key = jax.random.key(seed)
+        # trunk outputs K values: base + K-1 softplus increments
+        dims = (self.d_point,) + tuple(widths) + (knots,)
+        keys = jax.random.split(key, len(dims) - 1)
+        self.params = tuple(
+            (jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a), jnp.zeros((1, b)))
+            for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])))
+        self._jit_apply = jax.jit(self._apply)
+
+    def _apply(self, params, X):
+        pts, eps = X[:, :-1], X[:, -1]
+        raw = _apply_trunk(params, pts)                     # [n, K]
+        base = raw[:, 0]
+        incs = jax.nn.softplus(raw[:, 1:])                  # >= 0
+        curve = jnp.concatenate([base[:, None],
+                                 base[:, None] + jnp.cumsum(incs, axis=1)], axis=1)
+        # linear interp of the monotone curve at each row's eps
+        return jax.vmap(lambda c, e: jnp.interp(e, self.eps_knots, c))(curve, eps)
+
+    def _transform(self, y):
+        return np.log1p(y.astype(np.float32)) if self.log_target else y.astype(np.float32)
+
+    def fit(self, X: np.ndarray, y: np.ndarray, weights=None):
+        self.params, loss = fit_regressor(
+            self.params, self._apply, X, self._transform(y), weights=weights,
+            lr=self.lr, epochs=self.epochs, batch_size=self.batch_size, seed=self.seed)
+        return loss
+
+    def predict(self, X, *, backend: str = "auto") -> np.ndarray:
+        raw = self._jit_apply(self.params, jnp.asarray(X))
+        out = jnp.expm1(raw) if self.log_target else raw
+        return np.asarray(out, np.float32)
+
+    def state_dict(self) -> dict:
+        out = {"kind": np.asarray("selnet"), "knots": np.asarray(self.knots),
+               "log_target": np.asarray(self.log_target),
+               "eps_knots": np.asarray(self.eps_knots)}
+        for i, (w, b) in enumerate(self.params):
+            out[f"w{i}"], out[f"b{i}"] = np.asarray(w), np.asarray(b)
+        return out
+
+    def load_state_dict(self, d: dict):
+        import re
+        n = len([k for k in d if re.fullmatch(r"w\d+", k)])
+        self.params = tuple((jnp.asarray(d[f"w{i}"]), jnp.asarray(d[f"b{i}"]))
+                            for i in range(n))
+        self.eps_knots = jnp.asarray(d["eps_knots"])
+        self.log_target = bool(d["log_target"])

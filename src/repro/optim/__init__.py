@@ -1,0 +1,16 @@
+from repro.optim.adam import OptState, Optimizer, adafactor, adam, adamw, sgd
+from repro.optim.schedule import constant, cosine_warmup, linear_warmup
+from repro.optim.compression import (
+    CompressionState,
+    int8_compress,
+    int8_decompress,
+    make_compressor,
+    topk_compress,
+)
+
+__all__ = [
+    "Optimizer", "OptState", "adam", "adamw", "sgd", "adafactor",
+    "constant", "cosine_warmup", "linear_warmup",
+    "CompressionState", "make_compressor", "topk_compress",
+    "int8_compress", "int8_decompress",
+]

@@ -1,0 +1,180 @@
+"""Optimizers as (init, update) pairs over pytrees (no external deps).
+
+Production knobs used by the large-arch configs:
+  * ``moment_dtype`` — bf16 second/first moments so that Adam state for the
+    100B+ architectures fits the 16 GB/chip HBM budget (see DESIGN.md §5).
+  * ``adafactor`` — factored second moments for 2-D params (O(n+m) state).
+  * global-norm gradient clipping fused into the update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (or None-like empty tuple)
+    nu: Any          # second moment (possibly factored: (row, col) tuples)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    name: str = "opt"
+
+    def apply(self, params: Any, state: OptState, grads: Any, lr: float | jax.Array = None):
+        """Convenience: returns (new_params, new_state)."""
+        updates, new_state = self.update(grads, state, params)
+        new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        return new_params, new_state
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+
+def _schedule(lr) -> Callable[[jax.Array], jax.Array]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+         clip_norm: Optional[float] = None, moment_dtype=jnp.float32,
+         name: str = "adam") -> Optimizer:
+    lr_fn = _schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_fn(step) * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update, name=name)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: Optional[float] = 1.0, moment_dtype=jnp.float32) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay, clip_norm, moment_dtype, name="adamw")
+
+
+def sgd(lr=1e-2, momentum=0.9, clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = _schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                        nu=())
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+
+        def upd(g, m):
+            m_new = momentum * m + g.astype(jnp.float32)
+            return -lr_fn(step) * m_new, m_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        outs = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, OptState(step=step, mu=mu, nu=())
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_norm: Optional[float] = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    """Factored second moments for >=2-D params (Shazeer & Stern, 2018 style).
+
+    State for a (n, m) matrix is O(n + m) instead of O(n*m): this is the
+    default optimizer for the 398B/480B assigned archs in this repo.
+    """
+    lr_fn = _schedule(lr)
+
+    def factored(p):
+        return p.ndim >= 2 and min(p.shape[-2:]) >= min_dim_factored
+
+    def init(params):
+        def nu_init(p):
+            if factored(p):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return (row, col)
+            return jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=(),
+                        nu=jax.tree.map(nu_init, params))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads = _clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                row, col = v
+                row_new = beta * row + (1 - beta) * jnp.mean(g2, axis=-1)
+                col_new = beta * col + (1 - beta) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                r = row_new / (jnp.mean(row_new, axis=-1, keepdims=True) + eps)
+                vhat = r[..., None] * col_new[..., None, :]
+                u = -lr_fn(step) * g / (jnp.sqrt(vhat) + 1e-8)
+                return u, (row_new, col_new)
+            v_new = beta * v + (1 - beta) * g2
+            u = -lr_fn(step) * g / (jnp.sqrt(v_new) + 1e-8)
+            return u, v_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        nu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, OptState(step=step, mu=(), nu=nu)
+
+    return Optimizer(init=init, update=update, name="adafactor")

@@ -1,0 +1,93 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+Two schemes, both with error feedback so compression error does not bias the
+optimizer (Karimireddy et al. 2019):
+
+  * top-k sparsification — keep the k largest-|g| entries per leaf, feed the
+    residual back next step. The all-reduce then moves k values + k indices
+    instead of n values.
+  * int8 quantization with stochastic rounding — 4x over f32 / 2x over bf16
+    on the wire.
+
+They are deliberately written as pure functions over pytrees so they compose
+with shard_map'd psum: compress -> collective -> decompress.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # residual feedback pytree (same structure as grads)
+
+
+def init_state(grads_like: Any) -> CompressionState:
+    return CompressionState(error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def topk_compress(g: jax.Array, frac: float) -> tuple[jax.Array, jax.Array]:
+    """Returns (values, flat_indices) of the top ceil(frac * n) entries of |g|."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(frac * flat.shape[0]))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(values: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    flat = jnp.zeros((n,), jnp.float32).at[idx].set(values)
+    return flat.reshape(shape)
+
+
+def int8_compress(g: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization with stochastic rounding. Returns (q, scale)."""
+    g = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    x = g / scale
+    floor = jnp.floor(x)
+    p = x - floor
+    rnd = jax.random.uniform(key, g.shape)
+    q = (floor + (rnd < p)).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_compressor(mode: str = "none", topk_frac: float = 0.01) -> Callable:
+    """Returns fn(grads, state, key) -> (compressed_then_restored_grads, new_state).
+
+    The round-trip (compress -> decompress) happens on-device; in the real
+    multi-host deployment the collective runs between the two halves. The
+    error-feedback residual makes the scheme convergent.
+    """
+    if mode == "none":
+        return lambda grads, state, key: (grads, state)
+
+    def fn(grads, state: CompressionState, key):
+        leaves, treedef = jax.tree.flatten(grads)
+        errs = treedef.flatten_up_to(state.error)
+        keys = jax.random.split(key, len(leaves))
+        new_leaves, new_errs = [], []
+        for g, e, k in zip(leaves, errs, keys):
+            corrected = g.astype(jnp.float32) + e
+            if mode == "topk":
+                vals, idx = topk_compress(corrected, topk_frac)
+                restored = topk_decompress(vals, idx, g.shape)
+            elif mode == "int8":
+                q, scale = int8_compress(corrected, k)
+                restored = int8_decompress(q, scale)
+            else:
+                raise ValueError(f"unknown compression mode {mode!r}")
+            new_errs.append(corrected - restored)
+            new_leaves.append(restored.astype(g.dtype))
+        return (jax.tree.unflatten(treedef, new_leaves),
+                CompressionState(error=jax.tree.unflatten(treedef, new_errs)))
+
+    return fn

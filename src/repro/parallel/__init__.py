@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (
+    FSDP_AXES,
+    LOGICAL_RULES,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+
+__all__ = ["FSDP_AXES", "LOGICAL_RULES", "param_shardings", "batch_shardings",
+           "cache_shardings"]

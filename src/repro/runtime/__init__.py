@@ -1,0 +1,6 @@
+from repro.runtime.failure import FailureDetector, StragglerMonitor
+from repro.runtime.elastic import best_mesh_shape, rescale_plan
+from repro.runtime.loop import TrainLoopConfig, run_training
+
+__all__ = ["FailureDetector", "StragglerMonitor", "best_mesh_shape",
+           "rescale_plan", "TrainLoopConfig", "run_training"]

@@ -1,0 +1,57 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+On device/pod loss the runtime (a) picks the largest (data, model) grid that
+fits the survivors — preferring to keep the model axis intact so TP-sharded
+params keep their layout, (b) re-lowers the step for the new mesh, and
+(c) restores the latest checkpoint with the NEW shardings
+(CheckpointManager.restore(shardings=...) is the reshard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+def best_mesh_shape(n_devices: int, *, prefer_model: int,
+                    max_model: int | None = None) -> tuple[int, int]:
+    """Largest (data, model) grid with data*model <= n_devices, model as
+    close to prefer_model as possible (keeps TP layouts stable)."""
+    best = (1, 1)
+    max_model = max_model or prefer_model
+    for model in range(min(prefer_model, max_model, n_devices), 0, -1):
+        data = n_devices // model
+        if data * model > best[0] * best[1] or (
+                data * model == best[0] * best[1] and model == prefer_model):
+            best = (data, model)
+        if model == prefer_model and data * model == n_devices:
+            break
+    return best
+
+
+@dataclass
+class RescalePlan:
+    old_shape: tuple
+    new_shape: tuple
+    n_lost: int
+    devices: list
+
+
+def rescale_plan(mesh: jax.sharding.Mesh, dead_devices: set) -> RescalePlan:
+    """Plan a new (data, model) mesh over surviving devices."""
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    survivors = [d for d in mesh.devices.flatten() if d.id not in dead_devices]
+    new_shape = best_mesh_shape(len(survivors),
+                                prefer_model=shape.get("model", 1))
+    n_used = new_shape[0] * new_shape[1]
+    return RescalePlan(old_shape=tuple(mesh.devices.shape),
+                       new_shape=new_shape,
+                       n_lost=mesh.devices.size - len(survivors),
+                       devices=survivors[:n_used])
+
+
+def build_mesh(plan: RescalePlan) -> jax.sharding.Mesh:
+    devs = np.array(plan.devices).reshape(plan.new_shape)
+    return jax.sharding.Mesh(devs, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)

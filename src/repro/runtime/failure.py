@@ -1,0 +1,78 @@
+"""Failure detection + straggler mitigation.
+
+FailureDetector — heartbeat registry. In a real deployment every host posts
+heartbeats (GCS bucket / etcd / coordinator RPC); here the transport is
+pluggable and the tests inject synthetic timestamps. The detector's verdicts
+feed the elastic re-mesh path (runtime/elastic.py).
+
+StragglerMonitor — per-worker step-duration statistics. A worker whose
+recent median exceeds `threshold` x fleet-median is flagged; the proposed
+mitigation is a batch-rebalance plan (shrink the straggler's shard, grow the
+fast workers') — the standard mitigation when you cannot evict the host.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class FailureDetector:
+    def __init__(self, workers: list[str], *, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_seen: dict[str, float] = {w: clock() for w in workers}
+
+    def heartbeat(self, worker: str, at: Optional[float] = None) -> None:
+        self.last_seen[worker] = self.clock() if at is None else at
+
+    def dead(self) -> list[str]:
+        now = self.clock()
+        return sorted(w for w, t in self.last_seen.items()
+                      if now - t > self.timeout_s)
+
+    def alive(self) -> list[str]:
+        now = self.clock()
+        return sorted(w for w, t in self.last_seen.items()
+                      if now - t <= self.timeout_s)
+
+
+@dataclass
+class RebalancePlan:
+    stragglers: list[str]
+    shares: dict[str, float]     # fraction of the global batch per worker
+
+
+class StragglerMonitor:
+    def __init__(self, workers: list[str], *, window: int = 16,
+                 threshold: float = 1.5):
+        self.window = window
+        self.threshold = threshold
+        self.hist: dict[str, deque] = {w: deque(maxlen=window) for w in workers}
+
+    def record(self, worker: str, step_seconds: float) -> None:
+        self.hist[worker].append(step_seconds)
+
+    def _median(self, xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2] if xs else 0.0
+
+    def stragglers(self) -> list[str]:
+        meds = {w: self._median(h) for w, h in self.hist.items() if h}
+        if len(meds) < 2:
+            return []
+        fleet = self._median(list(meds.values()))
+        if fleet <= 0:
+            return []
+        return sorted(w for w, m in meds.items() if m > self.threshold * fleet)
+
+    def rebalance_plan(self) -> RebalancePlan:
+        """Batch shares inversely proportional to each worker's median step
+        time — equalizes wall-clock across workers."""
+        meds = {w: self._median(h) or 1e-9 for w, h in self.hist.items()}
+        inv = {w: 1.0 / m for w, m in meds.items()}
+        z = sum(inv.values()) or 1.0
+        return RebalancePlan(stragglers=self.stragglers(),
+                             shares={w: v / z for w, v in inv.items()})

@@ -1,0 +1,81 @@
+"""Shared small utilities: PRNG plumbing, tree math, timing, caching."""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import time
+from dataclasses import asdict, is_dataclass
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE_DIR = os.environ.get("REPRO_CACHE", os.path.join(os.path.dirname(__file__), "..", "..", ".cache"))
+
+
+def cache_path(*key: Any, ext: str = "npz") -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    blob = json.dumps([repr(k) for k in key], sort_keys=True).encode()
+    h = hashlib.sha1(blob).hexdigest()[:16]
+    return os.path.join(CACHE_DIR, f"{h}.{ext}")
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def split_like(key: jax.Array, tree: Any) -> Any:
+    """One PRNG key per leaf of `tree`'s structure."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+@contextlib.contextmanager
+def timed() -> Iterator[dict]:
+    """with timed() as t: ...; t['s'] holds elapsed seconds."""
+    box = {}
+    t0 = time.perf_counter()
+    try:
+        yield box
+    finally:
+        box["s"] = time.perf_counter() - t0
+
+
+def block_until_ready(x: Any) -> Any:
+    jax.tree.map(lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a, x)
+    return x
+
+
+def config_dict(cfg: Any) -> dict:
+    if is_dataclass(cfg):
+        return asdict(cfg)
+    return dict(cfg)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_to(arr: np.ndarray, n: int, axis: int = 0, value=0) -> np.ndarray:
+    pad = n - arr.shape[axis]
+    if pad <= 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return np.pad(arr, widths, constant_values=value)

@@ -1,0 +1,28 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the real device count (1 on CI). Only launch/dryrun.py forces 512 host
+# devices, in its own process.
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def unit_rng():
+    return np.random.default_rng(0)
+
+
+def unit_vectors(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """A cached small corpus used across join/filter tests."""
+    from repro.data import load_dataset
+    R, S, spec = load_dataset("sift", n=2000, seed=0)
+    return R, S[:200], spec

@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (assignment: reduced config, one forward/train step
+on CPU, output shapes + no NaNs) + prefill/decode consistency + flash
+attention vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.archs import build_model
+from repro.archs.frontends import make_batch
+from repro.archs.layers import attention, chunked_attention, flash_attention
+from repro.configs import ARCH_IDS, get_config
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, "train", 2, 64)
+
+    def loss_fn(p):
+        loss, m = model.train_loss(p, batch)
+        return loss
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    # sane CE at init: ~ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.5
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_consistency(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 48
+    batch = make_batch(cfg, "train", B, S)
+    toks = batch["tokens"]
+    b_pre = dict(batch)
+    b_pre["tokens"] = toks[:, :-1]
+    _, cache = jax.jit(model.prefill)(params, b_pre)
+
+    def grow(c, pad=16):
+        def f(x):
+            if x.ndim == 6 and x.shape[2] == 1 and cfg.window == 0:
+                G, Bb, NS, Sc, K, D = x.shape
+                z = jnp.zeros((G, Bb, 1, pad, K, D), x.dtype)
+                return jnp.concatenate([x, z], axis=3)
+            return x
+        return jax.tree.map(f, c)
+
+    cache = grow(cache)
+    n_prefix = cfg.n_patches if cfg.frontend == "vision_stub" else 0
+    pos = jnp.asarray(n_prefix + toks.shape[1] - 1, jnp.int32)
+    logits_dec, _ = jax.jit(model.decode_step)(params, cache, toks[:, -1:], pos)
+    logits_full, _ = jax.jit(model.prefill)(params, batch)
+    rel = (float(jnp.max(jnp.abs(logits_dec - logits_full)))
+           / (float(jnp.max(jnp.abs(logits_full))) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_arch_output_shapes():
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 3, 32
+    batch = make_batch(cfg, "train", B, S)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    k = cache["b0"]["k"]
+    assert k.shape[0] == cfg.n_layers and k.shape[1] == B
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 9)])
+def test_flash_attention_grads_vs_oracle(causal, window):
+    rng = np.random.default_rng(0)
+    B, S, H, K, D, T = 2, 20, 6, 2, 8, 20
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, K, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, K, D)).astype(np.float32))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.tanh(chunked_attention(q, k, v, causal=causal,
+                                                  window=window, chunk=5)))
+
+    def f_new(q, k, v):
+        return jnp.sum(jnp.tanh(attention(q, k, v, causal=causal,
+                                          window=window, chunk=5)))
+
+    np.testing.assert_allclose(float(f_ref(q, k, v)), float(f_new(q, k, v)),
+                               rtol=1e-5)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(f_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_mamba2_chunked_equals_sequential():
+    from repro.archs import mamba2
+    from repro.archs.spec import init_params
+    d, N, hd = 32, 8, 8
+    specs = mamba2.mamba2_specs(d, d_state=N, head_dim=hd, expand=2,
+                                dtype=jnp.float32)
+    p = init_params(jax.random.key(0), specs)
+    B, S = 2, 16
+    u = jax.random.normal(jax.random.key(1), (B, S, d)) * 0.3
+    y_chunk, st = mamba2.mamba2_forward(p, u, d_state=N, head_dim=hd,
+                                        chunk=4, with_state=True)
+    # sequential decode from zero state must reproduce the chunked output
+    d_inner = 2 * d
+    cache = {"ssm": jnp.zeros((B, d_inner // hd, hd, N)),
+             "conv": jnp.zeros((B, mamba2.CONV_K - 1, d_inner + 2 * N))}
+    outs = []
+    for t in range(S):
+        y, cache = mamba2.mamba2_decode(p, u[:, t:t + 1], cache,
+                                        d_state=N, head_dim=hd)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-5)
+    # and the handed-off state matches the final sequential state
+    np.testing.assert_allclose(np.asarray(st["ssm"]),
+                               np.asarray(cache["ssm"]), rtol=2e-4, atol=2e-5)
+
+
+def test_moe_routes_and_mixes():
+    from repro.archs import moe
+    from repro.archs.spec import init_params
+    d, f, E = 16, 32, 4
+    specs = moe.moe_specs(d, f, E, jnp.float32)
+    p = init_params(jax.random.key(0), specs)
+    x = jax.random.normal(jax.random.key(1), (2, 8, d))
+    y = moe.moe_apply(p, x, top_k=2, capacity_factor=8.0, group_size=16)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    # MoE must actually change the input (residual + expert outputs)
+    assert float(jnp.max(jnp.abs(y - x))) > 1e-6

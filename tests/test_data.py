@@ -1,0 +1,69 @@
+"""Data layer: synthetic corpora shape/normalization/negative portions,
+ground-truth pipeline caching, batch pipeline determinism."""
+import numpy as np
+
+from repro.data import DATASETS, ShardedBatcher, load_dataset, token_batches
+from repro.data.groundtruth import cardinality_table, eps_grid_for_metric
+from repro.kernels import ops
+
+
+def test_all_datasets_generate_and_normalize():
+    for name, spec in DATASETS.items():
+        R, S, sp = load_dataset(name, n=600, seed=0)
+        assert R.shape[1] == spec.dim and S.shape[1] == spec.dim
+        assert len(R) == 480 and len(S) == 120      # 8:2 split
+        norms = np.linalg.norm(np.concatenate([R, S]), axis=1)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_second_sample_disjoint_same_distribution():
+    x1, _ = load_dataset("glove", n=500, seed=0, split=False)
+    x2, _ = load_dataset("glove", n=500, seed=0, sample=2, split=False)
+    assert not np.allclose(x1[:50], x2[:50])
+    # same distribution: mean cosine-to-centroid similar
+    c1, c2 = x1.mean(0), x2.mean(0)
+    assert abs(np.linalg.norm(c1) - np.linalg.norm(c2)) < 0.12
+
+
+def test_negative_portion_ordering():
+    """Table III structure: nuswide is the sparsest, fasttext the densest."""
+    portions = {}
+    for name in ("fasttext", "nuswide", "glove"):
+        R, S, spec = load_dataset(name, n=1200, seed=0)
+        cnt = np.asarray(ops.range_count(S, R, 0.45, metric=spec.metric,
+                                         backend="jnp"))
+        portions[name] = (cnt == 0).mean()
+    assert portions["fasttext"] < portions["glove"] < portions["nuswide"]
+
+
+def test_cardinality_table_cache(tmp_path, monkeypatch):
+    import repro.utils as U
+    monkeypatch.setattr(U, "CACHE_DIR", str(tmp_path))
+    R, _, spec = load_dataset("sift", n=400, seed=0)
+    grid = eps_grid_for_metric(spec.metric, 10)
+    t1 = cardinality_table(R, R, grid, spec.metric, backend="jnp",
+                           cache_key=("t",), exclude_self=True)
+    t2 = cardinality_table(R, R, grid, spec.metric, backend="jnp",
+                           cache_key=("t",), exclude_self=True)
+    np.testing.assert_array_equal(t1, t2)
+    assert (t1 >= 0).all()
+
+
+def test_sharded_batcher():
+    X = np.arange(100, dtype=np.float32).reshape(50, 2)
+    y = np.arange(50, dtype=np.float32)
+    b = ShardedBatcher((X, y), batch_size=16, seed=0)
+    seen = []
+    for xb, yb in b.epoch():
+        assert xb.shape == (16, 2) and yb.shape == (16,)
+        seen.extend(np.asarray(yb).tolist())
+    assert len(seen) == 48 and len(set(seen)) == 48   # drop-remainder, no dup
+
+
+def test_token_batches_deterministic():
+    it1 = token_batches(100, 4, 8, seed=3)
+    it2 = token_batches(100, 4, 8, seed=3)
+    a, b = next(it1), next(it2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = next(it1)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))

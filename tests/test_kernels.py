@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles: shape x dtype sweeps (assignment
+requirement: per kernel, sweep shapes/dtypes, assert_allclose vs ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _unit(rng, n, d, dtype):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+@pytest.mark.parametrize("nq,nr,d,m", [
+    (16, 64, 8, 4),        # tiny
+    (37, 301, 65, 13),     # unaligned everything
+    (128, 512, 128, 16),   # exactly tile-aligned
+    (200, 700, 300, 100),  # realistic (fasttext dims, paper m=100)
+])
+def test_range_count_pallas_vs_ref(metric, nq, nr, d, m):
+    rng = np.random.default_rng(nq * 7 + nr)
+    q = _unit(rng, nq, d, np.float32)
+    r = _unit(rng, nr, d, np.float32)
+    eps = np.sort(rng.uniform(0.05, 1.9, size=m)).astype(np.float32)
+    want = np.asarray(ref.range_count_hist(jnp.asarray(q), jnp.asarray(r),
+                                           jnp.asarray(eps), metric))
+    got = np.asarray(ops.range_count_hist(q, r, eps, metric=metric,
+                                          backend="pallas", block_q=32,
+                                          block_r=64, eps_chunk=4))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_range_count_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    q = _unit(rng, 24, 32, np.float32).astype(dtype)
+    r = _unit(rng, 96, 32, np.float32).astype(dtype)
+    eps = np.linspace(0.2, 1.8, 8).astype(np.float32)
+    want = np.asarray(ref.range_count_hist(jnp.asarray(q, jnp.float32),
+                                           jnp.asarray(r, jnp.float32),
+                                           jnp.asarray(eps), "l2"))
+    got = np.asarray(ops.range_count_hist(q, r, eps, metric="l2",
+                                          backend="pallas", block_q=8,
+                                          block_r=32, eps_chunk=4))
+    # bf16 rounding may flip counts for distances exactly at a boundary
+    assert np.mean(np.abs(want - got)) < 1.0
+
+
+def test_range_count_jnp_backend_matches():
+    rng = np.random.default_rng(7)
+    q, r = _unit(rng, 50, 40, np.float32), _unit(rng, 333, 40, np.float32)
+    eps = np.linspace(0.1, 1.9, 25).astype(np.float32)
+    for metric in ("cosine", "l2"):
+        want = np.asarray(ref.range_count_hist(jnp.asarray(q), jnp.asarray(r),
+                                               jnp.asarray(eps), metric))
+        got = np.asarray(ops.range_count_hist(q, r, eps, metric=metric,
+                                              backend="jnp", block_r=64))
+        np.testing.assert_array_equal(want, got)
+
+
+def test_range_count_monotone_in_eps():
+    rng = np.random.default_rng(9)
+    q, r = _unit(rng, 20, 16, np.float32), _unit(rng, 100, 16, np.float32)
+    eps = np.linspace(0.05, 1.95, 32).astype(np.float32)
+    cnt = np.asarray(ops.range_count_hist(q, r, eps, metric="cosine",
+                                          backend="pallas", block_q=8,
+                                          block_r=32, eps_chunk=8))
+    assert (np.diff(cnt, axis=1) >= 0).all()
+
+
+@pytest.mark.parametrize("widths", [(32,), (64, 32), (128, 64, 32)])
+@pytest.mark.parametrize("din,n", [(17, 40), (301, 100), (66, 256)])
+def test_fused_mlp_vs_ref(widths, din, n):
+    rng = np.random.default_rng(din + n)
+    dims = (din,) + widths + (1,)
+    params = [(rng.normal(size=(a, b)).astype(np.float32) * 0.2,
+               rng.normal(size=(1, b)).astype(np.float32))
+              for a, b in zip(dims[:-1], dims[1:])]
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    want = np.asarray(ref.mlp_forward(
+        [(jnp.asarray(w), jnp.asarray(b)) for w, b in params], jnp.asarray(x)))
+    got = np.asarray(ops.mlp_forward(params, x, backend="pallas", block_n=16))
+    np.testing.assert_allclose(want, got, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_mlp_bf16():
+    rng = np.random.default_rng(1)
+    params = [(rng.normal(size=(20, 16)).astype(np.float32) * 0.2,
+               np.zeros((1, 16), np.float32)),
+              (rng.normal(size=(16, 1)).astype(np.float32) * 0.2,
+               np.zeros((1, 1), np.float32))]
+    x = rng.normal(size=(32, 20)).astype(np.float32)
+    pb = [(jnp.asarray(w, jnp.bfloat16), jnp.asarray(b, jnp.bfloat16))
+          for w, b in params]
+    want = np.asarray(ref.mlp_forward(pb, jnp.asarray(x, jnp.bfloat16)))
+    got = np.asarray(ops.mlp_forward(pb, jnp.asarray(x, jnp.bfloat16),
+                                     backend="pallas", block_n=16))
+    np.testing.assert_allclose(want, got, rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------- pallas flash attention
+@pytest.mark.parametrize("B,S,T,H,K,Dk,Dv,causal", [
+    (2, 128, 128, 8, 2, 32, 32, True),
+    (1, 64, 256, 4, 1, 16, 24, False),    # cross-attention shape (MQA-ish)
+    (2, 128, 128, 6, 6, 64, 64, True),    # MHA
+    (1, 64, 64, 40, 1, 96, 64, True),     # MLA-materialized-ish dims
+])
+def test_flash_attention_pallas_vs_oracle(B, S, T, H, K, Dk, Dv, causal):
+    from repro.archs.layers import chunked_attention
+    from repro.kernels.flash_attention import flash_attention_pallas
+    rng = np.random.default_rng(S * 3 + T)
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, K, Dk)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, K, Dv)).astype(np.float32))
+    want = chunked_attention(q, k, v, causal=causal, chunk=64)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=32,
+                                 block_kv=64)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_pallas_bf16():
+    from repro.archs.layers import chunked_attention
+    from repro.kernels.flash_attention import flash_attention_pallas
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 64, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    want = chunked_attention(q, k, v, causal=True, chunk=32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(got, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_pallas_kv_valid():
+    from repro.archs.layers import chunked_attention
+    from repro.kernels.flash_attention import flash_attention_pallas
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 32, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 16)).astype(np.float32))
+    want = chunked_attention(q, k, v, causal=False, kv_valid=40, chunk=16)
+    got = flash_attention_pallas(q, k, v, causal=False, block_q=16,
+                                 block_kv=16, kv_valid=40)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import atcs, xdt
+from repro.core.xjoin import _bucket_size
+from repro.kernels import ops, ref
+from repro.launch import roofline
+
+
+def _unit(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 60), st.integers(2, 32),
+       st.integers(1, 12), st.integers(0, 10**6))
+def test_range_count_hist_invariants(nq, nr, d, m, seed):
+    q, r = _unit(seed, nq, d), _unit(seed + 1, nr, d)
+    eps = np.sort(np.random.default_rng(seed).uniform(0.01, 1.99, m)).astype(np.float32)
+    cnt = np.asarray(ops.range_count_hist(q, r, eps, metric="l2", backend="jnp",
+                                          block_r=16))
+    # monotone non-decreasing in eps (the premise of Eq. 2 interpolation)
+    assert (np.diff(cnt, axis=1) >= 0).all()
+    # bounded by |R|
+    assert (cnt >= 0).all() and (cnt <= nr).all()
+    # eps >= 2 on the unit sphere finds everything
+    full = np.asarray(ops.range_count(q, r, 2.0 + 1e-3, metric="l2",
+                                      backend="jnp", block_r=16))
+    assert (full == nr).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(2, 50), st.integers(1, 12),
+       st.integers(0, 10**6))
+def test_atcs_selection_invariants(n, m, s, seed):
+    rng = np.random.default_rng(seed)
+    targets = rng.integers(0, 500, size=(n, m)).astype(np.float64)
+    s_eff = min(s, m)
+    idx = atcs.atcs_select(targets, s_eff, seed=seed)
+    assert idx.shape == (n, s_eff)
+    # all valid, all distinct per row (exactly s samples, Alg. 1 line 12-13)
+    assert (idx >= 0).all() and (idx < m).all()
+    for row in idx:
+        assert len(np.unique(row)) == s_eff
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.01, 1.99), min_size=2, max_size=12, unique=True),
+       st.integers(0, 10**6), st.floats(0.011, 1.989))
+def test_interpolation_between_bracketing_values(grid, seed, eps_q):
+    grid = np.sort(np.asarray(grid, np.float32))
+    rng = np.random.default_rng(seed)
+    base = np.sort(rng.integers(0, 100, size=(4, len(grid))), axis=1).astype(np.float64)
+    t = xdt.interp_targets(grid, base, float(eps_q))
+    # interpolation of a monotone curve stays within [min, max] per row
+    assert (t >= base.min(axis=1) - 1e-9).all()
+    assert (t <= base.max(axis=1) + 1e-9).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.001, 0.5), st.integers(10, 2000), st.integers(0, 10**6))
+def test_fpr_xdt_never_exceeds_tolerance_on_train(tol, n, seed):
+    rng = np.random.default_rng(seed)
+    preds = rng.normal(size=n)
+    targets = np.zeros(n)
+    thr = xdt.select_xdt(preds, targets, tau=0, mode="fpr", fpr_tolerance=tol)
+    assert (preds > thr).mean() <= tol + 1.0 / n
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10**5), st.integers(16, 2048))
+def test_bucket_size_properties(n, block):
+    b = _bucket_size(n, block)
+    assert b >= n and b % block == 0
+    # power-of-two growth: at most 2x overshoot beyond one block
+    assert b < 2 * max(n, block)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64))
+def test_hlo_dot_flops_parser(m, n, k):
+    txt = f"""
+ENTRY %main (p0: f32[{m},{k}], p1: f32[{k},{n}]) -> f32[{m},{n}] {{
+  %p0 = f32[{m},{k}]{{1,0}} parameter(0)
+  %p1 = f32[{k},{n}]{{1,0}} parameter(1)
+  ROOT %dot.1 = f32[{m},{n}]{{1,0}} dot(%p0, %p1), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+    total = roofline.analyze_hlo(txt)
+    assert total["flops"] == 2.0 * m * n * k

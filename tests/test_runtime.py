@@ -1,0 +1,177 @@
+"""Runtime: checkpoint atomicity/keep-k/restore, failure detection,
+straggler mitigation, elastic re-mesh planning, fault-tolerant loop with
+induced failure, optimizer + gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import adam, adamw, adafactor, make_compressor, sgd
+from repro.optim.compression import CompressionState
+from repro.runtime.elastic import best_mesh_shape, rescale_plan
+from repro.runtime.failure import FailureDetector, StragglerMonitor
+
+
+# ----------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "step": jnp.asarray(3)}
+    for s in (0, 10, 20, 30):
+        mgr.save(s, state, meta={"loss": float(s)})
+    assert mgr.all_steps() == [20, 30]           # keep-k GC
+    restored, meta = mgr.restore(state)
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(state["w"]))
+    assert meta["step"] == 30
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    mgr.save(1, {"x": jnp.ones(4)})
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+    mgr.save(5, {"x": jnp.ones(3)}, blocking=False)
+    mgr.wait()
+    import time
+    for _ in range(100):
+        if mgr.all_steps() == [5]:
+            break
+        time.sleep(0.02)
+    assert mgr.all_steps() == [5]
+
+
+# ------------------------------------------------------------- failure det
+def test_failure_detector():
+    t = [0.0]
+    det = FailureDetector(["a", "b", "c"], timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    det.heartbeat("a")
+    det.heartbeat("b")
+    t[0] = 12.0
+    assert det.dead() == ["c"]
+    assert det.alive() == ["a", "b"]
+
+
+def test_straggler_monitor_and_rebalance():
+    mon = StragglerMonitor(["w0", "w1", "w2", "w3"], threshold=1.5)
+    for _ in range(8):
+        for w in ("w0", "w1", "w2"):
+            mon.record(w, 1.0)
+        mon.record("w3", 3.0)
+    assert mon.stragglers() == ["w3"]
+    plan = mon.rebalance_plan()
+    assert abs(sum(plan.shares.values()) - 1.0) < 1e-6
+    assert plan.shares["w3"] < plan.shares["w0"]  # straggler gets less work
+
+
+# ----------------------------------------------------------------- elastic
+def test_best_mesh_shape():
+    assert best_mesh_shape(256, prefer_model=16) == (16, 16)
+    d, m = best_mesh_shape(255, prefer_model=16)
+    assert d * m <= 255 and m <= 16
+    assert best_mesh_shape(3, prefer_model=16)[0] * \
+        best_mesh_shape(3, prefer_model=16)[1] <= 3
+
+
+def test_rescale_plan_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = rescale_plan(mesh, set())
+    assert plan.n_lost == 0
+    assert plan.new_shape[0] * plan.new_shape[1] == 1
+
+
+# ------------------------------------------------------------------- optim
+def _quadratic_losses(opt, steps=60):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        def loss_fn(p):
+            return jnp.sum((p["w"] - target) ** 2)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.apply(params, state, g)
+        return params, state, loss
+
+    losses = []
+    for _ in range(steps):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+    return losses
+
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: adam(lr=0.1), lambda: adamw(lr=0.1, weight_decay=0.0),
+    lambda: sgd(lr=0.05), lambda: adafactor(lr=0.3, min_dim_factored=2)])
+def test_optimizers_converge(opt_fn):
+    losses = _quadratic_losses(opt_fn())
+    assert losses[-1] < losses[0] * 0.05
+
+
+def test_adam_bf16_moments_still_converges():
+    losses = _quadratic_losses(adam(lr=0.1, moment_dtype=jnp.bfloat16))
+    assert losses[-1] < losses[0] * 0.1
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor(min_dim_factored=4)
+    params = {"w": jnp.zeros((64, 32))}
+    st = opt.init(params)
+    row, col = st.nu["w"]
+    assert row.shape == (64,) and col.shape == (32,)
+
+
+@pytest.mark.parametrize("mode", ["topk", "int8"])
+def test_compression_error_feedback_converges(mode):
+    """Compressed-gradient descent with error feedback still converges on a
+    quadratic (the whole point of error feedback)."""
+    comp = make_compressor(mode, topk_frac=0.34)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    w = jnp.zeros(3)
+    state = CompressionState(error={"w": jnp.zeros(3)})
+    for i in range(150):
+        g = {"w": 2 * (w - target)}
+        g, state = comp(g, state, jax.random.key(i))
+        w = w - 0.05 * g["w"]
+    assert float(jnp.sum((w - target) ** 2)) < 1e-2
+
+
+def test_int8_roundtrip_accuracy():
+    from repro.optim.compression import int8_compress, int8_decompress
+    x = jax.random.normal(jax.random.key(0), (256,)) * 3
+    q, scale = int8_compress(x, jax.random.key(1))
+    err = jnp.abs(int8_decompress(q, scale) - x)
+    assert float(jnp.max(err)) <= float(scale) + 1e-6
+
+
+# ---------------------------------------------------- fault-tolerant loop
+def test_training_loop_survives_failure(tmp_path):
+    from repro.configs import get_config
+    from repro.runtime.loop import TrainLoopConfig, run_training
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    loop = TrainLoopConfig(total_steps=8, batch=2, seq=16,
+                           ckpt_dir=str(tmp_path), ckpt_every=2,
+                           fail_at_step=5, lose_devices=0)
+    hist = run_training(cfg, loop)
+    assert hist["restarts"] == 1
+    assert len(hist["loss"]) >= 8
+    assert all(np.isfinite(hist["loss"]))
+
+
+def test_training_loop_with_compression(tmp_path):
+    from repro.configs import get_config
+    from repro.runtime.loop import TrainLoopConfig, run_training
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    loop = TrainLoopConfig(total_steps=4, batch=2, seq=16,
+                           ckpt_dir=str(tmp_path), ckpt_every=0,
+                           compression="topk", topk_frac=0.1)
+    hist = run_training(cfg, loop)
+    assert all(np.isfinite(hist["loss"]))
