@@ -37,7 +37,11 @@ def run(datasets=DATASETS) -> list:
             return float(np.minimum(counts, truth).sum() / total_pairs)
 
         methods = {}
+        # the naive base and XJoin share one device-resident engine; pass a
+        # data mesh here (launch.mesh.make_data_mesh) to shard the query
+        # axis across devices — same counts, distributed sweep
         naive = make_join("naive", R, spec.metric, backend="jnp")
+        engine = naive.engine
         naive.query_counts(S[:64], EPS)  # warm the jit
         methods["naive"] = lambda: naive.query_counts(S, EPS)
         grid = make_join("grid", R, spec.metric)
@@ -55,7 +59,8 @@ def run(datasets=DATASETS) -> list:
             W=2.5 if spec.kind == "text" else 2.0))
         methods["naive-lsbf"] = lambda: lsbf_join.run(S, EPS).counts
         xjoin = FilteredJoin(naive, filter=filt, tau=50, xdt_mode="fpr",
-                             fpr_tolerance=0.05)
+                             fpr_tolerance=0.05, engine=engine)
+        assert xjoin._engine_usable()  # fused filter->compact->verify path
         xjoin.run(S[:64], EPS)  # warm
         methods["xjoin"] = lambda: xjoin.run(S, EPS).counts
 

@@ -50,8 +50,9 @@ def run() -> dict:
     c_masked = masked()
     t_masked = time.perf_counter() - t0
 
-    # ---- C: compacted (beyond-paper) ----------------------------------------
-    xj = FilteredJoin(naive, filter=filt, tau=TAU, xdt_mode="fpr")
+    # ---- C: compacted, fused on-device via the engine (beyond-paper) --------
+    xj = FilteredJoin(naive, filter=filt, tau=TAU, xdt_mode="fpr",
+                      engine=naive.engine)
     xj.run(S, EPS)
     t0 = time.perf_counter()
     res = xj.run(S, EPS)

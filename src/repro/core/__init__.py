@@ -8,8 +8,10 @@
 """
 from repro.core.xling import XlingConfig, XlingFilter
 from repro.core.xjoin import FilteredJoin, JoinResult, build_xjoin, enhance_with_xling
+from repro.core.engine import JoinEngine, sharded_range_count_hist
 from repro.core import atcs, xdt
 from repro.core.joins import JOINS, make_join
 
 __all__ = ["XlingConfig", "XlingFilter", "FilteredJoin", "JoinResult",
-           "build_xjoin", "enhance_with_xling", "atcs", "xdt", "JOINS", "make_join"]
+           "build_xjoin", "enhance_with_xling", "JoinEngine",
+           "sharded_range_count_hist", "atcs", "xdt", "JOINS", "make_join"]

@@ -1,0 +1,329 @@
+"""Sharded, device-resident batch-join execution engine (DESIGN.md §4).
+
+The paper reduces similarity join to filter-then-verify, and both halves
+bottom out in dense range counting — work that should saturate accelerators.
+This module is the execution layer that makes that true:
+
+  * `JoinEngine` pins the index set R on device once (replicated over the
+    mesh) and runs every sweep against it with bucketed static shapes.
+  * The range-count sweep shards the QUERY axis over the mesh's data axis
+    with `shard_map` (each device sweeps its query slice against the full
+    replicated R), so ground-truth `cardinality_table` construction and
+    naive-join verification scale across devices.
+  * `filtered_join` is the fused XJoin hot path: estimator inference + XDT
+    thresholding run as one device program; the single host sync reads the
+    positive count to pick a power-of-two capacity bucket; compaction +
+    exact verification then run as a second device program (gather the
+    positives, count, scatter back) — skipped queries cost nothing.
+  * `stream` wraps that path for serving: feed query batches, get per-batch
+    results; compiled programs are reused across batches because every
+    shape is bucketed.
+
+Backend matrix (DESIGN.md §2): per-shard compute is the Pallas kernel on
+TPU ("pallas"), the blocked-jnp path elsewhere ("jnp"/"auto"), or the
+unblocked oracle ("ref" — no padding, used as the bit-for-bit reference).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                    # moved to the stable namespace in
+    from jax import shard_map           # newer JAX; experimental on 0.4.x
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+
+def _shard_mapped(f, mesh, in_specs, out_specs):
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:                   # newer API dropped check_rep
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+from repro.kernels import ops, ref
+from repro.kernels.range_count import range_count_hist_pallas
+
+
+def _bucket_size(n: int, block: int) -> int:
+    """Round n up to a bucketed multiple of block (recompile bounding).
+
+    Power-of-two growth, refined with quarter steps once those are still
+    block multiples — shape count stays logarithmic but padding overshoot
+    is capped at 25% (a pure power-of-two bucket wastes up to ~50% of the
+    work on padding rows at large n)."""
+    if n <= block:
+        return block
+    b = block
+    while b < n:
+        b *= 2
+    if b >= 8 * block:
+        for eighths in (5, 6, 7):
+            c = (b // 8) * eighths
+            if c >= n:
+                return c
+    return b
+
+
+def _pad_rows_np(x: np.ndarray, n: int) -> np.ndarray:
+    if x.shape[0] >= n:
+        return x
+    pad = np.zeros((n - x.shape[0],) + x.shape[1:], x.dtype)
+    return np.concatenate([x, pad])
+
+
+def _q_blocked_hist(q, r, eps, *, metric, block_q, block_r, nr_valid):
+    """[n, m] histogram, scanning q in block_q tiles so the fused
+    compare tensor stays O(block_q * block_r * m). q rows % block_q == 0."""
+    nblk = q.shape[0] // block_q
+    qb = q.reshape(nblk, block_q, q.shape[1])
+    out = jax.lax.map(
+        lambda x: ops.blocked_hist(x, r, eps, metric=metric,
+                                   block_r=block_r, nr_valid=nr_valid), qb)
+    return out.reshape(nblk * block_q, eps.shape[0])
+
+
+def _data_size(mesh, data_axis: str) -> int:
+    return int(mesh.shape.get(data_axis, 1)) if mesh is not None else 1
+
+
+@functools.lru_cache(maxsize=128)
+def _hist_program(mesh, data_axis, backend, metric, block_q, block_r,
+                  eps_chunk, nr_valid):
+    """Compiled (optionally shard_map'ped) sweep. Module-level cache so
+    engines over the same (mesh, |R|) share one XLA executable."""
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+
+        def shard_fn(q, r, eps):
+            return range_count_hist_pallas(
+                q, r, eps, metric=metric, nr_valid=nr_valid, block_q=block_q,
+                block_r=block_r, eps_chunk=eps_chunk, interpret=interpret)
+    elif backend == "ref":
+        def shard_fn(q, r, eps):
+            return ref.range_count_hist(q, r, eps, metric)
+    else:
+        def shard_fn(q, r, eps):
+            return _q_blocked_hist(q, r, eps, metric=metric, block_q=block_q,
+                                   block_r=block_r, nr_valid=nr_valid)
+
+    if _data_size(mesh, data_axis) > 1:
+        shard_fn = _shard_mapped(shard_fn, mesh,
+                                 in_specs=(P(data_axis), P(), P()),
+                                 out_specs=P(data_axis))
+    return jax.jit(shard_fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
+                     nr_valid):
+    """Fused compact -> verify -> scatter. `capacity` is the bucketed static
+    shape; `n_pos` rides along as a device scalar so the same executable
+    serves every occupancy of a bucket."""
+
+    def prog(q, pos, n_pos, r, eps, *, capacity: int):
+        idx = jnp.nonzero(pos, size=capacity, fill_value=0)[0]
+        valid = jnp.arange(capacity) < n_pos
+        qpos = jnp.take(q, idx, axis=0)
+        if _data_size(mesh, data_axis) > 1:
+            qpos = jax.lax.with_sharding_constraint(
+                qpos, NamedSharding(mesh, P(data_axis)))
+        eps1 = jnp.reshape(eps, (1,)).astype(jnp.float32)
+        if backend == "ref":
+            found = ref.range_count_hist(qpos, r, eps1, metric)[:, 0]
+        elif capacity > block_q and capacity % block_q == 0:
+            # large buckets get the same query tiling as the main sweep so
+            # the compare temporaries stay O(block_q * block_r)
+            found = _q_blocked_hist(qpos, r, eps1, metric=metric,
+                                    block_q=block_q, block_r=block_r,
+                                    nr_valid=nr_valid)[:, 0]
+        else:
+            found = ops.blocked_hist(qpos, r, eps1, metric=metric,
+                                     block_r=block_r, nr_valid=nr_valid)[:, 0]
+        # invalid (padding) lanes all scatter-add 0 onto row 0
+        contrib = jnp.where(valid, found, 0).astype(jnp.int32)
+        return jnp.zeros((q.shape[0],), jnp.int32).at[idx].add(contrib)
+
+    return jax.jit(prog, static_argnames=("capacity",))
+
+
+@dataclass
+class EngineJoinResult:
+    counts: np.ndarray      # int32 [n] exact neighbor counts (0 for skipped)
+    n_searched: int         # queries that reached verification
+    t_filter: float
+    t_search: float
+
+
+class JoinEngine:
+    """Device-resident exact join over a fixed index set R.
+
+    mesh: optional `jax.sharding.Mesh` with a `data_axis` axis (use
+    `launch.mesh.make_data_mesh()`); queries shard over it, R replicates.
+    Without a mesh everything runs single-device through the same programs.
+    """
+
+    def __init__(self, R, metric: str = "cosine", *, mesh=None,
+                 backend: str = "auto", block_q: int = 256, block_r: int = 512,
+                 block: int = 512, eps_chunk: int = 8, data_axis: str = "data"):
+        self.metric = metric
+        self.backend = ops._resolve(backend)
+        self.mesh, self.data_axis = mesh, data_axis
+        self.block_q, self.block_r, self.block = block_q, block_r, block
+        self.eps_chunk = eps_chunk
+        R = np.asarray(R, np.float32)
+        self.nr, self.dim = R.shape
+        self.ndata = _data_size(mesh, data_axis)
+        # "ref" sweeps the raw R (the oracle handles any shape); the blocked
+        # backends see an R padded to a block_r multiple and mask via nr_valid
+        Rp = R if self.backend == "ref" else _pad_rows_np(
+            R, ((self.nr + block_r - 1) // block_r) * block_r)
+        if mesh is not None:
+            self._q_sharding = NamedSharding(mesh, P(data_axis))
+            self._Rdev = jax.device_put(Rp, NamedSharding(mesh, P()))
+        else:
+            self._q_sharding = None
+            self._Rdev = jnp.asarray(Rp)
+        self._filter_progs: dict = {}
+
+    # ------------------------------------------------------------- plumbing
+    def _pad_q(self, Q) -> np.ndarray:
+        """Bucket the query count to a power-of-two multiple of one full
+        mesh sweep (block_q rows per device) — bounds recompiles AND keeps
+        per-shard shapes block-aligned."""
+        Q = np.asarray(Q, np.float32)
+        return _pad_rows_np(Q, _bucket_size(len(Q), self.block_q * self.ndata))
+
+    def _put_q(self, qp: np.ndarray) -> jax.Array:
+        if self._q_sharding is not None:
+            return jax.device_put(qp, self._q_sharding)
+        return jnp.asarray(qp)
+
+    def _pad_eps(self, eps_grid) -> np.ndarray:
+        e = np.asarray(eps_grid, np.float32).reshape(-1)
+        if self.backend == "pallas":
+            pad = (-len(e)) % self.eps_chunk
+            if pad:
+                e = np.concatenate([e, np.full((pad,), np.inf, np.float32)])
+        return e
+
+    # ------------------------------------------------------- range counting
+    def device_range_count_hist(self, Q, eps_grid) -> jax.Array:
+        """Sharded sweep; returns the DEVICE array [n_padded, m_padded]
+        (query axis distributed over the data axis). Callers that want the
+        exact [n, m] table use `range_count_hist`."""
+        qp = self._pad_q(Q)
+        ep = self._pad_eps(eps_grid)
+        prog = _hist_program(self.mesh, self.data_axis, self.backend,
+                             self.metric, self.block_q, self.block_r,
+                             self.eps_chunk, self.nr)
+        return prog(self._put_q(qp), self._Rdev, jnp.asarray(ep))
+
+    def range_count_hist(self, Q, eps_grid) -> np.ndarray:
+        """counts[i, j] = #-neighbors of Q[i] in R within eps_grid[j]."""
+        m = np.asarray(eps_grid).reshape(-1).shape[0]
+        out = self.device_range_count_hist(Q, eps_grid)
+        return np.asarray(out)[: len(Q), :m]
+
+    def range_count(self, Q, eps: float) -> np.ndarray:
+        return self.range_count_hist(Q, [float(eps)])[:, 0]
+
+    def cardinality_table(self, points, eps_grid, *,
+                          exclude_self: bool = False) -> np.ndarray:
+        t = self.range_count_hist(points, eps_grid)
+        if exclude_self:
+            t = np.maximum(t - 1, 0)
+        return t
+
+    # ------------------------------------------------- fused filtered join
+    def _filter_program(self, predict):
+        # keyed by the fn object itself (estimators memoize it): survives
+        # refits without id-reuse aliasing, and the key pins the fn alive
+        _, fn = predict
+        prog = self._filter_progs.get(fn)
+        if prog is None:
+            def program(params, q, eps, thr, n_valid):
+                X = jnp.concatenate(
+                    [q, jnp.full((q.shape[0], 1), eps, jnp.float32)], axis=1)
+                preds = fn(params, X)
+                pos = (preds > thr) & (jnp.arange(q.shape[0]) < n_valid)
+                return preds, pos, jnp.sum(pos, dtype=jnp.int32)
+            prog = jax.jit(program)
+            self._filter_progs[fn] = prog
+        return prog
+
+    def filtered_join(self, Q, eps: float, *, predict=None, threshold=None,
+                      verdicts=None, block: int | None = None
+                      ) -> EngineJoinResult:
+        """One fused filter -> threshold -> compact -> verify pass.
+
+        Either pass `predict` = (params, fn) from an estimator's
+        `device_predict_fn()` plus the XDT `threshold` (fully fused path),
+        or a precomputed host bool `verdicts` array (plug-in filters).
+        `block` overrides the compaction bucket quantum (default self.block).
+        """
+        Q = np.asarray(Q, np.float32)
+        n = len(Q)
+        qp = self._pad_q(Q)
+        qdev = self._put_q(qp)
+        eps_dev = jnp.asarray(eps, jnp.float32)
+
+        t0 = time.perf_counter()
+        if verdicts is not None:
+            pos_host = np.zeros((len(qp),), bool)
+            pos_host[:n] = np.asarray(verdicts, bool)
+            n_pos = int(pos_host.sum())
+            pos_dev = (jax.device_put(pos_host, self._q_sharding)
+                       if self._q_sharding is not None else jnp.asarray(pos_host))
+            n_pos_dev = jnp.asarray(n_pos, jnp.int32)
+        else:
+            params, _ = predict
+            prog = self._filter_program(predict)
+            _, pos_dev, n_pos_dev = prog(
+                params, qdev, eps_dev, jnp.asarray(threshold, jnp.float32),
+                jnp.asarray(n, jnp.int32))
+            n_pos = int(n_pos_dev)          # the single host sync
+        t_filter = time.perf_counter() - t0
+
+        if n_pos == 0:
+            return EngineJoinResult(np.zeros((n,), np.int32), 0, t_filter, 0.0)
+
+        t1 = time.perf_counter()
+        capacity = min(_bucket_size(n_pos, block or self.block), len(qp))
+        cprog = _compact_program(self.mesh, self.data_axis, self.backend,
+                                 self.metric, self.block_q, self.block_r,
+                                 self.nr)
+        counts = cprog(qdev, pos_dev, n_pos_dev, self._Rdev, eps_dev,
+                       capacity=capacity)
+        counts = np.asarray(counts)[:n]
+        t_search = time.perf_counter() - t1
+        return EngineJoinResult(counts, n_pos, t_filter, t_search)
+
+    # ------------------------------------------------------------ streaming
+    def stream(self, batches: Iterable, eps: float, *, predict=None,
+               threshold=None) -> Iterator[EngineJoinResult]:
+        """Serving loop: iterate query batches through `filtered_join`.
+        Bucketed shapes mean steady-state batches hit compiled programs;
+        R and the estimator stay device-resident across the whole stream."""
+        for Q in batches:
+            yield self.filtered_join(Q, eps, predict=predict,
+                                     threshold=threshold)
+
+
+def sharded_range_count_hist(Q, R, eps_grid, *, metric: str = "cosine",
+                             mesh=None, backend: str = "auto",
+                             block_q: int = 256, block_r: int = 512,
+                             data_axis: str = "data") -> np.ndarray:
+    """One-shot functional form of `JoinEngine.range_count_hist` (used by
+    `data.groundtruth.cardinality_table`); prefer a `JoinEngine` when R is
+    swept more than once."""
+    eng = JoinEngine(R, metric, mesh=mesh, backend=backend, block_q=block_q,
+                     block_r=block_r, data_axis=data_axis)
+    return eng.range_count_hist(Q, eps_grid)

@@ -63,9 +63,9 @@ def build_capacity_table(assignments: np.ndarray, n_buckets: int,
     return table
 
 
-@functools.partial(jax.jit, static_argnames=("metric",))
-def _verify_block(R, q, cand, eps, *, metric):
-    """counts of unique candidates within eps. q [bq,d], cand [bq,C] (-1 pad)."""
+def _verify_block_impl(R, q, cand, eps, *, metric):
+    """counts of unique candidates within eps. q [bq,d], cand [bq,C] (-1 pad).
+    Traceable — composes under the blocked scan below."""
     cand_sorted = jnp.sort(cand, axis=1)
     dup = jnp.concatenate([jnp.zeros((cand.shape[0], 1), bool),
                            cand_sorted[:, 1:] == cand_sorted[:, :-1]], axis=1)
@@ -79,20 +79,41 @@ def _verify_block(R, q, cand, eps, *, metric):
     return jnp.sum(valid & (d <= eps), axis=1, dtype=jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "block"))
+def _verify_blocks(R, q, cand, eps, *, metric, block):
+    """lax.map over q blocks — ONE device program for the whole candidate
+    set (q rows % block == 0), peak memory still O(block * C * d)."""
+    nb = q.shape[0] // block
+    qb = q.reshape(nb, block, q.shape[1])
+    cb = cand.reshape(nb, block, cand.shape[1])
+    out = jax.lax.map(
+        lambda xc: _verify_block_impl(R, xc[0], xc[1], eps, metric=metric),
+        (qb, cb))
+    return out.reshape(-1)
+
+
 def verify_candidates(R: np.ndarray, Q: np.ndarray, cand_ids: np.ndarray,
-                      eps: float, metric: str, *, block: int = 32) -> np.ndarray:
+                      eps: float, metric: str, *, block: int = 32,
+                      chunk: int = 8192) -> np.ndarray:
     """Exact verification of candidate lists. cand_ids [q, C] int32 (-1 pad).
-    Returns int32 [q] counts of unique true neighbors among candidates."""
+    Returns int32 [q] counts of unique true neighbors among candidates.
+    Queries are padded to a bucketed multiple of `block` (bounded
+    recompiles) and verified in one device call per `chunk` — the chunk
+    bounds device residency of the [q, C] candidate matrix; typical query
+    sets fit in a single call.
+    """
+    from repro.core.engine import _bucket_size
+    n = len(Q)
     Rj = jnp.asarray(R)
-    out = np.empty((len(Q),), np.int32)
-    for i in range(0, len(Q), block):
-        j = min(i + block, len(Q))
-        qb = jnp.asarray(Q[i:j])
-        cb = jnp.asarray(cand_ids[i:j])
-        # pad the final partial block to keep shapes static
-        if j - i < block:
-            qb = jnp.concatenate([qb, jnp.zeros((block - (j - i),) + qb.shape[1:], qb.dtype)])
-            cb = jnp.concatenate([cb, jnp.full((block - (j - i),) + cb.shape[1:], -1, cb.dtype)])
-        cnt = _verify_block(Rj, qb, cb, jnp.float32(eps), metric=metric)
+    out = np.empty((n,), np.int32)
+    for i in range(0, n, chunk):
+        j = min(i + chunk, n)
+        n_pad = _bucket_size(j - i, block)
+        qb = np.zeros((n_pad,) + Q.shape[1:], np.float32)
+        qb[:j - i] = Q[i:j]
+        cb = np.full((n_pad,) + cand_ids.shape[1:], -1, np.int32)
+        cb[:j - i] = cand_ids[i:j]
+        cnt = _verify_blocks(Rj, jnp.asarray(qb), jnp.asarray(cb),
+                             jnp.float32(eps), metric=metric, block=block)
         out[i:j] = np.asarray(cnt)[:j - i]
     return out

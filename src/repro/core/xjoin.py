@@ -5,9 +5,17 @@ LSBF baseline): the filter predicts which queries have more than tau
 neighbors, and only those are ranged by the base method.
 
 TPU-native skipping (DESIGN.md §3): predicted-positive queries are
-*compacted* host-side into static-shape blocks (power-of-two bucketed to
-bound recompiles) rather than masked — skipped queries genuinely cost
-nothing on device. Negatives are reported with 0 found neighbors.
+*compacted* into static-shape blocks (power-of-two bucketed to bound
+recompiles) rather than masked — skipped queries genuinely cost nothing on
+device. Negatives are reported with 0 found neighbors.
+
+Execution (DESIGN.md §4): given a `JoinEngine`, the whole hot path —
+estimator inference, XDT comparison, positive-query compaction and exact
+verification — runs as fused device programs against the engine's resident
+R (sharded over the mesh's data axis when the engine has one). Without an
+engine, or for base methods that are not the exact brute-force search, the
+original host-side compaction path is used. `run_stream` exposes the same
+path for serving query batches.
 
 Paper default configs (§VI-A):
   * XJoin            = Naive base + FPR-based XDT (5% tolerance), tau = 50
@@ -17,12 +25,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Iterable, Iterator, Optional
 
 import numpy as np
 
+from repro.core.engine import JoinEngine, _bucket_size
 from repro.core.joins import make_join
 from repro.core.joins.lsbf import LSBF
+from repro.core.joins.naive import NaiveJoin
 from repro.core.xling import XlingConfig, XlingFilter
 
 
@@ -49,26 +59,18 @@ class JoinResult:
         return float(np.sum(np.minimum(self.counts, true_counts)) / denom)
 
 
-def _bucket_size(n: int, block: int) -> int:
-    """Round n up to a power-of-two multiple of block (recompile bounding)."""
-    if n <= block:
-        return block
-    b = block
-    while b < n:
-        b *= 2
-    return b
-
-
 class FilteredJoin:
     def __init__(self, base, *, filter=None, tau: int = 0,
                  xdt_mode: Optional[str] = None,
-                 fpr_tolerance: Optional[float] = None, block: int = 512):
+                 fpr_tolerance: Optional[float] = None, block: int = 512,
+                 engine: Optional[JoinEngine] = None):
         self.base = base
         self.filter = filter
         self.tau = tau
         self.xdt_mode = xdt_mode
         self.fpr_tolerance = fpr_tolerance
         self.block = block
+        self.engine = engine
 
     def _verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
         f = self.filter
@@ -84,8 +86,46 @@ class FilteredJoin:
             return np.asarray(f(Q, eps), bool)
         raise TypeError(f"unsupported filter {type(f)}")
 
+    # ----------------------------------------------------------- engine path
+    def _engine_usable(self) -> bool:
+        """The fused verify is exact brute-force vs the engine's R — only
+        valid when the engine IS the base naive search's engine (identity,
+        not just shape: a same-sized engine over a different R would
+        silently verify against the wrong index set)."""
+        return (self.engine is not None and isinstance(self.base, NaiveJoin)
+                and self.engine is self.base.engine)
+
+    def _run_engine(self, Q: np.ndarray, eps: float) -> JoinResult:
+        f = self.filter
+        predict = threshold = verdicts = None
+        t0 = time.perf_counter()
+        if (isinstance(f, XlingFilter)
+                and hasattr(f.estimator, "device_predict_fn")):
+            predict = f.estimator.device_predict_fn()
+            # calibrate the threshold through the same device fn that will
+            # produce the online predictions (float-parity at the boundary)
+            threshold = f.xdt(eps, self.tau, mode=self.xdt_mode,
+                              fpr_tolerance=self.fpr_tolerance,
+                              predict=predict)
+        else:
+            verdicts = self._verdicts(Q, eps)
+        t_host = time.perf_counter() - t0   # host filter / XDT-selection cost
+        res = self.engine.filtered_join(Q, eps, predict=predict,
+                                        threshold=threshold, verdicts=verdicts,
+                                        block=self.block)
+        return JoinResult(
+            counts=res.counts, n_queries=len(Q), n_searched=res.n_searched,
+            t_filter=res.t_filter + t_host, t_search=res.t_search,
+            meta={"eps": eps, "tau": self.tau,
+                  "base": getattr(self.base, "name", "?"),
+                  "filter": type(f).__name__ if f else None,
+                  "engine": True})
+
+    # -------------------------------------------------------------- host path
     def run(self, Q: np.ndarray, eps: float) -> JoinResult:
         Q = np.asarray(Q, np.float32)
+        if self._engine_usable():
+            return self._run_engine(Q, eps)
         t0 = time.perf_counter()
         pos = self._verdicts(Q, eps)
         t_filter = time.perf_counter() - t0
@@ -109,19 +149,31 @@ class FilteredJoin:
                                 "base": getattr(self.base, "name", "?"),
                                 "filter": type(self.filter).__name__ if self.filter else None})
 
+    def run_stream(self, batches: Iterable[np.ndarray], eps: float
+                   ) -> Iterator[JoinResult]:
+        """Serving form: yields one JoinResult per query batch. With an
+        engine, compiled programs and device residency persist across
+        batches (bucketed shapes)."""
+        for Q in batches:
+            yield self.run(np.asarray(Q, np.float32), eps)
+
 
 # ---------------------------------------------------------------- factories
 def build_xjoin(R: np.ndarray, metric: str, *, xling_cfg: XlingConfig | None = None,
                 tau: int = 50, fpr_tolerance: float = 0.05,
                 cache_key: tuple | None = None, block: int = 512,
-                backend: str = "auto") -> FilteredJoin:
-    """The paper's XJoin: brute-force base + Xling (FPR-XDT, tau=50)."""
+                backend: str = "auto", mesh=None,
+                engine: JoinEngine | None = None) -> FilteredJoin:
+    """The paper's XJoin: brute-force base + Xling (FPR-XDT, tau=50),
+    executed through a (optionally mesh-sharded) JoinEngine."""
     cfg = xling_cfg or XlingConfig(metric=metric, xdt_mode="fpr",
                                    fpr_tolerance=fpr_tolerance, backend=backend)
-    filt = XlingFilter(cfg).fit(R, cache_key=cache_key)
-    base = make_join("naive", R, metric, backend=backend)
+    filt = XlingFilter(cfg).fit(R, cache_key=cache_key, mesh=mesh)
+    if engine is None:
+        engine = JoinEngine(R, metric, mesh=mesh, backend=backend, block=block)
+    base = make_join("naive", R, metric, backend=backend, engine=engine)
     return FilteredJoin(base, filter=filt, tau=tau, xdt_mode="fpr",
-                        fpr_tolerance=fpr_tolerance, block=block)
+                        fpr_tolerance=fpr_tolerance, block=block, engine=engine)
 
 
 def enhance_with_xling(base, filt: XlingFilter, *, tau: int = 0,

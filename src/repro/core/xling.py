@@ -59,13 +59,14 @@ class XlingFilter:
 
     # ------------------------------------------------------------------ fit
     def fit(self, R: np.ndarray, *, cache_key: tuple | None = None,
-            target_table: np.ndarray | None = None) -> "XlingFilter":
+            target_table: np.ndarray | None = None, mesh=None) -> "XlingFilter":
         cfg = self.cfg
         self.train_points = np.asarray(R, np.float32)
         if target_table is None:
             target_table = cardinality_table(
                 self.train_points, self.train_points, self.eps_grid, cfg.metric,
-                backend=cfg.backend, cache_key=cache_key, exclude_self=True)
+                backend=cfg.backend, cache_key=cache_key, exclude_self=True,
+                mesh=mesh)
         self.target_table = target_table
 
         select = (atcs_mod.atcs_select if cfg.strategy == "atcs"
@@ -87,28 +88,52 @@ class XlingFilter:
                             np.full((len(Q), 1), eps, np.float32)], axis=1)
         return self.estimator.predict(X, backend=self.cfg.backend)
 
-    def _train_predictions(self, eps: float) -> np.ndarray:
-        key = round(float(eps), 9)
+    def _train_predictions(self, eps: float, predict=None) -> np.ndarray:
+        """Training-set predictions for XDT calibration. `predict` =
+        (params, fn) from the estimator's `device_predict_fn()` calibrates
+        through the SAME inference implementation the engine serves with
+        (host `predict` and the device fn can differ by float-accumulation
+        noise, which matters exactly at the threshold)."""
+        key = (round(float(eps), 9), "host" if predict is None else "device")
         if key not in self._train_preds_cache:
-            self._train_preds_cache[key] = self.predict_counts(self.train_points, eps)
+            if predict is None:
+                preds = self.predict_counts(self.train_points, eps)
+            else:
+                import jax
+                import jax.numpy as jnp
+                params, fn = predict
+                X = np.concatenate(
+                    [self.train_points,
+                     np.full((len(self.train_points), 1), eps, np.float32)],
+                    axis=1)
+                # jit: compiled like the engine's serving program (and not
+                # per-op eager over all of R); result cached per (eps, impl)
+                preds = np.asarray(jax.jit(fn)(params, jnp.asarray(X)),
+                                   np.float32)
+            self._train_preds_cache[key] = preds
         return self._train_preds_cache[key]
 
     def _targets_at(self, eps: float) -> np.ndarray:
         if self.cfg.target_mode == "interp":
             return xdt_mod.interp_targets(self.eps_grid, self.target_table, eps)
-        # "exact": the naive method — a fresh range count at this eps
+        # "exact": the naive method — a fresh range count at this eps.
+        # Clamp at 0 after the self-match subtraction (mirrors
+        # cardinality_table): an isolated point has count 1 (itself) and
+        # must target 0, not -1, or it biases XDT selection low.
         from repro.kernels import ops
-        return np.asarray(ops.range_count(self.train_points, self.train_points,
-                                          float(eps), metric=self.cfg.metric,
-                                          backend=self.cfg.backend)) - 1  # self-match
+        cnt = np.asarray(ops.range_count(self.train_points, self.train_points,
+                                         float(eps), metric=self.cfg.metric,
+                                         backend=self.cfg.backend))
+        return np.maximum(cnt - 1, 0)
 
     def xdt(self, eps: float, tau: int = 0, *, mode: str | None = None,
-            fpr_tolerance: float | None = None) -> float:
+            fpr_tolerance: float | None = None, predict=None) -> float:
         mode = mode or self.cfg.xdt_mode
         tol = self.cfg.fpr_tolerance if fpr_tolerance is None else fpr_tolerance
-        key = (round(float(eps), 9), int(tau), mode, round(tol, 6), self.cfg.target_mode)
+        key = (round(float(eps), 9), int(tau), mode, round(tol, 6),
+               self.cfg.target_mode, "host" if predict is None else "device")
         if key not in self._xdt_cache:
-            preds = self._train_predictions(eps)
+            preds = self._train_predictions(eps, predict)
             targets = self._targets_at(eps)
             self._xdt_cache[key] = xdt_mod.select_xdt(preds, targets, tau,
                                                       mode=mode, fpr_tolerance=tol)

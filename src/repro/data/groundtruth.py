@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels import ops
 from repro.utils import cache_path
 
 # paper §VI-B1: candidate grids per metric, m=100 evenly spaced values
@@ -27,8 +26,13 @@ def cardinality_table(points: np.ndarray, index_set: np.ndarray,
                       eps_grid: np.ndarray, metric: str,
                       *, backend: str = "auto", block: int = 4096,
                       cache_key: tuple | None = None,
-                      exclude_self: bool = False) -> np.ndarray:
+                      exclude_self: bool = False, mesh=None) -> np.ndarray:
     """t[i, j] = #-neighbors of points[i] in index_set within eps_grid[j].
+
+    Runs as ONE sharded device sweep through the engine: the points (query)
+    axis distributes over `mesh`'s data axis when a mesh is given; without
+    one it is a single-device program with bucketed static shapes (the old
+    per-`block` host loop is gone). Counts are identical either way.
 
     exclude_self: subtract the self-match when points IS index_set (the
     paper counts neighbors of training points within their own set; whether
@@ -44,13 +48,13 @@ def cardinality_table(points: np.ndarray, index_set: np.ndarray,
         except (FileNotFoundError, OSError):
             pass
 
-    outs = []
-    for i in range(0, len(points), block):
-        q = points[i:i + block]
-        cnt = np.asarray(ops.range_count_hist(q, index_set, eps_grid,
-                                              metric=metric, backend=backend))
-        outs.append(cnt)
-    t = np.concatenate(outs, axis=0)
+    # `block` (legacy host-chunk size) now bounds the engine's per-device
+    # query tile; the engine scans tiles on device, so values above the
+    # 256-row default no longer trade memory for speed
+    from repro.core.engine import sharded_range_count_hist
+    t = sharded_range_count_hist(points, index_set, eps_grid, metric=metric,
+                                 backend=backend, mesh=mesh,
+                                 block_q=min(block, 256))
     if exclude_self:
         t = t - 1  # every point is its own 0-distance neighbor on the grid
         t = np.maximum(t, 0)

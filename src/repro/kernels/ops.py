@@ -38,9 +38,11 @@ def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block_r", "nr_valid"))
-def _jnp_blocked_hist(q, r, eps_grid, *, metric: str, block_r: int, nr_valid: int):
-    """lax.scan over R blocks: O(block) memory, XLA-fused compare+reduce."""
+def blocked_hist(q, r, eps_grid, *, metric: str, block_r: int, nr_valid: int):
+    """Traceable lax.scan over R blocks: O(block) memory, XLA-fused
+    compare+reduce. r.shape[0] must be a block_r multiple. This is the
+    per-shard compute of the engine's sharded sweep (core/engine.py) —
+    keep it jit-free so it composes under shard_map / outer jits."""
     nr = r.shape[0]
     nblk = nr // block_r
     rb = r.reshape(nblk, block_r, r.shape[1])
@@ -63,6 +65,10 @@ def _jnp_blocked_hist(q, r, eps_grid, *, metric: str, block_r: int, nr_valid: in
     bases = jnp.arange(nblk) * block_r
     out, _ = jax.lax.scan(body, init, (rb, bases))
     return out
+
+
+_jnp_blocked_hist = functools.partial(
+    jax.jit, static_argnames=("metric", "block_r", "nr_valid"))(blocked_hist)
 
 
 def range_count_hist(q, r, eps_grid, *, metric: str = "cosine",

@@ -33,6 +33,7 @@ from repro.parallel.sharding import (activation_sharding, batch_shardings,
                                      cache_shardings, param_shardings,
                                      _batch_axes)
 from repro.optim.adam import OptState
+from repro.utils import cost_analysis_dict
 
 
 def _sds(tree, shardings):
@@ -131,7 +132,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
         }
         rec["fits_16gb"] = rec["memory"]["peak_gb"] <= 16.0
 
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         rec["raw_cost"] = {"flops": ca.get("flops", 0.0),
                            "bytes": ca.get("bytes accessed", 0.0)}
 

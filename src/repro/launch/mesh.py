@@ -1,15 +1,55 @@
-"""Production mesh builders. Functions, not module constants — importing
-this module never touches jax device state."""
+"""Mesh construction — the single version-compatible entry point.
+
+Every mesh in the codebase (production, CPU smoke, elastic rebuilds, the
+engine's data mesh, tests) is built through `make_mesh` here.  JAX moved the
+`axis_types=` kwarg / `jax.sharding.AxisType` enum in post-0.4.x releases;
+`make_mesh` feature-detects them and falls back cleanly, so no module may
+touch `jax.sharding.AxisType` or pass `axis_types=` directly (DESIGN.md §6).
+
+Functions, not module constants — importing this module never touches jax
+device state.
+"""
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+import numpy as np
+
+
+def _axis_types_kw(n_axes: int) -> dict:
+    """`{"axis_types": (Auto,) * n}` on JAX versions that have the enum."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices=None) -> jax.sharding.Mesh:
+    """Version-compatible mesh builder.
+
+    shape/axes as for `jax.make_mesh`.  Pass `devices` (flat sequence, length
+    prod(shape)) to pin an explicit device order (elastic rebuilds); otherwise
+    jax picks a performant order over all local devices.
+    """
+    kw = _axis_types_kw(len(axes))
+    if devices is not None:
+        devs = np.asarray(devices).reshape(tuple(shape))
+        try:
+            return jax.sharding.Mesh(devs, tuple(axes), **kw)
+        except TypeError:       # enum exists but ctor predates the kwarg
+            return jax.sharding.Mesh(devs, tuple(axes))
+    try:
+        return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+    except TypeError:
+        return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_cpu_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -17,5 +57,11 @@ def make_cpu_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(n // data, 1))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(n: int | None = None) -> jax.sharding.Mesh:
+    """1-D `("data",)` mesh over the first n local devices (join engine)."""
+    devs = jax.devices()
+    n = len(devs) if n is None else min(n, len(devs))
+    return make_mesh((n,), ("data",), devices=devs[:n])

@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from repro.configs.xling_paper import SMOKE as WORKLOAD
-from repro.core import XlingConfig, build_xjoin, make_join
+from repro.core import XlingConfig, build_xjoin
 from repro.data import load_dataset
 
 
@@ -39,14 +39,15 @@ def main():
     xj = build_xjoin(R, spec.metric, xling_cfg=xcfg, tau=args.tau,
                      cache_key=(args.dataset, args.n), backend="jnp")
     build_s = time.time() - t0
-    naive = make_join("naive", R, spec.metric, backend="jnp")
+    naive = xj.base       # shares the xjoin engine's device-resident R
 
+    batches = [q for b in range(args.batches)
+               if len(q := S[b * args.batch_size:(b + 1) * args.batch_size])]
     stats = []
-    for b in range(args.batches):
-        q = S[b * args.batch_size:(b + 1) * args.batch_size]
-        if len(q) == 0:
-            break
-        res = xj.run(q, args.eps)
+    # the engine streaming path: R + estimator stay device-resident across
+    # batches, compiled programs are reused (bucketed shapes)
+    for b, res in enumerate(xj.run_stream(batches, args.eps)):
+        q = batches[b]
         true = naive.query_counts(q, args.eps)
         stats.append({
             "batch": b, "queries": int(res.n_queries),

@@ -7,6 +7,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils import memoize_device_fn
+
 
 class LinearEstimator:
     name = "linear"
@@ -16,10 +18,12 @@ class LinearEstimator:
         self.log_target = log_target
         self.w = None
 
-    def _featurize(self, X: np.ndarray) -> np.ndarray:
+    def _featurize(self, X, xp=np):
+        """[point, eps, eps^2, eps^3, 1] features; xp=jnp makes it traceable
+        (single source for the host AND device predict paths)."""
         eps = X[:, -1:]
-        return np.concatenate([X, eps ** 2, eps ** 3,
-                               np.ones((len(X), 1), np.float32)], axis=1)
+        return xp.concatenate([X, eps ** 2, eps ** 3,
+                               xp.ones((X.shape[0], 1), np.float32)], axis=1)
 
     def _transform(self, y):
         return np.log1p(y.astype(np.float32)) if self.log_target else y.astype(np.float32)
@@ -38,6 +42,18 @@ class LinearEstimator:
     def predict(self, X, *, backend: str = "auto") -> np.ndarray:
         raw = self._featurize(np.asarray(X, np.float32)) @ self.w
         return np.asarray(jnp.expm1(raw) if self.log_target else raw, np.float32)
+
+    def device_predict_fn(self):
+        """(params, fn) for the engine's fused filter program (fn memoized
+        per estimator so the engine's program cache hits across calls)."""
+        def build():
+            log = self.log_target
+
+            def fn(w, X):
+                raw = self._featurize(X, xp=jnp) @ w
+                return jnp.expm1(raw) if log else raw
+            return fn
+        return jnp.asarray(self.w), memoize_device_fn(self, self.log_target, build)
 
     def state_dict(self) -> dict:
         return {"kind": np.asarray("linear"), "w": self.w,

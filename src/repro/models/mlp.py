@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.models.train import fit_regressor
+from repro.utils import memoize_device_fn
 
 PAPER_WIDTHS = (512, 512, 256, 128)
 
@@ -73,6 +74,20 @@ class MLPEstimator:
         else:
             raw = self._jit_apply(self.params, jnp.asarray(X))
         return np.asarray(self._untransform(raw), np.float32)
+
+    def device_predict_fn(self):
+        """(params, fn) for the engine's fused filter program: fn(params, X)
+        is traceable and returns predicted counts (count space, f32 [n]).
+        fn is memoized per estimator so the engine's program cache (keyed by
+        fn identity) hits across calls — params stay a call-time argument."""
+        def build():
+            log = self.log_target
+
+            def fn(params, X):
+                raw = apply_mlp(params, X)
+                return jnp.expm1(raw) if log else raw
+            return fn
+        return self.params, memoize_device_fn(self, self.log_target, build)
 
     # persistence -----------------------------------------------------------
     def state_dict(self) -> dict:

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.models.mlp import PAPER_WIDTHS, apply_mlp, init_mlp
 from repro.models.train import fit_regressor
+from repro.utils import memoize_device_fn
 
 
 class RMIEstimator:
@@ -87,6 +88,20 @@ class RMIEstimator:
         raw = self._jit_route(stages_params, jnp.asarray(X))
         out = jnp.expm1(raw) if self.log_target else raw
         return np.asarray(out, np.float32)
+
+    def device_predict_fn(self):
+        """(params, fn) for the engine's fused filter program; the routing
+        bounds (_ylo/_yhi) are baked in at trace time (post-fit), so fn is
+        memoized per (log_target, ylo, yhi) — a refit invalidates it."""
+        def build():
+            log = self.log_target
+
+            def fn(params, X):
+                raw = self._routed_predict(params, X)
+                return jnp.expm1(raw) if log else raw
+            return fn
+        key = (self.log_target, self._ylo, self._yhi)
+        return [list(s) for s in self.stages], memoize_device_fn(self, key, build)
 
     # -- persistence ----------------------------------------------------------
     def state_dict(self) -> dict:

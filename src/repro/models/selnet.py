@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.train import fit_regressor
+from repro.utils import memoize_device_fn
 
 
 def _apply_trunk(params, x):
@@ -70,6 +71,18 @@ class SelNetEstimator:
         raw = self._jit_apply(self.params, jnp.asarray(X))
         out = jnp.expm1(raw) if self.log_target else raw
         return np.asarray(out, np.float32)
+
+    def device_predict_fn(self):
+        """(params, fn) for the engine's fused filter program (fn memoized
+        per estimator so the engine's program cache hits across calls)."""
+        def build():
+            log = self.log_target
+
+            def fn(params, X):
+                raw = self._apply(params, X)
+                return jnp.expm1(raw) if log else raw
+            return fn
+        return self.params, memoize_device_fn(self, self.log_target, build)
 
     def state_dict(self) -> dict:
         out = {"kind": np.asarray("selnet"), "knots": np.asarray(self.knots),

@@ -11,7 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import jax
-import numpy as np
+
+from repro.launch.mesh import make_mesh
 
 
 def best_mesh_shape(n_devices: int, *, prefer_model: int,
@@ -52,6 +53,4 @@ def rescale_plan(mesh: jax.sharding.Mesh, dead_devices: set) -> RescalePlan:
 
 
 def build_mesh(plan: RescalePlan) -> jax.sharding.Mesh:
-    devs = np.array(plan.devices).reshape(plan.new_shape)
-    return jax.sharding.Mesh(devs, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh(plan.new_shape, ("data", "model"), devices=plan.devices)

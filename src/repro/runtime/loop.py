@@ -19,6 +19,7 @@ import numpy as np
 from repro.archs import build_model
 from repro.archs.frontends import make_batch
 from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh
 from repro.launch.steps import make_optimizer
 from repro.optim.compression import CompressionState, make_compressor
 from repro.parallel.sharding import (activation_sharding, _batch_axes,
@@ -76,8 +77,7 @@ def run_training(arch_cfg, loop: TrainLoopConfig, *, mesh=None,
     ckpt = CheckpointManager(loop.ckpt_dir, keep=loop.keep, async_write=False)
 
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
 
     workers = [f"dev{d.id}" for d in mesh.devices.flatten()]
     detector = FailureDetector(workers, timeout_s=1e9)

@@ -68,6 +68,24 @@ def config_dict(cfg: Any) -> dict:
     return dict(cfg)
 
 
+def memoize_device_fn(obj, key, build):
+    """Per-object memo for traceable device predict fns (estimator
+    protocol): the engine's program cache is keyed by fn identity, so the
+    SAME fn object must come back across calls until `key` changes."""
+    if getattr(obj, "_device_fn", None) is None or obj._device_fn_key != key:
+        obj._device_fn, obj._device_fn_key = build(), key
+    return obj._device_fn
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Version-compatible `Compiled.cost_analysis()`: JAX 0.4.x returns a
+    one-dict list (per executable), newer versions the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -13,6 +13,7 @@ from repro.configs import ARCH_IDS, get_config
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_arch_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -31,6 +32,7 @@ def test_arch_smoke_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_arch_prefill_decode_consistency(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -74,6 +76,7 @@ def test_arch_output_shapes():
 
 
 @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 9)])
+@pytest.mark.slow
 def test_flash_attention_grads_vs_oracle(causal, window):
     rng = np.random.default_rng(0)
     B, S, H, K, D, T = 2, 20, 6, 2, 8, 20
@@ -98,6 +101,7 @@ def test_flash_attention_grads_vs_oracle(causal, window):
                                    rtol=5e-4, atol=5e-5)
 
 
+@pytest.mark.slow
 def test_mamba2_chunked_equals_sequential():
     from repro.archs import mamba2
     from repro.archs.spec import init_params
@@ -126,6 +130,7 @@ def test_mamba2_chunked_equals_sequential():
                                np.asarray(cache["ssm"]), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_moe_routes_and_mixes():
     from repro.archs import moe
     from repro.archs.spec import init_params

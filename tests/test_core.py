@@ -115,6 +115,7 @@ def small_dataset_mod():
     return R, S[:200], spec
 
 
+@pytest.mark.slow
 def test_xling_filter_quality(fitted_filter):
     from repro.kernels import ops
     filt, R, S, spec = fitted_filter
@@ -134,6 +135,7 @@ def test_xling_filter_quality(fitted_filter):
     assert rm["fpr"] + rm["fnr"] < 1.0, rm
 
 
+@pytest.mark.slow
 def test_xling_interp_vs_exact_targets_similar(fitted_filter):
     filt, R, S, spec = fitted_filter
     eps = 0.43  # out-of-domain (not on the grid)
@@ -148,6 +150,7 @@ def test_xling_interp_vs_exact_targets_similar(fitted_filter):
     assert abs(x_interp - x_exact) / denom < 0.5, (x_interp, x_exact)
 
 
+@pytest.mark.slow
 def test_xling_save_load_roundtrip(tmp_path, fitted_filter):
     filt, R, S, spec = fitted_filter
     p = str(tmp_path / "xling.npz")

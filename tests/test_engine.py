@@ -1,0 +1,222 @@
+"""The sharded join engine (core/engine.py) + mesh-compat helper.
+
+Covers: single-device engine vs the ref oracle, FilteredJoin compaction
+parity for every verdict pattern, the streaming API, the exact-mode target
+clamp regression, and — in a forced-8-device subprocess, mirroring
+test_system — bit-for-bit equality of the sharded sweep with the ref
+backend while the query axis is genuinely distributed.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import XlingConfig, XlingFilter, make_join
+from repro.core.engine import JoinEngine, _bucket_size, sharded_range_count_hist
+from repro.core.xjoin import FilteredJoin
+from repro.kernels import ops, ref
+
+
+def _unit(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(0)
+    R = _unit(rng, 900, 24)
+    Q = _unit(rng, 157, 24)
+    eps = np.linspace(0.2, 1.8, 23).astype(np.float32)
+    return R, Q, eps
+
+
+# -------------------------------------------------------------- single device
+def test_engine_hist_matches_ref(world):
+    R, Q, eps = world
+    import jax.numpy as jnp
+    want = np.asarray(ref.range_count_hist(jnp.asarray(Q), jnp.asarray(R),
+                                           jnp.asarray(eps), "l2"))
+    for backend in ("jnp", "ref"):
+        eng = JoinEngine(R, "l2", backend=backend)
+        np.testing.assert_array_equal(eng.range_count_hist(Q, eps), want)
+    np.testing.assert_array_equal(
+        sharded_range_count_hist(Q, R, eps, metric="l2", backend="jnp"), want)
+
+
+def test_naive_join_routes_through_engine(world):
+    R, Q, _ = world
+    j = make_join("naive", R, "l2", backend="jnp")
+    assert isinstance(j.engine, JoinEngine)
+    want = np.asarray(ops.range_count(Q, R, 0.8, metric="l2", backend="jnp"))
+    np.testing.assert_array_equal(j.query_counts(Q, 0.8), want)
+
+
+@pytest.mark.parametrize("pattern", ["all_positive", "all_negative", "mixed"])
+def test_filtered_join_compaction_patterns(world, pattern):
+    """Engine compaction must return counts identical to the host-compaction
+    path for every verdict shape."""
+    R, Q, _ = world
+    rng = np.random.default_rng(3)
+    verdicts = {"all_positive": np.ones(len(Q), bool),
+                "all_negative": np.zeros(len(Q), bool),
+                "mixed": rng.random(len(Q)) > 0.5}[pattern]
+    base = make_join("naive", R, "l2", backend="jnp")
+    filt = lambda Q_, eps_: verdicts  # noqa: E731
+    host = FilteredJoin(base, filter=filt).run(Q, 0.8)
+    eng = FilteredJoin(base, filter=filt, engine=base.engine).run(Q, 0.8)
+    assert eng.meta.get("engine") is True
+    assert eng.n_searched == host.n_searched == int(verdicts.sum())
+    np.testing.assert_array_equal(eng.counts, host.counts)
+    true = np.asarray(ops.range_count(Q, R, 0.8, metric="l2", backend="jnp"))
+    np.testing.assert_array_equal(eng.counts, np.where(verdicts, true, 0))
+
+
+def test_engine_fused_estimator_path_matches_host(world):
+    R, Q, _ = world
+    cfg = XlingConfig(estimator="nn", metric="l2", epochs=3, backend="jnp", m=12)
+    filt = XlingFilter(cfg).fit(R)
+    base = make_join("naive", R, "l2", backend="jnp")
+    eng = FilteredJoin(base, filter=filt, tau=0, xdt_mode="fpr",
+                       engine=base.engine)
+    host = FilteredJoin(base, filter=filt, tau=0, xdt_mode="fpr")
+    r_eng, r_host = eng.run(Q, 0.8), host.run(Q, 0.8)
+    assert r_eng.meta.get("engine") is True
+    # same estimator math on both paths -> same verdicts -> same counts
+    np.testing.assert_array_equal(r_eng.counts, r_host.counts)
+    assert r_eng.n_searched == r_host.n_searched
+
+
+def test_engine_streaming_matches_oneshot(world):
+    R, Q, _ = world
+    cfg = XlingConfig(estimator="nn", metric="l2", epochs=3, backend="jnp", m=12)
+    filt = XlingFilter(cfg).fit(R)
+    base = make_join("naive", R, "l2", backend="jnp")
+    fj = FilteredJoin(base, filter=filt, tau=0, xdt_mode="fpr",
+                      engine=base.engine)
+    one = fj.run(Q, 0.8)
+    batches = [Q[:64], Q[64:128], Q[128:]]
+    results = list(fj.run_stream(batches, 0.8))
+    assert len(results) == 3
+    np.testing.assert_array_equal(
+        np.concatenate([r.counts for r in results]), one.counts)
+    assert sum(r.n_searched for r in results) == one.n_searched
+    # the engine-level stream (predict + threshold) agrees with the join-level
+    predict = filt.estimator.device_predict_fn()
+    thr = filt.xdt(0.8, 0, mode="fpr", predict=predict)
+    eng_results = list(base.engine.stream(batches, 0.8, predict=predict,
+                                          threshold=thr))
+    np.testing.assert_array_equal(
+        np.concatenate([r.counts for r in eng_results]), one.counts)
+
+
+def test_engine_filter_program_cache_stable(world):
+    """device_predict_fn must hand back a memoized fn so the engine's
+    program cache hits across run() calls — one compiled filter program per
+    estimator, not one per batch (the serving steady-state guarantee)."""
+    R, Q, _ = world
+    cfg = XlingConfig(estimator="nn", metric="l2", epochs=2, backend="jnp", m=12)
+    filt = XlingFilter(cfg).fit(R)
+    base = make_join("naive", R, "l2", backend="jnp")
+    fj = FilteredJoin(base, filter=filt, tau=0, xdt_mode="fpr",
+                      engine=base.engine)
+    for _ in range(3):
+        fj.run(Q, 0.8)
+    assert len(base.engine._filter_progs) == 1
+
+
+def test_bucket_size_reexport():
+    # _bucket_size moved to engine; xjoin re-exports it (test_property uses it)
+    from repro.core.xjoin import _bucket_size as xb
+    assert xb is _bucket_size
+    assert _bucket_size(513, 512) == 1024
+
+
+# ------------------------------------------------- exact-target clamp (bugfix)
+def test_exact_targets_clamped_on_outliers():
+    """An isolated point has range-count 1 (itself); after the self-match
+    subtraction its exact-mode target must clamp to 0, matching the interp
+    targets built from cardinality_table — not go to -1 and bias XDT."""
+    rng = np.random.default_rng(7)
+    # tight cluster around e1 ...
+    core = _unit(rng, 120, 8) * 0.05
+    core[:, 0] += 1.0
+    core /= np.linalg.norm(core, axis=1, keepdims=True)
+    # ... plus 6 mutually-orthogonal isolated points. At norm 0.5 they do
+    # not even self-match on the cosine grid (d_self = 1 - 0.25 = 0.75 >
+    # 0.4), so their raw exact count is 0 and the unclamped target is -1.
+    outliers = 0.5 * np.eye(8, dtype=np.float32)[2:]
+    R = np.concatenate([core, outliers]).astype(np.float32)
+    cfg = XlingConfig(estimator="linear", metric="cosine", m=10,
+                      backend="jnp", target_mode="exact")
+    filt = XlingFilter(cfg).fit(R)
+    eps = float(filt.eps_grid[0])
+    exact = filt._targets_at(eps)
+    assert (exact >= 0).all(), exact.min()
+    interp = np.asarray(
+        __import__("repro.core.xdt", fromlist=["interp_targets"]).interp_targets(
+            filt.eps_grid, filt.target_table, eps))
+    # both conventions agree on the isolated points: target exactly 0
+    iso = exact[len(core):]
+    np.testing.assert_array_equal(iso, np.zeros_like(iso))
+    np.testing.assert_allclose(exact, interp, atol=1e-6)
+
+
+# ------------------------------------------------------- multi-device (mesh)
+@pytest.mark.slow
+def test_sharded_engine_subprocess_8dev():
+    """Forced 8-host-device subprocess (mirrors test_system): the sharded
+    sweep must distribute the query axis over all devices and stay
+    bit-for-bit equal to the ref backend, for the raw engine AND for
+    cardinality_table; the compact/verify program must agree too."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import numpy as np, jax\n"
+        "from repro.launch.mesh import make_data_mesh\n"
+        "from repro.core.engine import JoinEngine\n"
+        "from repro.data.groundtruth import cardinality_table\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(1)\n"
+        "def unit(n, d):\n"
+        "    x = rng.normal(size=(n, d)).astype(np.float32)\n"
+        "    return x / np.linalg.norm(x, axis=1, keepdims=True)\n"
+        "R, Q = unit(700, 16), unit(357, 16)\n"
+        "eps = np.linspace(0.2, 1.8, 19).astype(np.float32)\n"
+        "mesh = make_data_mesh()\n"
+        "eng = JoinEngine(R, 'l2', mesh=mesh, backend='jnp')\n"
+        "out = eng.device_range_count_hist(Q, eps)\n"
+        "assert len({s.device for s in out.addressable_shards}) == 8\n"
+        "ref_eng = JoinEngine(R, 'l2', backend='ref')\n"
+        "want = ref_eng.range_count_hist(Q, eps)\n"
+        "np.testing.assert_array_equal(eng.range_count_hist(Q, eps), want)\n"
+        "t_mesh = cardinality_table(Q, R, eps, 'l2', backend='jnp', mesh=mesh)\n"
+        "t_ref = cardinality_table(Q, R, eps, 'l2', backend='ref')\n"
+        "np.testing.assert_array_equal(t_mesh, t_ref)\n"
+        "v = rng.random(len(Q)) > 0.4\n"
+        "res = eng.filtered_join(Q, float(eps[9]), verdicts=v)\n"
+        "np.testing.assert_array_equal(res.counts, np.where(v, want[:, 9], 0))\n"
+        "print('ENGINE_SHARDED_OK')\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         capture_output=True, text=True, timeout=300)
+    assert "ENGINE_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ------------------------------------------------------------- mesh compat
+def test_make_mesh_no_axistype_dependency():
+    """The compat helper must build meshes on JAX versions without
+    jax.sharding.AxisType (the installed 0.4.x) and with explicit devices."""
+    import jax
+    from repro.launch.mesh import make_cpu_mesh, make_data_mesh, make_mesh
+    m = make_mesh((1, 1), ("data", "model"))
+    assert m.axis_names == ("data", "model")
+    m2 = make_mesh((1,), ("data",), devices=jax.devices()[:1])
+    assert m2.devices.shape == (1,)
+    assert make_cpu_mesh().axis_names == ("data", "model")
+    assert make_data_mesh().axis_names == ("data",)

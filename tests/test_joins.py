@@ -76,6 +76,7 @@ def test_lsbf_is_a_filter(data, truth):
     assert v[gt_pos].mean() > 0.1
 
 
+@pytest.mark.slow
 def test_xjoin_end_to_end(data, truth):
     R, S, spec = data
     xcfg = XlingConfig(estimator="nn", metric=spec.metric, epochs=6,
@@ -90,6 +91,7 @@ def test_xjoin_end_to_end(data, truth):
     assert res50.n_searched <= res.n_searched
 
 
+@pytest.mark.slow
 def test_xling_plugin_on_lsh(data, truth):
     R, S, spec = data
     xcfg = XlingConfig(estimator="nn", metric=spec.metric, epochs=6,

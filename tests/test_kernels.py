@@ -21,6 +21,7 @@ def _unit(rng, n, d, dtype):
     (128, 512, 128, 16),   # exactly tile-aligned
     (200, 700, 300, 100),  # realistic (fasttext dims, paper m=100)
 ])
+@pytest.mark.slow
 def test_range_count_pallas_vs_ref(metric, nq, nr, d, m):
     rng = np.random.default_rng(nq * 7 + nr)
     q = _unit(rng, nq, d, np.float32)
@@ -35,6 +36,7 @@ def test_range_count_pallas_vs_ref(metric, nq, nr, d, m):
 
 
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_range_count_dtypes(dtype):
     rng = np.random.default_rng(5)
     q = _unit(rng, 24, 32, np.float32).astype(dtype)
@@ -62,6 +64,7 @@ def test_range_count_jnp_backend_matches():
         np.testing.assert_array_equal(want, got)
 
 
+@pytest.mark.slow
 def test_range_count_monotone_in_eps():
     rng = np.random.default_rng(9)
     q, r = _unit(rng, 20, 16, np.float32), _unit(rng, 100, 16, np.float32)
@@ -74,6 +77,7 @@ def test_range_count_monotone_in_eps():
 
 @pytest.mark.parametrize("widths", [(32,), (64, 32), (128, 64, 32)])
 @pytest.mark.parametrize("din,n", [(17, 40), (301, 100), (66, 256)])
+@pytest.mark.slow
 def test_fused_mlp_vs_ref(widths, din, n):
     rng = np.random.default_rng(din + n)
     dims = (din,) + widths + (1,)
@@ -87,6 +91,7 @@ def test_fused_mlp_vs_ref(widths, din, n):
     np.testing.assert_allclose(want, got, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_fused_mlp_bf16():
     rng = np.random.default_rng(1)
     params = [(rng.normal(size=(20, 16)).astype(np.float32) * 0.2,
@@ -109,6 +114,7 @@ def test_fused_mlp_bf16():
     (2, 128, 128, 6, 6, 64, 64, True),    # MHA
     (1, 64, 64, 40, 1, 96, 64, True),     # MLA-materialized-ish dims
 ])
+@pytest.mark.slow
 def test_flash_attention_pallas_vs_oracle(B, S, T, H, K, Dk, Dv, causal):
     from repro.archs.layers import chunked_attention
     from repro.kernels.flash_attention import flash_attention_pallas
@@ -123,6 +129,7 @@ def test_flash_attention_pallas_vs_oracle(B, S, T, H, K, Dk, Dv, causal):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_flash_attention_pallas_bf16():
     from repro.archs.layers import chunked_attention
     from repro.kernels.flash_attention import flash_attention_pallas
@@ -136,6 +143,7 @@ def test_flash_attention_pallas_bf16():
                                np.asarray(got, np.float32), rtol=3e-2, atol=3e-2)
 
 
+@pytest.mark.slow
 def test_flash_attention_pallas_kv_valid():
     from repro.archs.layers import chunked_attention
     from repro.kernels.flash_attention import flash_attention_pallas

@@ -19,6 +19,7 @@ def _toy_problem(n=600, d=8, seed=0):
 
 
 @pytest.mark.parametrize("name", sorted(ESTIMATORS))
+@pytest.mark.slow
 def test_estimator_fit_predict(name):
     X, y = _toy_problem()
     est = make_estimator(name, X.shape[1], **(
@@ -34,6 +35,7 @@ def test_estimator_fit_predict(name):
 
 
 @pytest.mark.parametrize("name", ["nn", "rmi", "selnet"])
+@pytest.mark.slow
 def test_estimator_state_dict_roundtrip(name):
     X, y = _toy_problem(n=200)
     est = make_estimator(name, X.shape[1], epochs=4)
@@ -57,6 +59,7 @@ def test_selnet_monotone_in_eps():
     assert (np.diff(preds, axis=1) >= -1e-3 * np.abs(preds[:, :-1]) - 1e-4).all()
 
 
+@pytest.mark.slow
 def test_atcs_improves_training_on_uneven_data():
     """Qualitative check of the paper's Table IV claim at miniature scale:
     on an unevenly-distributed corpus (glove-like), ATCS training-eps

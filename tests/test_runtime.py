@@ -80,8 +80,8 @@ def test_best_mesh_shape():
 
 
 def test_rescale_plan_single_device():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     plan = rescale_plan(mesh, set())
     assert plan.n_lost == 0
     assert plan.new_shape[0] * plan.new_shape[1] == 1
@@ -153,6 +153,7 @@ def test_int8_roundtrip_accuracy():
 
 
 # ---------------------------------------------------- fault-tolerant loop
+@pytest.mark.slow
 def test_training_loop_survives_failure(tmp_path):
     from repro.configs import get_config
     from repro.runtime.loop import TrainLoopConfig, run_training
@@ -166,6 +167,7 @@ def test_training_loop_survives_failure(tmp_path):
     assert all(np.isfinite(hist["loss"]))
 
 
+@pytest.mark.slow
 def test_training_loop_with_compression(tmp_path):
     from repro.configs import get_config
     from repro.runtime.loop import TrainLoopConfig, run_training
