@@ -1,0 +1,23 @@
+# Developer entry points (see DESIGN.md §8 for the lane definitions).
+PYTEST := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest
+
+.PHONY: test fast docs-check ci serve example
+
+test:        ## tier-1: the full suite (what the driver runs)
+	$(PYTEST) -x -q
+
+fast:        ## developer fast lane (< 90 s)
+	$(PYTEST) -q -m "not slow"
+
+docs-check:  ## fail if a public def in engine/xjoin/serve lacks a docstring
+	python scripts/check_docstrings.py
+
+ci:          ## docs gate + fast lane, one entry point
+	bash scripts/ci.sh
+
+serve:       ## smoke-run the async serving driver
+	PYTHONPATH=src python -m repro.launch.serve --n 3000 --batches 3 \
+	    --batch-size 128 --epochs 5 --verify lsh --depth 2
+
+example:     ## the worked streaming example (DESIGN.md §5)
+	python examples/stream_lsh_verify.py

@@ -1,7 +1,11 @@
 """Figure 2: end-to-end join time + recall for all methods.
 
 Methods: Naive (exact, ground truth), Grid/SuperEGO-like (exact), LSH,
-KmeansTree, Naive-LSBF, IVFPQ, and XJoin (paper config: FPR XDT, tau=50).
+KmeansTree, Naive-LSBF, IVFPQ, and XJoin (paper config: FPR XDT, tau=50)
+— plus the beyond-paper engine verification backends (DESIGN.md §5):
+xjoin-lsh / xjoin-ivfpq replace the exact verification sweep with an
+approximate probe + on-device candidate verification, so their recall
+column measures the verification backend against the exact oracle.
 """
 from __future__ import annotations
 
@@ -63,6 +67,14 @@ def run(datasets=DATASETS) -> list:
         assert xjoin._engine_usable()  # fused filter->compact->verify path
         xjoin.run(S[:64], EPS)  # warm
         methods["xjoin"] = lambda: xjoin.run(S, EPS).counts
+        # engine verification backends (DESIGN.md §5): same filter, the
+        # exact sweep swapped for approximate probe + device verification
+        for vb in ("lsh", "ivfpq"):
+            xj_v = FilteredJoin(naive, filter=filt, tau=50, xdt_mode="fpr",
+                                fpr_tolerance=0.05, engine=engine, verify=vb)
+            xj_v.run(S[:64], EPS)  # warm (also builds the verifier index)
+            methods[f"xjoin-{vb}"] = (
+                lambda xj_=xj_v: xj_.run(S, EPS).counts)
 
         for name, fn in methods.items():
             fn()   # warm: jit shapes for the FULL query set

@@ -10,8 +10,13 @@ Three implementations of the same join (glove, eps=0.45, tau=50):
   C. xjoin-compacted— the TPU-native realization (DESIGN.md §3): positives
                       are host-compacted into power-of-two-bucketed blocks;
                       skipped queries cost nothing.
-Plus a block-size sweep of the verification kernel (the CPU analogue of the
-BlockSpec tile sweep on TPU).
+  D. xjoin-streamed — C served as batches through the asynchronous
+                      double-buffered pipeline (DESIGN.md §5): batch k+1
+                      dispatches while batch k's results transfer back;
+                      compared against the same batches run synchronously.
+Plus the verification-backend matrix (exact vs lsh vs ivfpq — time and
+recall vs the exact oracle) and a block-size sweep of the verification
+kernel (the CPU analogue of the BlockSpec tile sweep on TPU).
 """
 from __future__ import annotations
 
@@ -61,11 +66,43 @@ def run() -> dict:
     def rec(c):
         return float(np.minimum(c, truth).sum() / max(truth.sum(), 1))
 
+    # ---- D: async double-buffered stream vs synchronous batches -------------
+    bs = 512
+    batches = [S[i:i + bs] for i in range(0, len(S), bs)]
+    list(xj.run_stream(batches, EPS, depth=2))      # warm all bucket shapes
+    t0 = time.perf_counter()
+    sync_res = [xj.run(b, EPS) for b in batches]    # per-batch synchronous
+    t_sync = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stream_res = list(xj.run_stream(batches, EPS, depth=2))
+    t_stream = time.perf_counter() - t0
+    c_stream = np.concatenate([r.counts for r in stream_res])
+    assert np.array_equal(
+        c_stream, np.concatenate([r.counts for r in sync_res]))
+
+    # ---- verification-backend matrix (DESIGN.md §5) -------------------------
+    verify_rows = {}
+    for vb in ("lsh", "ivfpq"):
+        xj_v = FilteredJoin(naive, filter=filt, tau=TAU, xdt_mode="fpr",
+                            engine=naive.engine, verify=vb)
+        xj_v.run(S, EPS)                            # warm + build the index
+        t0 = time.perf_counter()
+        res_v = xj_v.run(S, EPS)
+        t_v = time.perf_counter() - t0
+        verify_rows[vb] = {"t": t_v, "recall": rec(res_v.counts),
+                           "speedup_vs_exact": t_comp / max(t_v, 1e-9)}
+        emit(f"perf_xjoin/verify_{vb}", t_v * 1e6 / len(S),
+             f"recall={verify_rows[vb]['recall']:.3f}")
+
     out = {
         "n_queries": len(S), "searched_frac": res.n_searched / len(S),
         "naive": {"t": t_naive, "recall": rec(c_naive)},
         "masked": {"t": t_masked, "recall": rec(c_masked)},
         "compacted": {"t": t_comp, "recall": rec(res.counts)},
+        "streamed": {"t": t_stream, "t_sync_batches": t_sync,
+                     "recall": rec(c_stream), "batch_size": bs,
+                     "speedup_vs_sync_batches": t_sync / max(t_stream, 1e-9)},
+        "verify_backends": verify_rows,
         "speedup_masked": t_naive / t_masked,
         "speedup_compacted": t_naive / t_comp,
     }
@@ -74,6 +111,8 @@ def run() -> dict:
          f"recall={rec(c_masked):.3f};speedup={out['speedup_masked']:.2f}x")
     emit("perf_xjoin/compacted", t_comp * 1e6 / len(S),
          f"recall={rec(res.counts):.3f};speedup={out['speedup_compacted']:.2f}x")
+    emit("perf_xjoin/streamed", t_stream * 1e6 / len(S),
+         f"speedup_vs_sync={out['streamed']['speedup_vs_sync_batches']:.2f}x")
 
     # ---- verification-kernel block sweep ------------------------------------
     sweeps = []

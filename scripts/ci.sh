@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Single CI entry point (DESIGN.md §8 test lanes):
+#   scripts/ci.sh          — docs gate + fast lane (default; target < 90 s)
+#   scripts/ci.sh full     — docs gate + tier-1 full suite (includes slow)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== docs-check =="
+python scripts/check_docstrings.py
+
+echo "== pytest (${1:-fast} lane) =="
+if [ "${1:-fast}" = "full" ]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+else
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow"
+fi

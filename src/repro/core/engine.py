@@ -13,10 +13,20 @@ This module is the execution layer that makes that true:
   * `filtered_join` is the fused XJoin hot path: estimator inference + XDT
     thresholding run as one device program; the single host sync reads the
     positive count to pick a power-of-two capacity bucket; compaction +
-    exact verification then run as a second device program (gather the
+    verification then run as a second device program (gather the
     positives, count, scatter back) — skipped queries cost nothing.
-  * `stream` wraps that path for serving: feed query batches, get per-batch
-    results; compiled programs are reused across batches because every
+  * Verification is pluggable (DESIGN.md §5): `verify="exact"` is the
+    brute-force sweep above; `verify="lsh"` / `"ivfpq"` replace the sweep
+    with an approximate index probe over the same device-resident R —
+    candidates are verified on device through
+    `joins.common.verify_candidates`, so counts stay exact *per candidate*
+    and recall is measured against the exact path.
+  * `stream` / `StreamSession` wrap that path for serving as an
+    asynchronous double-buffered pipeline (DESIGN.md §5): batch *k+1*'s
+    device programs are dispatched while batch *k*'s verification is still
+    in flight and its results transfer back via non-blocking host copies;
+    a bounded in-flight queue caps memory and `flush()` is the shutdown
+    barrier. Compiled programs are reused across batches because every
     shape is bucketed.
 
 Backend matrix (DESIGN.md §2): per-shard compute is the Pallas kernel on
@@ -25,6 +35,7 @@ unblocked oracle ("ref" — no padding, used as the bit-for-bit reference).
 """
 from __future__ import annotations
 
+import collections
 import functools
 import time
 from dataclasses import dataclass
@@ -151,15 +162,137 @@ def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
         contrib = jnp.where(valid, found, 0).astype(jnp.int32)
         return jnp.zeros((q.shape[0],), jnp.int32).at[idx].add(contrib)
 
-    return jax.jit(prog, static_argnames=("capacity",))
+    # the padded query buffer is dead after this program — donate it on TPU
+    # so the compact output can reuse its HBM (CPU donation only warns)
+    donate = (0,) if jax.default_backend() == "tpu" else ()
+    return jax.jit(prog, static_argnames=("capacity",), donate_argnums=donate)
 
 
 @dataclass
 class EngineJoinResult:
-    counts: np.ndarray      # int32 [n] exact neighbor counts (0 for skipped)
+    """Result of one filtered-join batch through the engine."""
+    counts: np.ndarray      # int32 [n] neighbor counts (0 for skipped)
     n_searched: int         # queries that reached verification
     t_filter: float
     t_search: float
+    verify: str = "exact"   # which verification backend produced `counts`
+
+
+#: Verification backends accepted by `filtered_join(verify=...)` /
+#: `stream(verify=...)`. "exact" is the engine's fused brute-force sweep;
+#: the others probe an approximate index and verify candidates on device
+#: (DESIGN.md §5).
+VERIFY_BACKENDS = ("exact", "lsh", "ivfpq")
+
+
+def _start_host_copy(arr) -> None:
+    """Kick off a non-blocking device→host transfer so the later
+    `np.asarray` materialization finds the bytes already resident."""
+    try:
+        arr.copy_to_host_async()
+    except AttributeError:
+        pass                                # backend without async copies
+
+
+class _StagedBatch:
+    """Stage-1 handle: queries resident, filter program dispatched, nothing
+    synced. `n_pos` is None until `JoinEngine._commit_verify` reads it."""
+    __slots__ = ("Q", "n", "eps", "qdev", "eps_dev", "pos_dev", "n_pos_dev",
+                 "n_pos", "t_stage")
+
+
+class PendingJoin:
+    """Stage-2 handle for one in-flight batch.
+
+    Verification is dispatched and the device→host copy is running;
+    `result()` is the only blocking point and is idempotent. Async-path
+    timing convention: `t_search` = dispatch-side cost + whatever wait
+    `result()` actually observed (≈0 when the pipeline hid the readback).
+    """
+
+    def __init__(self, finalize: Callable[[], np.ndarray], *, verify: str,
+                 n_searched: int, t_filter: float, t_dispatch: float):
+        self._finalize = finalize
+        self._verify = verify
+        self._n_searched = n_searched
+        self._t_filter = t_filter
+        self._t_dispatch = t_dispatch
+        self._res: Optional[EngineJoinResult] = None
+
+    def result(self) -> EngineJoinResult:
+        """Materialize (blocking if the device is still busy)."""
+        if self._res is None:
+            t0 = time.perf_counter()
+            counts = self._finalize()
+            self._res = EngineJoinResult(
+                counts, self._n_searched, self._t_filter,
+                self._t_dispatch + (time.perf_counter() - t0), self._verify)
+        return self._res
+
+
+class StreamSession:
+    """Asynchronous double-buffered serving session (DESIGN.md §5).
+
+    Push interface under `JoinEngine.stream`: `submit(Q)` stages the new
+    batch's device programs, commits the previously staged batch's
+    verification, and returns any results forced out by the `depth` bound;
+    `flush()` is the shutdown barrier — it commits the staged batch,
+    materializes everything outstanding, and returns the remaining results.
+
+    Invariants:
+      * results come back in submission order (FIFO), bit-identical to
+        per-batch `filtered_join` calls;
+      * at most `depth` committed batches plus one staged batch are in
+        flight, bounding device memory at (depth + 2) padded batches;
+      * the only per-batch host sync is the staged batch's positive-count
+        read, issued AFTER the next batch's programs are enqueued;
+      * after `flush()` returns, no engine program of this session is
+        outstanding.
+    """
+
+    def __init__(self, engine: "JoinEngine", eps: float, *, predict=None,
+                 threshold=None, verify: str = "exact", depth: int = 2,
+                 block: int | None = None):
+        if verify not in VERIFY_BACKENDS:
+            raise ValueError(f"verify={verify!r}: expected one of "
+                             f"{sorted(VERIFY_BACKENDS)}")
+        self.engine = engine
+        self.eps = float(eps)
+        self.predict, self.threshold = predict, threshold
+        self.verify, self.depth, self.block = verify, max(int(depth), 0), block
+        self._staged: Optional[_StagedBatch] = None
+        self._inflight: collections.deque[PendingJoin] = collections.deque()
+
+    def _commit_staged(self) -> None:
+        if self._staged is not None:
+            self._inflight.append(self.engine._commit_verify(
+                self._staged, verify=self.verify, block=self.block))
+            self._staged = None
+
+    def submit(self, Q, *, verdicts=None) -> list[EngineJoinResult]:
+        """Feed one query batch; returns the (possibly empty) list of OLDER
+        batches' results whose readback completed under the depth bound.
+        `verdicts` optionally carries precomputed host filter verdicts for
+        this batch (plug-in filters without a device predict fn)."""
+        st = self.engine._stage_filter(
+            Q, self.eps, predict=self.predict, threshold=self.threshold,
+            verdicts=verdicts)
+        self._commit_staged()               # previous batch enters verify
+        self._staged = st
+        out = []
+        while len(self._inflight) > self.depth:
+            out.append(self._inflight.popleft().result())
+        return out
+
+    def flush(self) -> list[EngineJoinResult]:
+        """Barrier: drain the pipeline, returning all remaining results in
+        submission order. Safe to call repeatedly; the session can keep
+        submitting afterwards (the pipeline just restarts cold)."""
+        self._commit_staged()
+        out = []
+        while self._inflight:
+            out.append(self._inflight.popleft().result())
+        return out
 
 
 class JoinEngine:
@@ -180,6 +313,10 @@ class JoinEngine:
         self.eps_chunk = eps_chunk
         R = np.asarray(R, np.float32)
         self.nr, self.dim = R.shape
+        # host-side R backs lazy approximate-verifier construction (§5);
+        # np.asarray above is a no-copy view for float32 input
+        self._R_host = R
+        self._verifiers: dict = {}
         self.ndata = _data_size(mesh, data_axis)
         # "ref" sweeps the raw R (the oracle handles any shape); the blocked
         # backends see an R padded to a block_r multiple and mask via nr_valid
@@ -233,10 +370,13 @@ class JoinEngine:
         return np.asarray(out)[: len(Q), :m]
 
     def range_count(self, Q, eps: float) -> np.ndarray:
+        """counts[i] = #-neighbors of Q[i] in R within a single eps."""
         return self.range_count_hist(Q, [float(eps)])[:, 0]
 
     def cardinality_table(self, points, eps_grid, *,
                           exclude_self: bool = False) -> np.ndarray:
+        """Ground-truth target table over the eps grid (optionally with
+        each point's self-match removed, for R-vs-R training tables)."""
         t = self.range_count_hist(points, eps_grid)
         if exclude_self:
             t = np.maximum(t - 1, 0)
@@ -259,62 +399,173 @@ class JoinEngine:
             self._filter_progs[fn] = prog
         return prog
 
+    # --------------------------------------------- stage 1: filter dispatch
+    def _stage_filter(self, Q, eps: float, *, predict=None, threshold=None,
+                      verdicts=None) -> "_StagedBatch":
+        """Dispatch the filter program for one batch WITHOUT any host sync.
+
+        Pads + `device_put`s the queries (async H2D), enqueues the fused
+        estimator/XDT program (or uploads precomputed host verdicts), and
+        returns a `_StagedBatch` handle. Nothing here waits on the device,
+        so batch k+1 can be staged while batch k's verification is still
+        executing — the double-buffering half of DESIGN.md §5."""
+        st = _StagedBatch()
+        st.Q = np.asarray(Q, np.float32)
+        st.n = len(st.Q)
+        st.eps = float(eps)
+        t0 = time.perf_counter()
+        qp = self._pad_q(st.Q)
+        st.qdev = self._put_q(qp)
+        st.eps_dev = jnp.asarray(st.eps, jnp.float32)
+        if predict is None and verdicts is None:
+            verdicts = np.ones((st.n,), bool)   # no filter: verify everything
+        if verdicts is not None:
+            pos_host = np.zeros((len(qp),), bool)
+            pos_host[:st.n] = np.asarray(verdicts, bool)
+            st.n_pos = int(pos_host.sum())
+            st.pos_dev = (jax.device_put(pos_host, self._q_sharding)
+                          if self._q_sharding is not None
+                          else jnp.asarray(pos_host))
+            st.n_pos_dev = jnp.asarray(st.n_pos, jnp.int32)
+        else:
+            params, _ = predict
+            prog = self._filter_program(predict)
+            _, st.pos_dev, st.n_pos_dev = prog(
+                params, st.qdev, st.eps_dev,
+                jnp.asarray(threshold, jnp.float32),
+                jnp.asarray(st.n, jnp.int32))
+            st.n_pos = None                 # read at commit time
+        st.t_stage = time.perf_counter() - t0
+        return st
+
+    # ------------------------------------- stage 2: verify dispatch (commit)
+    def _commit_verify(self, st: "_StagedBatch", *, verify: str = "exact",
+                       block: int | None = None) -> "PendingJoin":
+        """Read the staged batch's positive count and dispatch verification.
+
+        The `int(n_pos_dev)` here is the pipeline's only per-batch host
+        sync; it waits on this batch's *filter* program only — earlier
+        batches' (much deeper) verification programs keep running behind
+        it. Returns a `PendingJoin`; device→host copies are started
+        non-blocking so `result()` is usually a no-wait."""
+        if verify not in VERIFY_BACKENDS:   # fail fast, not data-dependently
+            raise ValueError(f"verify={verify!r}: expected one of "
+                             f"{sorted(VERIFY_BACKENDS)}")
+        t0 = time.perf_counter()
+        if st.n_pos is None:
+            st.n_pos = int(st.n_pos_dev)
+        t_filter = st.t_stage + (time.perf_counter() - t0)
+        n, n_pos = st.n, st.n_pos
+
+        if n_pos == 0:
+            return PendingJoin(lambda: np.zeros((n,), np.int32), verify=verify,
+                               n_searched=0, t_filter=t_filter, t_dispatch=0.0)
+
+        t1 = time.perf_counter()
+        if verify == "exact":
+            capacity = min(_bucket_size(n_pos, block or self.block),
+                           st.qdev.shape[0])
+            cprog = _compact_program(self.mesh, self.data_axis, self.backend,
+                                     self.metric, self.block_q, self.block_r,
+                                     self.nr)
+            counts_dev = cprog(st.qdev, st.pos_dev, st.n_pos_dev, self._Rdev,
+                               st.eps_dev, capacity=capacity)
+            _start_host_copy(counts_dev)
+            finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
+        else:
+            from repro.core.joins.common import dispatch_verify_candidates
+            searcher = self.verifier(verify)
+            # host probing needs the verdicts; the filter program is already
+            # complete (n_pos was just read), so this transfer is cheap
+            pos_host = np.asarray(st.pos_dev)[:n]
+            idx = np.nonzero(pos_host)[0]
+            qpos = st.Q[idx]
+            cand = searcher.candidates(qpos)
+            pend = dispatch_verify_candidates(
+                self._Rdev, qpos, cand, st.eps, self.metric,
+                backend=self.backend)
+
+            def finalize():
+                counts = np.zeros((n,), np.int32)
+                counts[idx] = pend.result()
+                return counts
+        t_dispatch = time.perf_counter() - t1
+        return PendingJoin(finalize, verify=verify, n_searched=n_pos,
+                           t_filter=t_filter, t_dispatch=t_dispatch)
+
+    # ------------------------------------------------ verification backends
+    def verifier(self, name: str, **params):
+        """The approximate searcher backing `verify=name` (DESIGN.md §5).
+
+        Built lazily over the engine's host-side R and cached per name, so
+        a serving session pays index construction once. Calling with
+        `params` always (re)builds the index with those params and replaces
+        the cached instance (e.g. `engine.verifier("lsh", l=16,
+        n_probes=8)` before streaming is the tuning hook — a silent
+        cache hit here would drop the override); calling without params
+        returns the cached index, building with defaults on first use.
+        The searcher must expose `candidates(Q) -> int32 [q, C]` (-1 pad).
+        """
+        if name not in VERIFY_BACKENDS or name == "exact":
+            raise ValueError(
+                f"verifier={name!r}: expected an approximate backend "
+                f"({sorted(set(VERIFY_BACKENDS) - {'exact'})}; "
+                "'exact' is the fused sweep — it has no index to build)")
+        v = None if params else self._verifiers.get(name)
+        if v is None:
+            from repro.core.joins import make_join   # circular at import time
+            v = make_join(name, self._R_host, self.metric, **params)
+            if not hasattr(v, "candidates"):
+                raise TypeError(f"join {name!r} exposes no candidates()")
+            self._verifiers[name] = v
+        return v
+
+    # --------------------------------------------------- one-shot join call
     def filtered_join(self, Q, eps: float, *, predict=None, threshold=None,
-                      verdicts=None, block: int | None = None
-                      ) -> EngineJoinResult:
-        """One fused filter -> threshold -> compact -> verify pass.
+                      verdicts=None, block: int | None = None,
+                      verify: str = "exact") -> EngineJoinResult:
+        """One synchronous filter -> threshold -> compact -> verify pass.
 
         Either pass `predict` = (params, fn) from an estimator's
         `device_predict_fn()` plus the XDT `threshold` (fully fused path),
         or a precomputed host bool `verdicts` array (plug-in filters).
-        `block` overrides the compaction bucket quantum (default self.block).
-        """
-        Q = np.asarray(Q, np.float32)
-        n = len(Q)
-        qp = self._pad_q(Q)
-        qdev = self._put_q(qp)
-        eps_dev = jnp.asarray(eps, jnp.float32)
-
-        t0 = time.perf_counter()
-        if verdicts is not None:
-            pos_host = np.zeros((len(qp),), bool)
-            pos_host[:n] = np.asarray(verdicts, bool)
-            n_pos = int(pos_host.sum())
-            pos_dev = (jax.device_put(pos_host, self._q_sharding)
-                       if self._q_sharding is not None else jnp.asarray(pos_host))
-            n_pos_dev = jnp.asarray(n_pos, jnp.int32)
-        else:
-            params, _ = predict
-            prog = self._filter_program(predict)
-            _, pos_dev, n_pos_dev = prog(
-                params, qdev, eps_dev, jnp.asarray(threshold, jnp.float32),
-                jnp.asarray(n, jnp.int32))
-            n_pos = int(n_pos_dev)          # the single host sync
-        t_filter = time.perf_counter() - t0
-
-        if n_pos == 0:
-            return EngineJoinResult(np.zeros((n,), np.int32), 0, t_filter, 0.0)
-
-        t1 = time.perf_counter()
-        capacity = min(_bucket_size(n_pos, block or self.block), len(qp))
-        cprog = _compact_program(self.mesh, self.data_axis, self.backend,
-                                 self.metric, self.block_q, self.block_r,
-                                 self.nr)
-        counts = cprog(qdev, pos_dev, n_pos_dev, self._Rdev, eps_dev,
-                       capacity=capacity)
-        counts = np.asarray(counts)[:n]
-        t_search = time.perf_counter() - t1
-        return EngineJoinResult(counts, n_pos, t_filter, t_search)
+        `block` overrides the compaction bucket quantum (default
+        self.block); `verify` picks the verification backend ("exact" |
+        "lsh" | "ivfpq", DESIGN.md §5). This is the synchronous reference
+        path — `stream` pipelines the same two stages."""
+        st = self._stage_filter(Q, eps, predict=predict, threshold=threshold,
+                                verdicts=verdicts)
+        return self._commit_verify(st, verify=verify, block=block).result()
 
     # ------------------------------------------------------------ streaming
+    def stream_session(self, eps: float, *, predict=None, threshold=None,
+                       verify: str = "exact", depth: int = 2,
+                       block: int | None = None) -> "StreamSession":
+        """Open an asynchronous `StreamSession` (push interface) over this
+        engine; `stream` is the pull/iterator form of the same pipeline."""
+        return StreamSession(self, eps, predict=predict, threshold=threshold,
+                             verify=verify, depth=depth, block=block)
+
     def stream(self, batches: Iterable, eps: float, *, predict=None,
-               threshold=None) -> Iterator[EngineJoinResult]:
-        """Serving loop: iterate query batches through `filtered_join`.
-        Bucketed shapes mean steady-state batches hit compiled programs;
-        R and the estimator stay device-resident across the whole stream."""
+               threshold=None, verify: str = "exact", depth: int = 2,
+               block: int | None = None) -> Iterator[EngineJoinResult]:
+        """Serving loop: pipeline query batches through the engine.
+
+        Asynchronous double-buffered (DESIGN.md §5): each incoming batch is
+        staged (filter dispatched) before the previous batch's verification
+        is committed, and results are materialized only when more than
+        `depth` batches are in flight — dispatch of batch k+1 overlaps the
+        readback of batch k. Results are yielded in submission order and
+        are bit-identical to per-batch `filtered_join` calls. R, the
+        estimator, and all compiled programs stay device-resident across
+        the whole stream (bucketed shapes). `depth=0` degenerates to
+        commit-then-materialize per batch (still one staged batch of
+        lookahead)."""
+        sess = self.stream_session(eps, predict=predict, threshold=threshold,
+                                   verify=verify, depth=depth, block=block)
         for Q in batches:
-            yield self.filtered_join(Q, eps, predict=predict,
-                                     threshold=threshold)
+            yield from sess.submit(Q)
+        yield from sess.flush()
 
 
 def sharded_range_count_hist(Q, R, eps_grid, *, metric: str = "cosine",

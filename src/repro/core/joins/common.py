@@ -4,6 +4,15 @@ The joins follow a host/device split that mirrors a production FAISS-on-TPU
 style serving stack: index *probing* (data-dependent, pointer-heavy) runs on
 host; candidate *verification* (dense distance math) runs on device in
 static-shape blocks.
+
+`verify_candidates` is also the engine's approximate-verification backend
+(DESIGN.md §5): `JoinEngine` hands it a *device-resident* R (its padded
+replica — candidate ids only ever index valid rows, so padding is inert)
+and uses the non-blocking `dispatch_verify_candidates` form so candidate
+verification overlaps the next batch's dispatch. The `backend` arg mirrors
+the kernel matrix (DESIGN.md §2): "ref" verifies each chunk unpadded with
+the oracle semantics; "jnp"/"auto"/"pallas" use the bucketed blocked path
+(counts are identical — integer comparisons on the same f32 distances).
 """
 from __future__ import annotations
 
@@ -92,28 +101,74 @@ def _verify_blocks(R, q, cand, eps, *, metric, block):
     return out.reshape(-1)
 
 
-def verify_candidates(R: np.ndarray, Q: np.ndarray, cand_ids: np.ndarray,
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _verify_ref(R, q, cand, eps, *, metric):
+    """Unblocked oracle form — no padding, one program per chunk shape
+    (mirrors the "ref" row of the DESIGN.md §2 matrix)."""
+    return _verify_block_impl(R, q, cand, eps, metric=metric)
+
+
+class PendingCounts:
+    """In-flight candidate verification: per-chunk device arrays with their
+    host copies already started. `result()` is the only blocking point."""
+
+    def __init__(self, parts: list, n: int):
+        self._parts = parts                 # [(device_counts, lo, hi)]
+        self._n = n
+
+    def result(self) -> np.ndarray:
+        """Materialize the int32 [q] counts (blocking if still computing)."""
+        out = np.zeros((self._n,), np.int32)
+        for cnt, lo, hi in self._parts:
+            out[lo:hi] = np.asarray(cnt)[: hi - lo]
+        return out
+
+
+def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
+                               eps: float, metric: str, *, block: int = 32,
+                               chunk: int = 8192,
+                               backend: str = "auto") -> PendingCounts:
+    """Non-blocking form of `verify_candidates`: dispatches every chunk's
+    device program, kicks off async device→host copies, and returns a
+    `PendingCounts` handle. `R` may be a host array or an already
+    device-resident replica (e.g. `JoinEngine`'s padded R — candidate ids
+    never reference padding rows, so the extra rows are inert)."""
+    from repro.core.engine import _bucket_size, _start_host_copy
+    from repro.kernels import ops
+    backend = ops._resolve(backend)
+    n = len(Q)
+    Rj = R if isinstance(R, jax.Array) else jnp.asarray(R)
+    parts = []
+    for i in range(0, n, chunk):
+        j = min(i + chunk, n)
+        if backend == "ref":
+            cnt = _verify_ref(Rj, jnp.asarray(Q[i:j], jnp.float32),
+                              jnp.asarray(cand_ids[i:j], jnp.int32),
+                              jnp.float32(eps), metric=metric)
+        else:
+            n_pad = _bucket_size(j - i, block)
+            qb = np.zeros((n_pad,) + Q.shape[1:], np.float32)
+            qb[:j - i] = Q[i:j]
+            cb = np.full((n_pad,) + cand_ids.shape[1:], -1, np.int32)
+            cb[:j - i] = cand_ids[i:j]
+            cnt = _verify_blocks(Rj, jnp.asarray(qb), jnp.asarray(cb),
+                                 jnp.float32(eps), metric=metric, block=block)
+        _start_host_copy(cnt)
+        parts.append((cnt, i, j))
+    return PendingCounts(parts, n)
+
+
+def verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                       eps: float, metric: str, *, block: int = 32,
-                      chunk: int = 8192) -> np.ndarray:
+                      chunk: int = 8192, backend: str = "auto") -> np.ndarray:
     """Exact verification of candidate lists. cand_ids [q, C] int32 (-1 pad).
     Returns int32 [q] counts of unique true neighbors among candidates.
     Queries are padded to a bucketed multiple of `block` (bounded
     recompiles) and verified in one device call per `chunk` — the chunk
     bounds device residency of the [q, C] candidate matrix; typical query
-    sets fit in a single call.
+    sets fit in a single call. `backend` selects the §2 compute path
+    ("ref" = unpadded oracle); counts are backend-invariant.
     """
-    from repro.core.engine import _bucket_size
-    n = len(Q)
-    Rj = jnp.asarray(R)
-    out = np.empty((n,), np.int32)
-    for i in range(0, n, chunk):
-        j = min(i + chunk, n)
-        n_pad = _bucket_size(j - i, block)
-        qb = np.zeros((n_pad,) + Q.shape[1:], np.float32)
-        qb[:j - i] = Q[i:j]
-        cb = np.full((n_pad,) + cand_ids.shape[1:], -1, np.int32)
-        cb[:j - i] = cand_ids[i:j]
-        cnt = _verify_blocks(Rj, jnp.asarray(qb), jnp.asarray(cb),
-                             jnp.float32(eps), metric=metric, block=block)
-        out[i:j] = np.asarray(cnt)[:j - i]
-    return out
+    return dispatch_verify_candidates(R, Q, cand_ids, eps, metric,
+                                      block=block, chunk=chunk,
+                                      backend=backend).result()

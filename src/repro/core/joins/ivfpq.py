@@ -51,7 +51,11 @@ class IVFPQJoin:
             codes[:, s] = np.argmin(d, axis=1).astype(np.uint8)
         return codes
 
-    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+    def candidates(self, Q: np.ndarray) -> np.ndarray:
+        """ADC-ranked candidate ids, int32 [q, k] (-1 padded), k =
+        min(n_candidates, probed pool). Host probing half of the
+        host-probe / device-verify split (common.py); the engine's
+        `verify="ivfpq"` backend consumes this directly."""
         Q = np.asarray(Q, np.float32)
         nq = len(Q)
         # 1. probe the p nearest IVF lists
@@ -61,7 +65,8 @@ class IVFPQJoin:
         cand = self.lists[probes].reshape(nq, -1)             # [q, P*cap]
 
         # 2. ADC: approximate distances from per-segment lookup tables
-        counts = np.empty((nq,), np.int32)
+        k = min(self.n_candidates, cand.shape[1])
+        out = np.empty((nq, k), np.int32)
         blk = 64
         for i in range(0, nq, blk):
             j = min(i + blk, nq)
@@ -77,9 +82,12 @@ class IVFPQJoin:
                 tables.transpose(0, 2, 1),                    # [bq, 256, m]
                 code_blk.astype(np.int64), axis=1).sum(axis=2)
             adc[cb < 0] = np.inf
-            k = min(self.n_candidates, adc.shape[1])
             top = np.argpartition(adc, k - 1, axis=1)[:, :k]
-            top_ids = np.take_along_axis(cb, top, axis=1)
-            counts[i:j] = verify_candidates(self.R, qb, top_ids, float(eps),
-                                            self.metric, block=32)
-        return counts
+            out[i:j] = np.take_along_axis(cb, top, axis=1)
+        return out
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Exact eps-counts over the ADC-ranked candidates (device verify)."""
+        Q = np.asarray(Q, np.float32)
+        return verify_candidates(self.R, Q, self.candidates(Q), float(eps),
+                                 self.metric, block=32)

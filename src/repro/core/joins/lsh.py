@@ -78,11 +78,16 @@ class LSHJoin:
 
     # -- query ----------------------------------------------------------------
     def candidates(self, Q: np.ndarray) -> np.ndarray:
+        """Multiprobe candidate ids, int32 [q, l*n_probes*cap] (-1 padded).
+        Host probing half of the host-probe / device-verify split
+        (common.py); the engine's `verify="lsh"` backend consumes this
+        directly."""
         pb = self._probe_buckets(Q)                          # [q, l, p]
         q = len(Q)
         cand = self.tables[np.arange(self.l)[None, :, None], pb]  # [q, l, p, cap]
         return cand.reshape(q, -1)
 
     def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Exact eps-counts over the probed candidates (device verify)."""
         cand = self.candidates(np.asarray(Q, np.float32))
         return verify_candidates(self.R, Q, cand, float(eps), self.metric)

@@ -10,12 +10,19 @@ recompiles) rather than masked — skipped queries genuinely cost nothing on
 device. Negatives are reported with 0 found neighbors.
 
 Execution (DESIGN.md §4): given a `JoinEngine`, the whole hot path —
-estimator inference, XDT comparison, positive-query compaction and exact
+estimator inference, XDT comparison, positive-query compaction and
 verification — runs as fused device programs against the engine's resident
 R (sharded over the mesh's data axis when the engine has one). Without an
 engine, or for base methods that are not the exact brute-force search, the
-original host-side compaction path is used. `run_stream` exposes the same
-path for serving query batches.
+original host-side compaction path is used.
+
+Streaming & verification backends (DESIGN.md §5): `run_stream` serves
+query batches through the engine's asynchronous double-buffered pipeline
+(batch k+1 dispatches while batch k's results transfer back; `depth`
+bounds the in-flight queue), and `verify="lsh"` / `"ivfpq"` swap the
+exact verification sweep for an approximate index probe + on-device
+candidate verification — sub-linear in |R|, recall measured against the
+exact oracle.
 
 Paper default configs (§VI-A):
   * XJoin            = Naive base + FPR-based XDT (5% tolerance), tau = 50
@@ -38,6 +45,8 @@ from repro.core.xling import XlingConfig, XlingFilter
 
 @dataclass
 class JoinResult:
+    """Per-call join outcome: exact-at-candidates neighbor counts plus the
+    filter/search timing split and provenance metadata."""
     counts: np.ndarray
     n_queries: int
     n_searched: int
@@ -47,6 +56,7 @@ class JoinResult:
 
     @property
     def t_total(self) -> float:
+        """Filter + search wall-clock for this call."""
         return self.t_filter + self.t_search
 
     def recall_vs(self, true_counts: np.ndarray) -> float:
@@ -60,10 +70,17 @@ class JoinResult:
 
 
 class FilteredJoin:
+    """Filter-then-verify join: any base method gated by any filter.
+
+    With an `engine` (and a NaiveJoin base over the same engine) the hot
+    path runs fused on device; `verify` then picks the verification
+    backend — "exact" (brute-force sweep) or "lsh"/"ivfpq" (approximate
+    probe + on-device candidate verification, DESIGN.md §5)."""
+
     def __init__(self, base, *, filter=None, tau: int = 0,
                  xdt_mode: Optional[str] = None,
                  fpr_tolerance: Optional[float] = None, block: int = 512,
-                 engine: Optional[JoinEngine] = None):
+                 engine: Optional[JoinEngine] = None, verify: str = "exact"):
         self.base = base
         self.filter = filter
         self.tau = tau
@@ -71,6 +88,7 @@ class FilteredJoin:
         self.fpr_tolerance = fpr_tolerance
         self.block = block
         self.engine = engine
+        self.verify = verify
 
     def _verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
         f = self.filter
@@ -95,37 +113,54 @@ class FilteredJoin:
         return (self.engine is not None and isinstance(self.base, NaiveJoin)
                 and self.engine is self.base.engine)
 
-    def _run_engine(self, Q: np.ndarray, eps: float) -> JoinResult:
+    def _device_filter_args(self, eps: float):
+        """(predict, threshold) for the fused device filter, or (None, None)
+        when the filter must run on host (per-batch `verdicts` instead).
+        The XDT threshold is calibrated through the same device fn that
+        will produce the online predictions (float-parity at the boundary);
+        for a serving stream this selection happens once, up front."""
         f = self.filter
-        predict = threshold = verdicts = None
-        t0 = time.perf_counter()
         if (isinstance(f, XlingFilter)
                 and hasattr(f.estimator, "device_predict_fn")):
             predict = f.estimator.device_predict_fn()
-            # calibrate the threshold through the same device fn that will
-            # produce the online predictions (float-parity at the boundary)
             threshold = f.xdt(eps, self.tau, mode=self.xdt_mode,
                               fpr_tolerance=self.fpr_tolerance,
                               predict=predict)
-        else:
-            verdicts = self._verdicts(Q, eps)
-        t_host = time.perf_counter() - t0   # host filter / XDT-selection cost
-        res = self.engine.filtered_join(Q, eps, predict=predict,
-                                        threshold=threshold, verdicts=verdicts,
-                                        block=self.block)
+            return predict, threshold
+        return None, None
+
+    def _wrap_engine_result(self, res, n: int, eps: float,
+                            t_host: float = 0.0) -> JoinResult:
+        f = self.filter
         return JoinResult(
-            counts=res.counts, n_queries=len(Q), n_searched=res.n_searched,
+            counts=res.counts, n_queries=n, n_searched=res.n_searched,
             t_filter=res.t_filter + t_host, t_search=res.t_search,
             meta={"eps": eps, "tau": self.tau,
                   "base": getattr(self.base, "name", "?"),
                   "filter": type(f).__name__ if f else None,
-                  "engine": True})
+                  "engine": True, "verify": res.verify})
+
+    def _run_engine(self, Q: np.ndarray, eps: float) -> JoinResult:
+        t0 = time.perf_counter()
+        predict, threshold = self._device_filter_args(eps)
+        verdicts = None if predict is not None else self._verdicts(Q, eps)
+        t_host = time.perf_counter() - t0   # host filter / XDT-selection cost
+        res = self.engine.filtered_join(Q, eps, predict=predict,
+                                        threshold=threshold, verdicts=verdicts,
+                                        block=self.block, verify=self.verify)
+        return self._wrap_engine_result(res, len(Q), eps, t_host)
 
     # -------------------------------------------------------------- host path
     def run(self, Q: np.ndarray, eps: float) -> JoinResult:
+        """One synchronous join pass over a query batch (engine-fused when
+        `_engine_usable`, host compaction otherwise)."""
         Q = np.asarray(Q, np.float32)
         if self._engine_usable():
             return self._run_engine(Q, eps)
+        if self.verify != "exact":
+            raise ValueError(
+                "verify backends other than 'exact' need the engine path "
+                "(NaiveJoin base sharing this FilteredJoin's engine)")
         t0 = time.perf_counter()
         pos = self._verdicts(Q, eps)
         t_filter = time.perf_counter() - t0
@@ -149,13 +184,43 @@ class FilteredJoin:
                                 "base": getattr(self.base, "name", "?"),
                                 "filter": type(self.filter).__name__ if self.filter else None})
 
-    def run_stream(self, batches: Iterable[np.ndarray], eps: float
-                   ) -> Iterator[JoinResult]:
-        """Serving form: yields one JoinResult per query batch. With an
-        engine, compiled programs and device residency persist across
-        batches (bucketed shapes)."""
+    def run_stream(self, batches: Iterable[np.ndarray], eps: float, *,
+                   depth: int = 2) -> Iterator[JoinResult]:
+        """Serving form: yields one JoinResult per query batch, in order.
+
+        On the engine path this is the asynchronous double-buffered
+        pipeline (DESIGN.md §5): batch k+1's programs dispatch while batch
+        k's results transfer back; `depth` bounds the in-flight queue
+        (`depth=0` ≈ synchronous). Results are bit-identical to per-batch
+        `run` calls. Off the engine path it degrades to per-batch `run`.
+        """
+        if not self._engine_usable():
+            for Q in batches:
+                yield self.run(np.asarray(Q, np.float32), eps)
+            return
+        t0 = time.perf_counter()
+        predict, threshold = self._device_filter_args(eps)
+        t_host = time.perf_counter() - t0   # one-time XDT selection cost
+        sess = self.engine.stream_session(eps, predict=predict,
+                                          threshold=threshold,
+                                          verify=self.verify, depth=depth,
+                                          block=self.block)
+        pending: list[tuple[int, float]] = []   # FIFO of (n, host cost)
+
+        def _emit(results):
+            for res in results:
+                n, th = pending.pop(0)
+                yield self._wrap_engine_result(res, n, eps, th)
+
         for Q in batches:
-            yield self.run(np.asarray(Q, np.float32), eps)
+            Q = np.asarray(Q, np.float32)
+            t1 = time.perf_counter()
+            verdicts = None if predict is not None else self._verdicts(Q, eps)
+            th = t_host + (time.perf_counter() - t1)
+            t_host = 0.0                    # charge XDT selection to batch 0
+            pending.append((len(Q), th))
+            yield from _emit(sess.submit(Q, verdicts=verdicts))
+        yield from _emit(sess.flush())
 
 
 # ---------------------------------------------------------------- factories
@@ -163,9 +228,13 @@ def build_xjoin(R: np.ndarray, metric: str, *, xling_cfg: XlingConfig | None = N
                 tau: int = 50, fpr_tolerance: float = 0.05,
                 cache_key: tuple | None = None, block: int = 512,
                 backend: str = "auto", mesh=None,
-                engine: JoinEngine | None = None) -> FilteredJoin:
+                engine: JoinEngine | None = None,
+                verify: str = "exact") -> FilteredJoin:
     """The paper's XJoin: brute-force base + Xling (FPR-XDT, tau=50),
-    executed through a (optionally mesh-sharded) JoinEngine."""
+    executed through a (optionally mesh-sharded) JoinEngine. `verify`
+    selects the verification backend ("exact" | "lsh" | "ivfpq"); tune the
+    approximate index by pre-building it via `engine.verifier(name, ...)`.
+    """
     cfg = xling_cfg or XlingConfig(metric=metric, xdt_mode="fpr",
                                    fpr_tolerance=fpr_tolerance, backend=backend)
     filt = XlingFilter(cfg).fit(R, cache_key=cache_key, mesh=mesh)
@@ -173,7 +242,8 @@ def build_xjoin(R: np.ndarray, metric: str, *, xling_cfg: XlingConfig | None = N
         engine = JoinEngine(R, metric, mesh=mesh, backend=backend, block=block)
     base = make_join("naive", R, metric, backend=backend, engine=engine)
     return FilteredJoin(base, filter=filt, tau=tau, xdt_mode="fpr",
-                        fpr_tolerance=fpr_tolerance, block=block, engine=engine)
+                        fpr_tolerance=fpr_tolerance, block=block,
+                        engine=engine, verify=verify)
 
 
 def enhance_with_xling(base, filt: XlingFilter, *, tau: int = 0,

@@ -4,7 +4,7 @@ Every mesh in the codebase (production, CPU smoke, elastic rebuilds, the
 engine's data mesh, tests) is built through `make_mesh` here.  JAX moved the
 `axis_types=` kwarg / `jax.sharding.AxisType` enum in post-0.4.x releases;
 `make_mesh` feature-detects them and falls back cleanly, so no module may
-touch `jax.sharding.AxisType` or pass `axis_types=` directly (DESIGN.md §6).
+touch `jax.sharding.AxisType` or pass `axis_types=` directly (DESIGN.md §7).
 
 Functions, not module constants — importing this module never touches jax
 device state.

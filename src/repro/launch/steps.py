@@ -10,7 +10,7 @@ from repro.utils import tree_size
 
 def make_optimizer(cfg, n_params: int):
     """bf16 moments for >=30B params so optimizer state fits 16 GB/chip
-    (DESIGN.md §5); full-f32 moments below that."""
+    (DESIGN.md §6); full-f32 moments below that."""
     moment_dtype = jnp.bfloat16 if n_params >= 30e9 else jnp.float32
     return adamw(lr=cosine_warmup(3e-4, 200, 10000), b1=0.9, b2=0.95,
                  weight_decay=0.1, clip_norm=1.0, moment_dtype=moment_dtype)

@@ -2,7 +2,7 @@
 
 Production knobs used by the large-arch configs:
   * ``moment_dtype`` — bf16 second/first moments so that Adam state for the
-    100B+ architectures fits the 16 GB/chip HBM budget (see DESIGN.md §5).
+    100B+ architectures fits the 16 GB/chip HBM budget (see DESIGN.md §6).
   * ``adafactor`` — factored second moments for 2-D params (O(n+m) state).
   * global-norm gradient clipping fused into the update.
 """

@@ -1,6 +1,6 @@
 """Sharding rules: logical param axes -> mesh axes, batch/cache shardings.
 
-Parallelism map (DESIGN.md §5):
+Parallelism map (DESIGN.md §6):
   * FSDP  — params + optimizer state sharded over ("pod","data") via the
             "embed"/"mlp-in" logical dims; XLA all-gathers per scanned layer.
   * TP    — "heads"/"mlp"/"vocab" over the `model` axis.

@@ -1,0 +1,45 @@
+"""Documentation gates: the docs-check tooling and the top-level docs.
+
+Keeps the repo's documented surface from regressing: the docstring checker
+must pass on the serving-surface modules (core/engine.py, core/xjoin.py,
+launch/serve.py), must actually detect violations (not vacuously pass),
+and README.md / DESIGN.md must keep their load-bearing sections.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_check_passes():
+    out = subprocess.run([sys.executable, "scripts/check_docstrings.py"],
+                         cwd=REPO, capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_docs_check_detects_violations(tmp_path):
+    """The gate must flag an undocumented public def — otherwise a checker
+    bug could silently disable the whole docs lane."""
+    bad = tmp_path / "bad.py"
+    bad.write_text('"""mod."""\ndef documented():\n    """ok."""\n'
+                   "def naked():\n    pass\n")
+    out = subprocess.run(
+        [sys.executable, "scripts/check_docstrings.py", str(bad)],
+        cwd=REPO, capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "naked" in out.stdout and "documented" not in out.stdout
+
+
+def test_readme_quickstart_present():
+    text = (REPO / "README.md").read_text()
+    for needle in ("Quickstart", 'pytest -m "not slow"', "DESIGN.md",
+                   "verify", "lsh", "ivfpq"):
+        assert needle in text, f"README.md lost its {needle!r} section"
+
+
+def test_design_documents_streaming_protocol():
+    text = (REPO / "DESIGN.md").read_text()
+    for needle in ("Streaming & verification backends", "flush()",
+                   "In-flight queue invariants", "ivfpq"):
+        assert needle in text, f"DESIGN.md lost {needle!r}"

@@ -1,10 +1,13 @@
 """The sharded join engine (core/engine.py) + mesh-compat helper.
 
 Covers: single-device engine vs the ref oracle, FilteredJoin compaction
-parity for every verdict pattern, the streaming API, the exact-mode target
-clamp regression, and — in a forced-8-device subprocess, mirroring
-test_system — bit-for-bit equality of the sharded sweep with the ref
-backend while the query axis is genuinely distributed.
+parity for every verdict pattern, the streaming API (including the async
+double-buffered pipeline vs the synchronous path, and the StreamSession
+submit/flush invariants), the pluggable verification backends (lsh/ivfpq
+recall floors vs the exact oracle, verify_candidates backend parity), the
+exact-mode target clamp regression, and — in a forced-8-device subprocess,
+mirroring test_system — bit-for-bit equality of the sharded sweep with the
+ref backend while the query axis is genuinely distributed.
 """
 import os
 import subprocess
@@ -110,6 +113,126 @@ def test_engine_streaming_matches_oneshot(world):
                                           threshold=thr))
     np.testing.assert_array_equal(
         np.concatenate([r.counts for r in eng_results]), one.counts)
+
+
+def test_async_stream_bit_identical_to_sync(world):
+    """The async double-buffered pipeline must return results bit-identical
+    to per-batch synchronous `filtered_join` calls (ordering-insensitive:
+    compared as the concatenated multiset AND per-batch)."""
+    R, Q, _ = world
+    cfg = XlingConfig(estimator="nn", metric="l2", epochs=3, backend="jnp", m=12)
+    filt = XlingFilter(cfg).fit(R)
+    base = make_join("naive", R, "l2", backend="jnp")
+    fj = FilteredJoin(base, filter=filt, tau=0, xdt_mode="fpr",
+                      engine=base.engine)
+    # deliberately ragged batch sizes to exercise distinct shape buckets
+    batches = [Q[:50], Q[50:51], Q[51:120], Q[120:]]
+    sync = [fj.run(b, 0.8) for b in batches]
+    for depth in (0, 1, 3, 10):
+        stream = list(fj.run_stream(batches, 0.8, depth=depth))
+        assert len(stream) == len(batches)
+        for s, a in zip(sync, stream):
+            np.testing.assert_array_equal(a.counts, s.counts)
+            assert a.n_searched == s.n_searched
+        np.testing.assert_array_equal(
+            np.sort(np.concatenate([r.counts for r in stream])),
+            np.sort(np.concatenate([r.counts for r in sync])))
+
+
+def test_stream_session_submit_flush_invariants(world):
+    """StreamSession: the in-flight queue stays bounded by `depth`, results
+    come back FIFO, flush() drains everything and is idempotent."""
+    R, Q, _ = world
+    eng = JoinEngine(R, "l2", backend="jnp")
+    rng = np.random.default_rng(9)
+    verdicts = [rng.random(40) > 0.5 for _ in range(6)]
+    sess = eng.stream_session(0.8, depth=2)
+    got = []
+    for i in range(6):
+        out = sess.submit(Q[i * 20:i * 20 + 40], verdicts=verdicts[i])
+        got.extend(out)
+        # bounded: at most depth committed + 1 staged in flight
+        assert len(sess._inflight) <= 2
+    rest = sess.flush()
+    assert len(sess._inflight) == 0 and sess._staged is None
+    assert sess.flush() == []            # idempotent barrier
+    got.extend(rest)
+    assert len(got) == 6                 # every submitted batch came back
+    for i, res in enumerate(got):        # FIFO + correct per-batch counts
+        want = eng.filtered_join(Q[i * 20:i * 20 + 40], 0.8,
+                                 verdicts=verdicts[i])
+        np.testing.assert_array_equal(res.counts, want.counts)
+
+
+# ------------------------------------------------- verification backends
+@pytest.fixture(scope="module")
+def clustered_world():
+    """Clustered corpus/queries sharing centers — enough true pairs that
+    approximate-verifier recall is a meaningful, stable number."""
+    rng = np.random.default_rng(5)
+    d, nc, spread = 32, 6, 0.03
+    c = rng.normal(size=(nc, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+
+    def draw(per):
+        pts = (np.repeat(c, per, axis=0)
+               + rng.normal(size=(nc * per, d)) * spread)
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        return pts.astype(np.float32)
+
+    return draw(150), draw(25)
+
+
+@pytest.mark.parametrize("backend,floor,params", [
+    ("lsh", 0.90, dict(k=10, l=8, n_probes=4, W=2.5)),
+    ("ivfpq", 0.95, dict(C=24, m=8, n_probe=8, n_candidates=600)),
+])
+def test_verify_backend_recall_floor(clustered_world, backend, floor, params):
+    """Approximate verification: counts never exceed the exact sweep (the
+    verification itself is exact over candidates, so precision is 1) and
+    recall vs the exact oracle stays above the configured floor."""
+    R, Q = clustered_world
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier(backend, **params)      # pre-build with tuned params
+    true = eng.range_count(Q, 0.4)
+    assert true.sum() > 1000             # the workload is meaningful
+    res = eng.filtered_join(Q, 0.4, verdicts=np.ones(len(Q), bool),
+                            verify=backend)
+    assert res.verify == backend
+    assert res.n_searched == len(Q)
+    assert (res.counts <= true).all()    # no false pairs
+    recall = float(np.minimum(res.counts, true).sum() / true.sum())
+    assert recall >= floor, f"{backend} recall {recall:.3f} < {floor}"
+    # the streamed form of the same verify backend is bit-identical
+    streamed = list(eng.stream([Q[:70], Q[70:]], 0.4, verify=backend,
+                               depth=2))
+    np.testing.assert_array_equal(
+        np.concatenate([r.counts for r in streamed]), res.counts)
+
+
+def test_verifier_registry(world):
+    R, Q, _ = world
+    eng = JoinEngine(R, "l2", backend="jnp")
+    with pytest.raises(ValueError):
+        eng.filtered_join(Q, 0.8, verdicts=np.ones(len(Q), bool),
+                          verify="annoy")
+    v1 = eng.verifier("lsh", k=6, l=4)
+    assert eng.verifier("lsh") is v1     # cached per name
+
+
+def test_verify_candidates_backend_parity(world):
+    """verify_candidates counts are backend-invariant (§2): the blocked
+    path and the unpadded ref oracle agree, with host or device R."""
+    import jax.numpy as jnp
+    from repro.core.joins.common import verify_candidates
+    R, Q, _ = world
+    rng = np.random.default_rng(4)
+    cand = rng.integers(-1, len(R), size=(len(Q), 37)).astype(np.int32)
+    want = verify_candidates(R, Q, cand, 0.8, "l2", backend="jnp")
+    got_ref = verify_candidates(R, Q, cand, 0.8, "l2", backend="ref")
+    got_dev = verify_candidates(jnp.asarray(R), Q, cand, 0.8, "l2")
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_dev, want)
 
 
 def test_engine_filter_program_cache_stable(world):

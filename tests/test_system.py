@@ -24,7 +24,7 @@ N = 3000
 EPS = 0.45
 
 # every test here either fits a filter end-to-end or spawns a compile
-# subprocess — all slow-lane (DESIGN.md §7)
+# subprocess — all slow-lane (DESIGN.md §8)
 pytestmark = pytest.mark.slow
 
 
