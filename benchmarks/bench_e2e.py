@@ -6,6 +6,10 @@ KmeansTree, Naive-LSBF, IVFPQ, and XJoin (paper config: FPR XDT, tau=50)
 xjoin-lsh / xjoin-ivfpq replace the exact verification sweep with an
 approximate probe + on-device candidate verification, so their recall
 column measures the verification backend against the exact oracle.
+
+All filtered rows compose through the declarative `JoinPlan` API
+(DESIGN.md §9); each plan's serialized `describe()` is recorded next to
+its timing row.
 """
 from __future__ import annotations
 
@@ -14,9 +18,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_filter, save_json, true_counts
-from repro.core import make_join
+from repro.core import JoinPlan, make_join
 from repro.core.joins.lsbf import LSBF
-from repro.core.xjoin import FilteredJoin
 
 DATASETS = ("glove", "sift", "gist")
 EPS = 0.45
@@ -30,6 +33,7 @@ def run(datasets=DATASETS) -> list:
     from benchmarks.common import N
     n = max(N, N_E2E)
     rows = []
+    plans: dict[str, JoinPlan] = {}
     for ds in datasets:
         filt, R, S, spec = get_filter(ds, n=n)
         truth = true_counts(R, S, EPS, spec.metric)
@@ -41,9 +45,9 @@ def run(datasets=DATASETS) -> list:
             return float(np.minimum(counts, truth).sum() / total_pairs)
 
         methods = {}
-        # the naive base and XJoin share one device-resident engine; pass a
-        # data mesh here (launch.mesh.make_data_mesh) to shard the query
-        # axis across devices — same counts, distributed sweep
+        # the naive base and every filtered plan share one device-resident
+        # engine; pass a data mesh via .on(mesh=make_data_mesh()) to shard
+        # the query axis across devices — same counts, distributed sweep
         naive = make_join("naive", R, spec.metric, backend="jnp")
         engine = naive.engine
         naive.query_counts(S[:64], EPS)  # warm the jit
@@ -58,23 +62,31 @@ def run(datasets=DATASETS) -> list:
         ivf = make_join("ivfpq", R, spec.metric, C=128, n_probe=16,
                         n_candidates=1000)
         methods["ivfpq"] = lambda: ivf.query_counts(S, EPS)
-        lsbf_join = FilteredJoin(naive, filter=LSBF(
-            R, spec.metric, k=18, l=10,
-            W=2.5 if spec.kind == "text" else 2.0))
-        methods["naive-lsbf"] = lambda: lsbf_join.run(S, EPS).counts
-        xjoin = FilteredJoin(naive, filter=filt, tau=50, xdt_mode="fpr",
-                             fpr_tolerance=0.05, engine=engine)
-        assert xjoin._engine_usable()  # fused filter->compact->verify path
-        xjoin.run(S[:64], EPS)  # warm
-        methods["xjoin"] = lambda: xjoin.run(S, EPS).counts
+        lsbf_plan = (JoinPlan(R, spec.metric)
+                     .filter(LSBF(R, spec.metric, k=18, l=10,
+                                  W=2.5 if spec.kind == "text" else 2.0))
+                     .search(naive).on(engine=engine, backend="jnp").build())
+        plans["naive-lsbf"] = lsbf_plan
+        methods["naive-lsbf"] = lambda: lsbf_plan.run(S, EPS).counts
+        xplan = (JoinPlan(R, spec.metric)
+                 .filter(filt, tau=50, xdt="fpr", fpr_tolerance=0.05)
+                 .search(naive).on(engine=engine, backend="jnp").build())
+        # fused filter->compact->verify path: exact sweep on the shared engine
+        assert xplan.describe()["verify"]["resolved"] == "exact"
+        plans["xjoin"] = xplan
+        xplan.run(S[:64], EPS)  # warm
+        methods["xjoin"] = lambda: xplan.run(S, EPS).counts
         # engine verification backends (DESIGN.md §5): same filter, the
         # exact sweep swapped for approximate probe + device verification
         for vb in ("lsh", "ivfpq"):
-            xj_v = FilteredJoin(naive, filter=filt, tau=50, xdt_mode="fpr",
-                                fpr_tolerance=0.05, engine=engine, verify=vb)
-            xj_v.run(S[:64], EPS)  # warm (also builds the verifier index)
+            xp_v = (JoinPlan(R, spec.metric)
+                    .filter(filt, tau=50, xdt="fpr", fpr_tolerance=0.05)
+                    .search(naive).verify(vb)
+                    .on(engine=engine, backend="jnp").build())
+            xp_v.run(S[:64], EPS)  # warm (the verifier index built at .build())
+            plans[f"xjoin-{vb}"] = xp_v
             methods[f"xjoin-{vb}"] = (
-                lambda xj_=xj_v: xj_.run(S, EPS).counts)
+                lambda xp_=xp_v: xp_.run(S, EPS).counts)
 
         for name, fn in methods.items():
             fn()   # warm: jit shapes for the FULL query set
@@ -84,7 +96,9 @@ def run(datasets=DATASETS) -> list:
             rec = recall(np.asarray(counts))
             rows.append({"dataset": ds, "method": name, "time_s": dt,
                          "recall": rec,
-                         "speedup_vs_naive": None})
+                         "speedup_vs_naive": None,
+                         "plan": (plans[name].describe()
+                                  if name in plans else None)})
             emit(f"e2e/{ds}/{name}", dt * 1e6 / max(len(S), 1),
                  f"recall={rec:.4f};t={dt:.3f}s")
         base = next(r for r in rows if r["dataset"] == ds and r["method"] == "naive")

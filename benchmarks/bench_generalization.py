@@ -8,8 +8,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_data, get_filter, save_json
-from repro.core import enhance_with_xling, make_join
-from repro.core.xjoin import FilteredJoin
+from repro.core import JoinPlan, make_join
 from repro.kernels import ops
 
 DATASET = "glove"
@@ -42,10 +41,11 @@ def run(dataset=DATASET) -> list:
         lsh = make_join("lsh", R, spec.metric, k=14, l=10, n_probes=4, W=2.5)
         km = make_join("kmeanstree", R, spec.metric, branching=3, rho=0.02)
         for method, base in (("naive", naive), ("lsh", lsh), ("kmeanstree", km)):
-            if method == "naive":
-                enh = FilteredJoin(base, filter=filt, tau=50, xdt_mode="fpr")
-            else:
-                enh = enhance_with_xling(base, filt, tau=0)
+            tau, xdt = (50, "fpr") if method == "naive" else (0, "mean")
+            enh = (JoinPlan(R, spec.metric).filter(filt, tau=tau, xdt=xdt)
+                   .search(base)
+                   .on(backend="jnp", engine=naive.engine)
+                   .build())
             r = _run_pair(lambda b=base: b.query_counts(S, EPS),
                           lambda e=enh: e.run(S, EPS).counts, truth)
             rows.append({"sample": tag, "method": method, **r})

@@ -8,15 +8,17 @@ Three implementations of the same join (glove, eps=0.45, tau=50):
                       ranged). This is what a direct port of the paper's
                       loop gives you on XLA: no actual work saved.
   C. xjoin-compacted— the TPU-native realization (DESIGN.md §3): positives
-                      are host-compacted into power-of-two-bucketed blocks;
+                      are compacted into power-of-two-bucketed blocks;
                       skipped queries cost nothing.
   D. xjoin-streamed — C served as batches through the asynchronous
                       double-buffered pipeline (DESIGN.md §5): batch k+1
                       dispatches while batch k's results transfer back;
                       compared against the same batches run synchronously.
 Plus the verification-backend matrix (exact vs lsh vs ivfpq — time and
-recall vs the exact oracle) and a block-size sweep of the verification
-kernel (the CPU analogue of the BlockSpec tile sweep on TPU).
+recall vs the exact oracle), a `<method>-Xling` plugin matrix (the same
+filter composed with a NON-naive base through the `JoinPlan` candidate
+route, DESIGN.md §9), and a block-size sweep of the verification kernel
+(the CPU analogue of the BlockSpec tile sweep on TPU).
 """
 from __future__ import annotations
 
@@ -25,16 +27,15 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_filter, save_json, true_counts
-from repro.core import make_join
-from repro.core.xjoin import FilteredJoin
+from repro.core import JoinPlan, make_join
 from repro.kernels import ops
 
 EPS = 0.45
 TAU = 50
 
 
-def run() -> dict:
-    filt, R, S, spec = get_filter("glove", n=20000)
+def run(n: int = 20000) -> dict:
+    filt, R, S, spec = get_filter("glove", n=n)
     truth = true_counts(R, S, EPS, spec.metric)
     naive = make_join("naive", R, spec.metric, backend="jnp")
 
@@ -55,12 +56,13 @@ def run() -> dict:
     c_masked = masked()
     t_masked = time.perf_counter() - t0
 
-    # ---- C: compacted, fused on-device via the engine (beyond-paper) --------
-    xj = FilteredJoin(naive, filter=filt, tau=TAU, xdt_mode="fpr",
-                      engine=naive.engine)
-    xj.run(S, EPS)
+    # ---- C: compacted, fused on-device via the plan (beyond-paper) ----------
+    xplan = (JoinPlan(R, spec.metric)
+             .filter(filt, tau=TAU, xdt="fpr")
+             .search(naive).on(engine=naive.engine, backend="jnp").build())
+    xplan.run(S, EPS)
     t0 = time.perf_counter()
-    res = xj.run(S, EPS)
+    res = xplan.run(S, EPS)
     t_comp = time.perf_counter() - t0
 
     def rec(c):
@@ -69,12 +71,12 @@ def run() -> dict:
     # ---- D: async double-buffered stream vs synchronous batches -------------
     bs = 512
     batches = [S[i:i + bs] for i in range(0, len(S), bs)]
-    list(xj.run_stream(batches, EPS, depth=2))      # warm all bucket shapes
+    list(xplan.stream(batches, EPS, depth=2))       # warm all bucket shapes
     t0 = time.perf_counter()
-    sync_res = [xj.run(b, EPS) for b in batches]    # per-batch synchronous
+    sync_res = [xplan.run(b, EPS) for b in batches]  # per-batch synchronous
     t_sync = time.perf_counter() - t0
     t0 = time.perf_counter()
-    stream_res = list(xj.run_stream(batches, EPS, depth=2))
+    stream_res = list(xplan.stream(batches, EPS, depth=2))
     t_stream = time.perf_counter() - t0
     c_stream = np.concatenate([r.counts for r in stream_res])
     assert np.array_equal(
@@ -83,16 +85,49 @@ def run() -> dict:
     # ---- verification-backend matrix (DESIGN.md §5) -------------------------
     verify_rows = {}
     for vb in ("lsh", "ivfpq"):
-        xj_v = FilteredJoin(naive, filter=filt, tau=TAU, xdt_mode="fpr",
-                            engine=naive.engine, verify=vb)
-        xj_v.run(S, EPS)                            # warm + build the index
+        xp_v = (JoinPlan(R, spec.metric)
+                .filter(filt, tau=TAU, xdt="fpr")
+                .search(naive).verify(vb)
+                .on(engine=naive.engine, backend="jnp").build())
+        xp_v.run(S, EPS)                            # warm
         t0 = time.perf_counter()
-        res_v = xj_v.run(S, EPS)
+        res_v = xp_v.run(S, EPS)
         t_v = time.perf_counter() - t0
         verify_rows[vb] = {"t": t_v, "recall": rec(res_v.counts),
                            "speedup_vs_exact": t_comp / max(t_v, 1e-9)}
         emit(f"perf_xjoin/verify_{vb}", t_v * 1e6 / len(S),
              f"recall={verify_rows[vb]['recall']:.3f}")
+
+    # ---- <method>-Xling plugin matrix (DESIGN.md §9) ------------------------
+    # the SAME filter gating non-naive bases: positives route through the
+    # base's candidates() + the engine's device candidate verification
+    plugin_rows = {}
+    for name, params in (("lsh", dict(k=14, l=10, n_probes=4,
+                                      W=2.5 if spec.kind == "text" else 2.0)),
+                         ("kmeanstree", dict(branching=3, rho=0.02))):
+        base = make_join(name, R, spec.metric, **params)
+        base.query_counts(S[:256], EPS)             # warm the base
+        t0 = time.perf_counter()
+        c_base = base.query_counts(S, EPS)
+        t_base = time.perf_counter() - t0
+        plug = (JoinPlan(R, spec.metric)
+                .filter(filt, tau=0, xdt="mean")
+                .search(base).on(backend="jnp", engine=naive.engine).build())
+        plug.run(S, EPS)                            # warm
+        t0 = time.perf_counter()
+        res_p = plug.run(S, EPS)
+        t_p = time.perf_counter() - t0
+        plugin_rows[name] = {
+            "t_base": t_base, "t_plugin": t_p,
+            "recall_base": rec(np.asarray(c_base)),
+            "recall_plugin": rec(res_p.counts),
+            "searched_frac": res_p.n_searched / len(S),
+            "speedup_vs_base": t_base / max(t_p, 1e-9),
+            "plan": plug.describe(),
+        }
+        emit(f"perf_xjoin/plugin_{name}", t_p * 1e6 / len(S),
+             f"recall={plugin_rows[name]['recall_plugin']:.3f};"
+             f"speedup={plugin_rows[name]['speedup_vs_base']:.2f}x")
 
     out = {
         "n_queries": len(S), "searched_frac": res.n_searched / len(S),
@@ -103,6 +138,7 @@ def run() -> dict:
                      "recall": rec(c_stream), "batch_size": bs,
                      "speedup_vs_sync_batches": t_sync / max(t_stream, 1e-9)},
         "verify_backends": verify_rows,
+        "plugin_matrix": plugin_rows,
         "speedup_masked": t_naive / t_masked,
         "speedup_compacted": t_naive / t_comp,
     }

@@ -1,6 +1,9 @@
 """Figure 3: speed-quality trade-off curves — vary the key parameter of
-each approximate method (and tau/XDT-mode for XJoin; Xling-enhanced variants
-of LSH/KmeansTree/IVFPQ use mean-XDT tau=0 as in the paper)."""
+each approximate method (and tau/XDT-mode for XJoin; Xling-enhanced
+variants of LSH/KmeansTree/IVFPQ use mean-XDT tau=0 as in the paper).
+Every enhanced variant is one `JoinPlan` (DESIGN.md §9): the base's
+`candidates()` routes positives through the engine's device verification.
+"""
 from __future__ import annotations
 
 import time
@@ -8,8 +11,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_filter, save_json, true_counts
-from repro.core import enhance_with_xling, make_join
-from repro.core.xjoin import FilteredJoin
+from repro.core import JoinPlan, make_join
 
 DATASET = "glove"
 EPS = 0.45
@@ -37,24 +39,31 @@ def run(dataset=DATASET) -> list:
         emit(f"tradeoff/{method}/{param}", dt * 1e6 / len(S),
              f"recall={rec:.4f}")
 
+    def enhanced(base, *, tau=0, xdt="mean"):
+        # every variant shares the naive join's engine (same R resident
+        # once); non-naive bases verify through their own candidates()
+        return (JoinPlan(R, spec.metric).filter(filt, tau=tau, xdt=xdt)
+                .search(base).on(backend="jnp", engine=naive.engine)
+                .build())
+
     # XJoin: vary (xdt_mode, tau)
     for mode, tau in (("mean", 0), ("mean", 5), ("fpr", 0), ("fpr", 5),
                       ("fpr", 50)):
-        xj = FilteredJoin(naive, filter=filt, tau=tau, xdt_mode=mode)
+        xj = enhanced(naive, tau=tau, xdt=mode)
         record("xjoin", f"{mode}-tau{tau}", lambda xj=xj: xj.run(S, EPS).counts)
 
     # LSH and LSH-Xling: vary n_probes
     for n_p in (1, 2, 4, 8):
         lsh = make_join("lsh", R, spec.metric, k=14, l=10, n_probes=n_p, W=2.5)
         record("lsh", f"np{n_p}", lambda j=lsh: j.query_counts(S, EPS))
-        enh = enhance_with_xling(lsh, filt, tau=0)
+        enh = enhanced(lsh)
         record("lsh-xling", f"np{n_p}", lambda e=enh: e.run(S, EPS).counts)
 
     # KmeansTree and enhanced: vary rho
     for rho in (0.01, 0.02, 0.05, 0.1):
         km = make_join("kmeanstree", R, spec.metric, branching=3, rho=rho)
         record("kmeanstree", f"rho{rho}", lambda j=km: j.query_counts(S, EPS))
-        enh = enhance_with_xling(km, filt, tau=0)
+        enh = enhanced(km)
         record("kmeanstree-xling", f"rho{rho}", lambda e=enh: e.run(S, EPS).counts)
 
     # IVFPQ and enhanced: vary n_probe
@@ -62,7 +71,7 @@ def run(dataset=DATASET) -> list:
         ivf = make_join("ivfpq", R, spec.metric, C=128, n_probe=n_p,
                         n_candidates=1000)
         record("ivfpq", f"np{n_p}", lambda j=ivf: j.query_counts(S, EPS))
-        enh = enhance_with_xling(ivf, filt, tau=0)
+        enh = enhanced(ivf)
         record("ivfpq-xling", f"np{n_p}", lambda e=enh: e.run(S, EPS).counts)
 
     save_json("fig3_tradeoff", rows)

@@ -1,6 +1,11 @@
 """Xling as a generic plugin: accelerate LSH and k-means-tree joins and
 print the speed/quality trade-off (paper Fig. 3 in miniature).
 
+Each `<method>-xling` row is one `JoinPlan`: the base method's
+`candidates()` (the Searcher protocol, DESIGN.md §9) routes the filter's
+predicted-positive queries through the engine's device-resident candidate
+verification — the same machinery for every base, not just naive.
+
     PYTHONPATH=src python examples/plugin_tradeoff.py
 """
 import sys, os, time
@@ -9,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 from benchmarks.common import get_filter
-from repro.core import enhance_with_xling, make_join
+from repro.core import JoinPlan, make_join
 
 # filter cost is O(1)/query while index probing is O(index): the plugin pays
 # off from ~20k points up (disk-cached from the benchmark run)
@@ -22,9 +27,12 @@ print(f"{'method':24s} {'time ms':>9s} {'recall':>8s}")
 for name, params in (("lsh", dict(k=14, l=10, n_probes=4, W=2.5)),
                      ("kmeanstree", dict(branching=3, rho=0.02))):
     base = make_join(name, R, spec.metric, **params)
+    plan = (JoinPlan(R, spec.metric)
+            .filter(filt, tau=0, xdt="mean")
+            .search(base).on(backend="jnp").build())
     for tag, runner in ((name, lambda: base.query_counts(S, EPS)),
                         (f"{name}-xling",
-                         lambda: enhance_with_xling(base, filt).run(S, EPS).counts)):
+                         lambda: plan.run(S, EPS).counts)):
         runner()  # warm
         t0 = time.time(); counts = np.asarray(runner()); dt = time.time() - t0
         rec = np.minimum(counts, truth).sum() / max(truth.sum(), 1)

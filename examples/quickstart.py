@@ -1,4 +1,4 @@
-"""Quickstart: train an Xling filter, run XJoin, compare against naive.
+"""Quickstart: declare an XJoin with JoinPlan, run it, compare vs naive.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,7 +6,7 @@ import sys, os, time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
-from repro.core import XlingConfig, XlingFilter, build_xjoin, make_join
+from repro.core import JoinPlan, make_join
 from repro.data import load_dataset
 
 EPS, TAU, N = 0.45, 5, 8000
@@ -15,12 +15,13 @@ print(f"== loading glove-like corpus (n={N}) ==")
 R, S, spec = load_dataset("glove", n=N)
 print(f"R (indexed) = {R.shape}, S (queries) = {S.shape}, metric = {spec.metric}")
 
-print("\n== fitting Xling (RMI estimator by default takes minutes; NN here) ==")
+print("\n== building the plan (fits Xling; RMI takes minutes, NN here) ==")
 t0 = time.time()
-xj = build_xjoin(R, spec.metric, tau=TAU,
-                 xling_cfg=XlingConfig(estimator="nn", metric=spec.metric,
-                                       epochs=12, backend="jnp"),
-                 cache_key=("quickstart", N), backend="jnp")
+plan = (JoinPlan(R, spec.metric)
+        .filter("xling", tau=TAU, xdt="fpr", estimator="nn", epochs=12)
+        .search("naive")
+        .on(backend="jnp", cache_key=("quickstart", N))
+        .build())
 print(f"offline build: {time.time()-t0:.1f}s "
       f"(ground-truth targets + ATCS + estimator training)")
 
@@ -28,8 +29,8 @@ naive = make_join("naive", R, spec.metric, backend="jnp")
 naive.query_counts(S, EPS)                       # warm the jit
 t0 = time.time(); truth = naive.query_counts(S, EPS); t_naive = time.time() - t0
 
-xj.run(S, EPS)                                   # warm
-res = xj.run(S, EPS)
+plan.run(S, EPS)                                 # warm
+res = plan.run(S, EPS)
 print(f"\n== XJoin vs naive @ eps={EPS}, tau={TAU} ==")
 print(f"negative-query portion: {(truth == 0).mean():.2%}")
 print(f"queries searched:       {res.n_searched}/{res.n_queries} "

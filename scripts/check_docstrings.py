@@ -3,8 +3,9 @@
 modules must carry a docstring (the `make docs-check` target, wired into
 CI via scripts/ci.sh and tests/test_docs.py).
 
-Checked modules: core/engine.py, core/xjoin.py, launch/serve.py — the
-public API a user touches to serve a join stream. "Public" = module-level
+Checked modules: core/api.py (the JoinPlan + Filter/Searcher protocol
+surface), core/engine.py, core/xjoin.py, launch/serve.py — the public API
+a user touches to serve a join stream. "Public" = module-level
 defs, classes, and methods of public classes whose names don't start with
 an underscore (dunder methods other than __init__ are exempt; __init__ is
 exempt when the owning class documents construction in its own docstring).
@@ -18,6 +19,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 CHECKED = (
+    "src/repro/core/api.py",
     "src/repro/core/engine.py",
     "src/repro/core/xjoin.py",
     "src/repro/launch/serve.py",

@@ -5,6 +5,22 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== repo hygiene =="
+if git ls-files | grep -q '^\.cache/'; then
+    echo "FAIL: experiment caches tracked in git:" >&2
+    git ls-files | grep '^\.cache/' >&2
+    exit 1
+fi
+big=$(git ls-files | while IFS= read -r f; do
+    [ -f "$f" ] && [ "$(wc -c < "$f")" -gt 1048576 ] && echo "$f"
+done || true)
+if [ -n "$big" ]; then
+    echo "FAIL: tracked files exceed 1 MB:" >&2
+    echo "$big" >&2
+    exit 1
+fi
+echo "hygiene OK"
+
 echo "== docs-check =="
 python scripts/check_docstrings.py
 

@@ -1,17 +1,22 @@
 """The paper's primary contribution:
 
+  api.py   — the protocol-first public surface: JoinPlan + Filter/Searcher
   xling.py — the learned metric-space Bloom filter (estimator + XDT)
   atcs.py  — adaptive training-condition selection (Algorithm 1)
   xdt.py   — FPR/mean XDT selection + Eq. 2 interpolated targets
-  xjoin.py — XJoin and the generic filter-plugin join wrapper
-  joins/   — baseline join methods (naive/grid/LSH/LSBF/kmeans-tree/IVFPQ)
+  xjoin.py — legacy XJoin shims (FilteredJoin et al.) over JoinPlan
+  joins/   — join methods on the Searcher protocol (naive/grid/LSH/
+             LSBF/kmeans-tree/IVFPQ)
 """
+from repro.core.api import (Filter, JoinPlan, JoinResult, Searcher,
+                            as_filter)
 from repro.core.xling import XlingConfig, XlingFilter
-from repro.core.xjoin import FilteredJoin, JoinResult, build_xjoin, enhance_with_xling
+from repro.core.xjoin import FilteredJoin, build_xjoin, enhance_with_xling
 from repro.core.engine import JoinEngine, sharded_range_count_hist
 from repro.core import atcs, xdt
 from repro.core.joins import JOINS, make_join
 
-__all__ = ["XlingConfig", "XlingFilter", "FilteredJoin", "JoinResult",
+__all__ = ["Filter", "Searcher", "JoinPlan", "JoinResult", "as_filter",
+           "XlingConfig", "XlingFilter", "FilteredJoin",
            "build_xjoin", "enhance_with_xling", "JoinEngine",
            "sharded_range_count_hist", "atcs", "xdt", "JOINS", "make_join"]

@@ -1,0 +1,677 @@
+"""Protocol-first public join API: `JoinPlan` + the Filter/Searcher
+contracts (DESIGN.md §9).
+
+The paper's headline claim is that Xling "acts as a flexible plugin that
+can be inserted to any loop-based similarity join method" (§IV-C). This
+module is the contract that makes the claim structural rather than
+special-cased:
+
+  * `Filter` — anything that can veto queries: `verdicts(Q, eps)` is the
+    host form; an optional `device_filter(eps) -> (predict, threshold)`
+    is the fused form the engine compiles into its filter program.
+    Adapters (`as_filter`) lift `XlingFilter`, the `LSBF` baseline, and
+    bare callables onto the protocol, replacing the old isinstance
+    dispatch in `xjoin.py`.
+  * `Searcher` — anything that can find neighbors: `query_counts(Q, eps)`
+    is the whole-join form; `candidates(Q[, eps])` is the probing half of
+    the host-probe / device-verify split (`joins/common.py`). Every
+    registered join method implements the protocol, so ANY base — not
+    just the naive sweep — routes its predicted-positive queries through
+    `JoinEngine`'s device-resident candidate verification and the
+    asynchronous streaming pipeline.
+  * `JoinPlan` — the single declarative entry point tying both together:
+
+        plan = (JoinPlan(R, "cosine")
+                .filter("xling", tau=50, xdt="fpr")
+                .search("lsh", k=14, l=10)
+                .on(mesh=mesh, backend="auto"))
+        res = plan.run(Q, eps=0.45)
+        for r in plan.stream(batches, eps=0.45, depth=2): ...
+
+    The whole configuration is validated once at `build()` (invalid
+    filter/search/verify combinations fail there with an actionable
+    message, not data-dependently mid-stream), the engine and device
+    programs are constructed once and cached across calls, and
+    `describe()` returns a serializable summary of the plan (used by the
+    serve CLI and the benchmarks).
+
+`FilteredJoin` / `build_xjoin` / `enhance_with_xling` (core/xjoin.py)
+remain as thin legacy shims over `JoinPlan`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Iterable, Iterator, Optional, Protocol,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core.engine import VERIFY_BACKENDS, JoinEngine
+from repro.core.joins import JOINS, make_join
+from repro.core.joins.lsbf import LSBF
+from repro.core.joins.naive import NaiveJoin
+from repro.core.xling import XlingConfig, XlingFilter
+
+
+# =========================================================== the protocols
+@runtime_checkable
+class Filter(Protocol):
+    """A query veto: predicts which queries are worth searching.
+
+    Required: `verdicts(Q, eps) -> bool [q]` (host form). Optional:
+    `device_filter(eps) -> (predict, threshold) | None` — the fused form;
+    `predict` is an estimator's `(params, fn)` pair and `threshold` the
+    calibrated XDT cut, compiled by the engine into one device program."""
+
+    def verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """bool [q]: True = search this query, False = skip it."""
+        ...
+
+
+@runtime_checkable
+class Searcher(Protocol):
+    """A join method over a fixed index set R.
+
+    Required: `query_counts(Q, eps) -> int32 [q]` plus `name` / `exact`
+    attributes. Optional (the probe/verify split): `candidates(Q[, eps])
+    -> int32 [q, C]` (-1 padded) — when present, the engine verifies the
+    candidates on device against its resident R; `eps` is passed only to
+    eps-aware probes (see `joins.common.searcher_candidates`)."""
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """int32 [q] found-neighbor counts per query."""
+        ...
+
+
+# ======================================================== filter adapters
+class XlingAdapter:
+    """`XlingFilter` on the Filter protocol: verdicts via the estimator +
+    XDT threshold; the fused device form when the estimator exposes
+    `device_predict_fn` (all registry estimators do)."""
+
+    def __init__(self, filt: XlingFilter, *, tau: int = 0,
+                 xdt_mode: Optional[str] = None,
+                 fpr_tolerance: Optional[float] = None):
+        self.filt = filt
+        self.tau = int(tau)
+        self.xdt_mode = xdt_mode
+        self.fpr_tolerance = fpr_tolerance
+
+    def verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Host-side verdicts: predicted count vs the XDT threshold."""
+        pos, _ = self.filt.query(Q, eps, self.tau, mode=self.xdt_mode,
+                                 fpr_tolerance=self.fpr_tolerance)
+        return pos
+
+    def device_filter(self, eps: float):
+        """(predict, threshold) for the engine's fused filter program; the
+        XDT threshold is calibrated through the same device fn that will
+        produce the online predictions (float parity at the boundary)."""
+        est = self.filt.estimator
+        if not hasattr(est, "device_predict_fn"):
+            return None
+        predict = est.device_predict_fn()
+        threshold = self.filt.xdt(eps, self.tau, mode=self.xdt_mode,
+                                  fpr_tolerance=self.fpr_tolerance,
+                                  predict=predict)
+        return predict, threshold
+
+
+class LSBFAdapter:
+    """`LSBF` (the MSBF baseline) on the Filter protocol. Its verdict is
+    radius-blind (bit-array membership), so `eps` is ignored; there is no
+    device form — verdicts are computed on host per batch."""
+
+    def __init__(self, filt: LSBF):
+        self.filt = filt
+        self.tau = 0                        # LSBF answers "any neighbor"
+
+    def verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Host-side verdicts from the locality-sensitive bit array."""
+        return self.filt.query(Q)
+
+
+class CallableAdapter:
+    """A bare `fn(Q, eps) -> bool [q]` on the Filter protocol (host-only;
+    the escape hatch for experiment-specific filters)."""
+
+    def __init__(self, fn: Callable[[np.ndarray, float], np.ndarray]):
+        self.fn = fn
+        self.tau = 0
+
+    def verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Host-side verdicts from the wrapped callable."""
+        return np.asarray(self.fn(Q, eps), bool)
+
+
+#: Adapter registry: concrete filter type -> adapter factory. `as_filter`
+#: walks an object's MRO through this table, so new filter types plug in
+#: by registration instead of editing an isinstance chain.
+FILTER_ADAPTERS: dict[type, Callable[..., Any]] = {
+    XlingFilter: XlingAdapter,
+    LSBF: lambda f, **_: LSBFAdapter(f),
+}
+
+
+def as_filter(obj, *, tau: int = 0, xdt_mode: Optional[str] = None,
+              fpr_tolerance: Optional[float] = None):
+    """Coerce `obj` onto the Filter protocol (None passes through).
+
+    Resolution order: objects already exposing `verdicts` are returned
+    as-is; registered concrete types (`FILTER_ADAPTERS`) are wrapped with
+    their adapter (Xling adapters receive the tau/XDT knobs); any other
+    callable is wrapped as `fn(Q, eps) -> bool [q]`. Raises TypeError for
+    everything else, and ValueError when tau/XDT knobs are given for a
+    filter that cannot honor them (LSBF, callables, prebuilt protocol
+    objects) — silently dropping a declared tau would change semantics."""
+    def _reject_knobs(kind: str):
+        if tau or xdt_mode is not None or fpr_tolerance is not None:
+            raise ValueError(
+                f"filter options tau/xdt/fpr_tolerance do not apply to "
+                f"{kind}: they parameterize the Xling XDT decision; "
+                "configure the object itself instead")
+
+    if obj is None:
+        return None
+    if isinstance(obj, Filter):             # protocol: has verdicts()
+        # a prebuilt adapter carries its own knobs — new ones cannot be
+        # grafted on (an XlingAdapter's threshold caches would go stale),
+        # so they are rejected rather than silently dropped
+        _reject_knobs(f"a prebuilt Filter object ({type(obj).__name__}); "
+                      "pass the raw XlingFilter to apply them")
+        return obj
+    for cls in type(obj).__mro__:
+        adapt = FILTER_ADAPTERS.get(cls)
+        if adapt is not None:
+            if adapt is not XlingAdapter:
+                _reject_knobs(type(obj).__name__)
+            return adapt(obj, tau=tau, xdt_mode=xdt_mode,
+                         fpr_tolerance=fpr_tolerance)
+    if callable(obj):
+        _reject_knobs("a callable filter")
+        return CallableAdapter(obj)
+    raise TypeError(
+        f"unsupported filter {type(obj).__name__}: expected an object with "
+        "verdicts(Q, eps), a registered filter type "
+        f"({[c.__name__ for c in FILTER_ADAPTERS]}), or a callable "
+        "fn(Q, eps) -> bool [q]")
+
+
+def _filter_label(f) -> Optional[str]:
+    """Human-readable filter name for describe()/meta (the wrapped concrete
+    type where the adapter kept it, the adapter type otherwise)."""
+    if f is None:
+        return None
+    for attr in ("filt", "fn"):
+        inner = getattr(f, attr, None)
+        if inner is not None:
+            return type(inner).__name__
+    return type(f).__name__
+
+
+# ============================================================== the plan
+@dataclass
+class JoinResult:
+    """Per-call join outcome: exact-at-candidates neighbor counts plus the
+    filter/search timing split and provenance metadata."""
+    counts: np.ndarray
+    n_queries: int
+    n_searched: int
+    t_filter: float
+    t_search: float
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def t_total(self) -> float:
+        """Filter + search wall-clock for this call."""
+        return self.t_filter + self.t_search
+
+    def recall_vs(self, true_counts: np.ndarray) -> float:
+        """Pair-level recall: found pairs over true pairs (count-based —
+        exact for exact searchers; an upper-bound-free measure for
+        approximate searchers since found <= true per query)."""
+        denom = float(np.sum(true_counts))
+        if denom == 0:
+            return 1.0
+        return float(np.sum(np.minimum(self.counts, true_counts)) / denom)
+
+
+@dataclass
+class _BuiltPlan:
+    """Resolved plan state: constructed engine/base/filter/verify route."""
+    engine: JoinEngine
+    base: Any
+    filter: Optional[Any]
+    verify_route: Any                       # "exact" | Searcher object
+    verify_label: str
+
+
+def _spec_name(spec) -> str:
+    """Display name of a filter/search/verify spec (string or instance)."""
+    return spec if isinstance(spec, str) else type(spec).__name__
+
+
+class JoinPlan:
+    """Declarative, validated join configuration — the single entry point.
+
+    Compose with the fluent builders (`filter` / `search` / `verify` /
+    `on`), then `run`, `stream`, or inspect with `describe`. `build()` is
+    called implicitly on first use; it validates the WHOLE configuration
+    up front (unknown names, impossible filter/search/verify combinations,
+    mismatched engines all fail there with actionable messages), fits the
+    filter if it was given by name, pins R on device via a `JoinEngine`,
+    and caches every compiled program across calls.
+
+    Execution always flows through the engine (DESIGN.md §4–§5): the
+    filter runs fused on device when it has a device form (host verdicts
+    are uploaded otherwise), positives are compacted into bucketed static
+    shapes, and verification is the engine's exact sweep (naive base),
+    the verify searcher's `candidates()` checked on device against the
+    engine's resident R, or — for candidate-less plug-ins — the
+    searcher's own `query_counts()` over the compacted positives. That is
+    how EVERY join method, not just the naive sweep, gets the
+    fused-skipping and async-streaming machinery."""
+
+    _ON_KEYS = ("mesh", "backend", "block", "engine", "cache_key")
+
+    def __init__(self, R: np.ndarray, metric: str = "cosine"):
+        self._R = np.asarray(R, np.float32)
+        self.metric = str(metric)
+        self._filter_spec: tuple[Any, dict] = (None, {})
+        self._search_spec: tuple[Any, dict] = ("naive", {})
+        self._verify_spec: tuple[Any, dict] = ("auto", {})
+        self._exec: dict = {"mesh": None, "backend": "auto", "block": 512,
+                            "engine": None, "cache_key": None}
+        self._built: Optional[_BuiltPlan] = None
+        self._device_filter_cache: dict = {}
+
+    # ------------------------------------------------------------ builders
+    def filter(self, filt="xling", **opts) -> "JoinPlan":
+        """Select the filter: "xling" (fitted on R at build time; `tau`,
+        `xdt`/`xdt_mode`, `fpr_tolerance` plus any `XlingConfig` field as
+        keywords), "lsbf" (the MSBF baseline; LSBF constructor params),
+        "none", a Filter-protocol object, a concrete `XlingFilter`/`LSBF`
+        instance, or a callable `fn(Q, eps) -> bool [q]`."""
+        self._filter_spec = (filt, dict(opts))
+        self._built = None
+        return self
+
+    def search(self, method="naive", **params) -> "JoinPlan":
+        """Select the base join method: a registry name (`JOINS` — naive,
+        grid, lsh, kmeanstree, ivfpq) with constructor params, or a
+        Searcher instance already built over this plan's R."""
+        self._search_spec = (method, dict(params))
+        self._built = None
+        return self
+
+    def verify(self, backend="auto", **params) -> "JoinPlan":
+        """Select how predicted-positive queries are verified: "auto"
+        (exact sweep for the naive base; otherwise the base verifies its
+        own positives — device candidate verification when it exposes
+        `candidates()`, its own `query_counts()` when not — the default),
+        "exact" (engine brute-force sweep; naive base only), a join name
+        (lsh/ivfpq with engine-cached indices — explicit params pin the
+        built instance to this plan — or grid/kmeanstree), or a Searcher
+        instance (candidates() or query_counts()).
+
+        Naming a backend REPLACES the verification route entirely: with a
+        non-naive base the base's own probe is then bypassed (only the
+        filter gates which queries reach the named backend) —
+        `describe()["search"]["active"]` reports whether the base
+        actually participates."""
+        self._verify_spec = (backend, dict(params))
+        self._built = None
+        return self
+
+    def on(self, **opts) -> "JoinPlan":
+        """Set execution placement: `mesh` (query-axis sharding via
+        `launch.mesh.make_data_mesh`), `backend` (DESIGN.md §2 kernel
+        matrix), `block` (compaction bucket quantum), `engine` (share a
+        prebuilt `JoinEngine` over the same R), `cache_key` (ground-truth
+        table disk cache for the xling fit)."""
+        unknown = set(opts) - set(self._ON_KEYS)
+        if unknown:
+            raise ValueError(f"on(): unknown option(s) {sorted(unknown)}; "
+                             f"expected {list(self._ON_KEYS)}")
+        self._exec.update(opts)
+        self._built = None
+        return self
+
+    # ---------------------------------------------------------- validation
+    def _same_R(self, other_R) -> bool:
+        """Same-index-set check: identity fast path, else full equality —
+        a host memcmp, cheap next to the device upload build() performs,
+        and the only check that actually closes the wrong-R hazard (a
+        corpus differing in interior rows would otherwise be verified
+        against silently)."""
+        other_R = np.asarray(other_R)
+        if other_R is self._R:
+            return True
+        return (other_R.shape == self._R.shape
+                and bool(np.array_equal(other_R, self._R)))
+
+    def _build_base(self, engine: JoinEngine):
+        spec, params = self._search_spec
+        if isinstance(spec, str):
+            if spec not in JOINS:
+                raise ValueError(f"search({spec!r}): unknown join method; "
+                                 f"registered: {sorted(JOINS)}")
+            if spec == "naive":
+                return make_join("naive", self._R, self.metric,
+                                 backend=self._exec["backend"], engine=engine,
+                                 **params)
+            return make_join(spec, self._R, self.metric, **params)
+        if not isinstance(spec, Searcher):
+            raise ValueError(
+                f"search({type(spec).__name__}): instance must satisfy the "
+                "Searcher protocol (query_counts(Q, eps))")
+        if getattr(spec, "metric", self.metric) != self.metric:
+            raise ValueError(
+                f"search({type(spec).__name__}): instance is built for "
+                f"metric {getattr(spec, 'metric')!r}, the plan for "
+                f"{self.metric!r} — its probe geometry would not match the "
+                "verification distances")
+        if not self._same_R(getattr(spec, "R", self._R)):
+            raise ValueError(
+                f"search({type(spec).__name__}): instance is indexed over a "
+                "different R than this plan — rebuild it over the plan's R "
+                "or pass that R to JoinPlan()")
+        return spec
+
+    def _build_filter(self, engine: JoinEngine):
+        spec, opts = self._filter_spec
+        if spec is None or spec == "none":
+            return None
+        opts = dict(opts)
+        tau = int(opts.pop("tau", 0))
+        xdt_mode = opts.pop("xdt", opts.pop("xdt_mode", None))
+        fpr_tolerance = opts.pop("fpr_tolerance", None)
+        if tau < 0:
+            raise ValueError(f"filter(tau={tau}): tau must be >= 0")
+        if xdt_mode not in (None, "fpr", "mean"):
+            raise ValueError(f"filter(xdt={xdt_mode!r}): expected 'fpr' or "
+                             "'mean'")
+        if fpr_tolerance is not None and not 0.0 < fpr_tolerance < 1.0:
+            raise ValueError(f"filter(fpr_tolerance={fpr_tolerance}): "
+                             "expected a rate in (0, 1)")
+        if isinstance(spec, str):
+            if spec == "xling":
+                cfg = XlingConfig(metric=self.metric,
+                                  xdt_mode=xdt_mode or "fpr",
+                                  fpr_tolerance=(0.05 if fpr_tolerance is None
+                                                 else fpr_tolerance),
+                                  backend=self._exec["backend"], **opts)
+                filt = XlingFilter(cfg).fit(
+                    self._R, cache_key=self._exec["cache_key"],
+                    mesh=self._exec["mesh"])
+                return XlingAdapter(filt, tau=tau, xdt_mode=xdt_mode,
+                                    fpr_tolerance=fpr_tolerance)
+            if spec == "lsbf":
+                if tau or xdt_mode is not None or fpr_tolerance is not None:
+                    raise ValueError(
+                        "filter('lsbf', ...): tau/xdt/fpr_tolerance are "
+                        "Xling XDT knobs — LSBF answers the fixed "
+                        "'any neighbor' question (theta= is its knob)")
+                return LSBFAdapter(LSBF(self._R, self.metric, **opts))
+            raise ValueError(f"filter({spec!r}): unknown filter; expected "
+                             "'xling', 'lsbf', 'none', a Filter object, or "
+                             "a callable")
+        if opts:
+            raise ValueError(f"filter(<instance>, **{sorted(opts)}): extra "
+                             "constructor params only apply to by-name "
+                             "filters")
+        if isinstance(spec, XlingFilter) and spec.estimator is None:
+            spec.fit(self._R, cache_key=self._exec["cache_key"],
+                     mesh=self._exec["mesh"])
+        return as_filter(spec, tau=tau, xdt_mode=xdt_mode,
+                         fpr_tolerance=fpr_tolerance)
+
+    def _build_verify(self, engine: JoinEngine, base):
+        spec, params = self._verify_spec
+        base_is_naive = isinstance(base, NaiveJoin)
+        if spec == "auto":
+            if params:
+                raise ValueError("verify('auto') takes no params — name the "
+                                 "backend to tune it")
+            if base_is_naive:
+                return "exact", "exact"
+            # the base verifies its own positives: through candidates() +
+            # device verification when it has the probe split, through its
+            # own query_counts() otherwise (the generic "any loop-based
+            # method" fallback — a synchronous host hop, engine.py)
+            return base, getattr(base, "name", type(base).__name__)
+        if spec == "exact":
+            if not base_is_naive:
+                raise ValueError(
+                    "verify('exact') is the engine's brute-force sweep and "
+                    "only composes with search('naive'); with "
+                    f"search({getattr(base, 'name', '?')!r}) use "
+                    "verify('auto') (the base's own candidates) or name an "
+                    "approximate backend")
+            if params:
+                raise ValueError("verify('exact') takes no params — it has "
+                                 "no index to tune")
+            return "exact", "exact"
+        if isinstance(spec, str):
+            if spec in VERIFY_BACKENDS:     # lsh / ivfpq: engine-cached
+                # build the index now so its construction cost lands at
+                # build time. With explicit params the plan PINS the built
+                # instance (another plan sharing this engine can't clobber
+                # it); without params the NAME stays the route, so a later
+                # `engine.verifier(name, **params)` retune takes effect
+                v = engine.verifier(spec, **params)
+                return (v if params else spec), spec
+            if spec in JOINS and hasattr(JOINS[spec], "candidates"):
+                return make_join(spec, self._R, self.metric, **params), spec
+            raise ValueError(
+                f"verify({spec!r}): unknown backend; expected 'auto', "
+                f"'exact', one of {sorted(set(VERIFY_BACKENDS) - {'exact'})}"
+                ", a candidate-producing join name, or a Searcher instance")
+        if not (hasattr(spec, "candidates") or hasattr(spec, "query_counts")):
+            raise ValueError(
+                f"verify({type(spec).__name__}): instance must expose "
+                "candidates(Q) -> int32 [q, C] (device verification) or "
+                "query_counts(Q, eps) -> int32 [q] (host verification)")
+        if getattr(spec, "metric", self.metric) != self.metric:
+            raise ValueError(
+                f"verify({type(spec).__name__}): instance is built for "
+                f"metric {getattr(spec, 'metric')!r}, the plan for "
+                f"{self.metric!r}")
+        if not self._same_R(getattr(spec, "R", self._R)):
+            raise ValueError(
+                f"verify({type(spec).__name__}): instance is indexed over a "
+                "different R than this plan")
+        return spec, getattr(spec, "name", type(spec).__name__)
+
+    # -------------------------------------------------------------- build
+    def build(self) -> "JoinPlan":
+        """Validate the whole configuration and construct the execution
+        state (engine, base, filter, verify route). Idempotent; called
+        implicitly by `run` / `stream` / `describe`. All configuration
+        errors surface here, before any query is served."""
+        if self._built is not None:
+            return self
+        if self.metric not in ("cosine", "l2"):
+            raise ValueError(f"metric={self.metric!r}: expected 'cosine' or "
+                             "'l2'")
+        engine = self._exec["engine"]
+        if engine is not None:
+            if engine.metric != self.metric or not self._same_R(engine._R_host):
+                raise ValueError(
+                    "on(engine=...): engine is built over a different "
+                    f"(R, metric) — engine has |R|={engine.nr}/"
+                    f"{engine.metric!r}, plan has |R|={len(self._R)}/"
+                    f"{self.metric!r}")
+            if (self._exec["mesh"] is not None
+                    and engine.mesh is not self._exec["mesh"]):
+                raise ValueError(
+                    "on(engine=..., mesh=...): a shared engine carries its "
+                    "own mesh; either drop mesh= (the engine's placement "
+                    "wins) or drop engine= (the plan builds an engine on "
+                    "that mesh)")
+        else:
+            if self._exec["mesh"] is None:
+                # adopt an instance base's own engine when it provably
+                # owns this plan's (R, metric) — a NaiveJoin base already
+                # pinned R on device; a second engine would double
+                # residency (an explicit on(mesh=...) still forces a
+                # fresh engine on that mesh)
+                spec = self._search_spec[0]
+                cand = getattr(spec, "engine", None) \
+                    if not isinstance(spec, str) else None
+                if (cand is not None and cand.metric == self.metric
+                        and self._same_R(cand._R_host)):
+                    engine = cand
+            if engine is None:
+                engine = JoinEngine(self._R, self.metric,
+                                    mesh=self._exec["mesh"],
+                                    backend=self._exec["backend"],
+                                    block=self._exec["block"])
+        base = self._build_base(engine)
+        filt = self._build_filter(engine)
+        verify_route, verify_label = self._build_verify(engine, base)
+        self._built = _BuiltPlan(engine=engine, base=base, filter=filt,
+                                 verify_route=verify_route,
+                                 verify_label=verify_label)
+        self._device_filter_cache.clear()
+        return self
+
+    # ----------------------------------------------------------- execution
+    def _filter_state(self, eps: float):
+        """(predict, threshold) for the fused device filter at this eps, or
+        (None, None) when the filter is host-only; cached per eps so the
+        XDT calibration cost is paid once per radius, not per batch."""
+        f = self._built.filter
+        if f is None or not hasattr(f, "device_filter"):
+            return None, None
+        key = round(float(eps), 9)
+        if key not in self._device_filter_cache:
+            self._device_filter_cache[key] = f.device_filter(eps) or (None,
+                                                                      None)
+        return self._device_filter_cache[key]
+
+    def _host_verdicts(self, Q: np.ndarray, eps: float):
+        f = self._built.filter
+        if f is None:
+            return None                     # engine treats None as all-pos
+        return np.asarray(f.verdicts(Q, eps), bool)
+
+    def _wrap(self, res, n: int, eps: float, t_host: float) -> JoinResult:
+        st = self._built
+        return JoinResult(
+            counts=res.counts, n_queries=n, n_searched=res.n_searched,
+            t_filter=res.t_filter + t_host, t_search=res.t_search,
+            meta={"eps": eps, "tau": getattr(st.filter, "tau", 0),
+                  "base": getattr(st.base, "name", "?"),
+                  "filter": _filter_label(st.filter),
+                  "engine": True, "verify": res.verify})
+
+    def run(self, Q: np.ndarray, eps: float) -> JoinResult:
+        """One synchronous join pass: fused filter (or uploaded host
+        verdicts) -> compact -> verify through the engine."""
+        self.build()
+        Q = np.asarray(Q, np.float32)
+        t0 = time.perf_counter()
+        predict, threshold = self._filter_state(eps)
+        verdicts = None if predict is not None else self._host_verdicts(Q, eps)
+        t_host = time.perf_counter() - t0
+        res = self._built.engine.filtered_join(
+            Q, float(eps), predict=predict, threshold=threshold,
+            verdicts=verdicts, block=self._exec["block"],
+            verify=self._built.verify_route)
+        return self._wrap(res, len(Q), eps, t_host)
+
+    def stream(self, batches: Iterable[np.ndarray], eps: float, *,
+               depth: int = 2) -> Iterator[JoinResult]:
+        """Serving form: yield one JoinResult per query batch, in order,
+        through the engine's asynchronous double-buffered pipeline
+        (DESIGN.md §5) — batch k+1's programs dispatch while batch k's
+        results transfer back; `depth` bounds the in-flight queue
+        (`depth=0` ~= synchronous). Bit-identical to per-batch `run`."""
+        self.build()
+        t0 = time.perf_counter()
+        predict, threshold = self._filter_state(eps)
+        t_host = time.perf_counter() - t0   # one-time XDT selection cost
+        sess = self._built.engine.stream_session(
+            eps, predict=predict, threshold=threshold,
+            verify=self._built.verify_route, depth=depth,
+            block=self._exec["block"])
+        pending: list[tuple[int, float]] = []   # FIFO of (n, host cost)
+
+        def _emit(results):
+            for res in results:
+                n, th = pending.pop(0)
+                yield self._wrap(res, n, eps, th)
+
+        for Q in batches:
+            Q = np.asarray(Q, np.float32)
+            t1 = time.perf_counter()
+            verdicts = (None if predict is not None
+                        else self._host_verdicts(Q, eps))
+            th = t_host + (time.perf_counter() - t1)
+            t_host = 0.0                    # charge XDT selection to batch 0
+            pending.append((len(Q), th))
+            yield from _emit(sess.submit(Q, verdicts=verdicts))
+        yield from _emit(sess.flush())
+
+    # ---------------------------------------------------------- inspection
+    def describe(self) -> dict:
+        """Serializable plan summary (spec + resolved execution state),
+        printed by the serve CLI and recorded by the benchmarks. Builds
+        the plan if needed (so the summary reflects what will run)."""
+        self.build()
+        st = self._built
+
+        def scalars(d: dict) -> dict:
+            # json-serializable subset (np scalars etc. are coerced or
+            # dropped so json.dumps never chokes on a plan summary)
+            return {k: (v.item() if isinstance(v, np.generic) else v)
+                    for k, v in d.items()
+                    if isinstance(v, (int, float, str, bool, np.generic))}
+
+        fspec, fopts = self._filter_spec
+        sspec, sparams = self._search_spec
+        vspec, vparams = self._verify_spec
+        mesh = st.engine.mesh               # the placement that actually runs
+        return {
+            "metric": self.metric,
+            "n_index": int(len(self._R)),
+            "dim": int(self._R.shape[1]),
+            "filter": {"spec": _spec_name(fspec) if fspec else None,
+                       "resolved": _filter_label(st.filter),
+                       "tau": getattr(st.filter, "tau", 0),
+                       "opts": scalars(fopts)},
+            "search": {"spec": _spec_name(sspec),
+                       "resolved": getattr(st.base, "name",
+                                           type(st.base).__name__),
+                       "exact": bool(getattr(st.base, "exact", False)),
+                       # False when an explicit verify backend bypasses the
+                       # base's own verification route (the filter still
+                       # gates which queries reach that backend)
+                       "active": (st.verify_route is st.base
+                                  or (st.verify_route == "exact"
+                                      and isinstance(st.base, NaiveJoin))),
+                       "params": scalars(sparams)},
+            "verify": {"spec": _spec_name(vspec),
+                       "resolved": st.verify_label,
+                       "params": scalars(vparams)},
+            "exec": {"backend": st.engine.backend,
+                     "block": self._exec["block"],
+                     "mesh": (None if mesh is None
+                              else dict(zip(mesh.axis_names,
+                                            map(int, mesh.devices.shape)))),
+                     "engine_shared": self._exec["engine"] is not None},
+        }
+
+    @property
+    def engine(self) -> JoinEngine:
+        """The plan's `JoinEngine` (builds the plan on first access) —
+        the tuning hook for verifier indices lives here
+        (`plan.engine.verifier(name, **params)`)."""
+        return self.build()._built.engine
+
+    @property
+    def base(self):
+        """The plan's base Searcher (builds the plan on first access)."""
+        return self.build()._built.base

@@ -175,14 +175,44 @@ class EngineJoinResult:
     n_searched: int         # queries that reached verification
     t_filter: float
     t_search: float
-    verify: str = "exact"   # which verification backend produced `counts`
+    verify: str = "exact"   # label of the backend that produced `counts`
 
 
-#: Verification backends accepted by `filtered_join(verify=...)` /
+#: Verification backends accepted *by name* in `filtered_join(verify=...)` /
 #: `stream(verify=...)`. "exact" is the engine's fused brute-force sweep;
 #: the others probe an approximate index and verify candidates on device
-#: (DESIGN.md §5).
+#: (DESIGN.md §5). Beyond these names, `verify=` also accepts any Searcher
+#: object (DESIGN.md §9): one exposing `candidates(Q)` routes its
+#: candidates through the on-device verification path; one exposing only
+#: `query_counts(Q, eps)` verifies the compacted positives on host.
 VERIFY_BACKENDS = ("exact", "lsh", "ivfpq")
+
+#: A verify spec: "exact", a VERIFY_BACKENDS name, or a Searcher object
+#: (candidates() for device verification, query_counts() for the host
+#: fallback) — validated by `_check_verify`.
+VerifySpec = "str | object"
+
+
+def _check_verify(verify) -> str:
+    """Validate a `verify=` spec and return its display label.
+
+    Accepted: "exact", a name from `VERIFY_BACKENDS`, or a plug-in
+    searcher object exposing `candidates(Q)` (device candidate
+    verification) or `query_counts(Q, eps)` (host verification of the
+    compacted positives). Raises ValueError otherwise — at construction
+    time, not data-dependently inside the pipeline."""
+    if isinstance(verify, str):
+        if verify not in VERIFY_BACKENDS:
+            raise ValueError(f"verify={verify!r}: expected one of "
+                             f"{sorted(VERIFY_BACKENDS)} or a searcher "
+                             "object exposing candidates()/query_counts()")
+        return verify
+    if hasattr(verify, "candidates") or hasattr(verify, "query_counts"):
+        return getattr(verify, "name", type(verify).__name__)
+    raise ValueError(
+        f"verify={type(verify).__name__!r} object: plug-in verification "
+        "searchers must expose candidates(Q) -> int32 [q, C] (-1 padded) "
+        "or query_counts(Q, eps) -> int32 [q]")
 
 
 def _start_host_copy(arr) -> None:
@@ -244,18 +274,20 @@ class StreamSession:
         per-batch `filtered_join` calls;
       * at most `depth` committed batches plus one staged batch are in
         flight, bounding device memory at (depth + 2) padded batches;
-      * the only per-batch host sync is the staged batch's positive-count
-        read, issued AFTER the next batch's programs are enqueued;
+      * on the exact verify route, the only per-batch host sync is the
+        staged batch's positive-count read, issued AFTER the next batch's
+        programs are enqueued (approximate/plug-in routes additionally
+        read back the verdicts and probe on host inside commit — their
+        candidate *verification* still overlaps, but probing is
+        synchronous);
       * after `flush()` returns, no engine program of this session is
         outstanding.
     """
 
     def __init__(self, engine: "JoinEngine", eps: float, *, predict=None,
-                 threshold=None, verify: str = "exact", depth: int = 2,
+                 threshold=None, verify: VerifySpec = "exact", depth: int = 2,
                  block: int | None = None):
-        if verify not in VERIFY_BACKENDS:
-            raise ValueError(f"verify={verify!r}: expected one of "
-                             f"{sorted(VERIFY_BACKENDS)}")
+        _check_verify(verify)
         self.engine = engine
         self.eps = float(eps)
         self.predict, self.threshold = predict, threshold
@@ -439,7 +471,7 @@ class JoinEngine:
         return st
 
     # ------------------------------------- stage 2: verify dispatch (commit)
-    def _commit_verify(self, st: "_StagedBatch", *, verify: str = "exact",
+    def _commit_verify(self, st: "_StagedBatch", *, verify: VerifySpec = "exact",
                        block: int | None = None) -> "PendingJoin":
         """Read the staged batch's positive count and dispatch verification.
 
@@ -447,10 +479,14 @@ class JoinEngine:
         sync; it waits on this batch's *filter* program only — earlier
         batches' (much deeper) verification programs keep running behind
         it. Returns a `PendingJoin`; device→host copies are started
-        non-blocking so `result()` is usually a no-wait."""
-        if verify not in VERIFY_BACKENDS:   # fail fast, not data-dependently
-            raise ValueError(f"verify={verify!r}: expected one of "
-                             f"{sorted(VERIFY_BACKENDS)}")
+        non-blocking so `result()` is usually a no-wait.
+
+        `verify` is "exact", a `VERIFY_BACKENDS` name, or a plug-in
+        searcher object (see `_check_verify`): any join method's
+        `candidates()` can route the compacted positives through the
+        device candidate-verification path — the Searcher half of the
+        DESIGN.md §9 protocol contract."""
+        label = _check_verify(verify)       # fail fast, not data-dependently
         t0 = time.perf_counter()
         if st.n_pos is None:
             st.n_pos = int(st.n_pos_dev)
@@ -458,7 +494,7 @@ class JoinEngine:
         n, n_pos = st.n, st.n_pos
 
         if n_pos == 0:
-            return PendingJoin(lambda: np.zeros((n,), np.int32), verify=verify,
+            return PendingJoin(lambda: np.zeros((n,), np.int32), verify=label,
                                n_searched=0, t_filter=t_filter, t_dispatch=0.0)
 
         t1 = time.perf_counter()
@@ -473,24 +509,38 @@ class JoinEngine:
             _start_host_copy(counts_dev)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
         else:
-            from repro.core.joins.common import dispatch_verify_candidates
-            searcher = self.verifier(verify)
+            from repro.core.joins.common import (dispatch_verify_candidates,
+                                                 searcher_candidates)
+            searcher = self.verifier(verify) if isinstance(verify, str) \
+                else verify
             # host probing needs the verdicts; the filter program is already
             # complete (n_pos was just read), so this transfer is cheap
             pos_host = np.asarray(st.pos_dev)[:n]
             idx = np.nonzero(pos_host)[0]
             qpos = st.Q[idx]
-            cand = searcher.candidates(qpos)
-            pend = dispatch_verify_candidates(
-                self._Rdev, qpos, cand, st.eps, self.metric,
-                backend=self.backend)
+            if hasattr(searcher, "candidates"):
+                cand = searcher_candidates(searcher, qpos, st.eps)
+                pend = dispatch_verify_candidates(
+                    self._Rdev, qpos, cand, st.eps, self.metric,
+                    backend=self.backend)
 
-            def finalize():
-                counts = np.zeros((n,), np.int32)
-                counts[idx] = pend.result()
-                return counts
+                def finalize():
+                    counts = np.zeros((n,), np.int32)
+                    counts[idx] = pend.result()
+                    return counts
+            else:
+                # candidate-less plug-in: the searcher verifies the
+                # compacted positives itself (synchronous host hop — the
+                # generic "any loop-based method" fallback)
+                found = np.asarray(searcher.query_counts(qpos, st.eps),
+                                   np.int32)
+
+                def finalize():
+                    counts = np.zeros((n,), np.int32)
+                    counts[idx] = found
+                    return counts
         t_dispatch = time.perf_counter() - t1
-        return PendingJoin(finalize, verify=verify, n_searched=n_pos,
+        return PendingJoin(finalize, verify=label, n_searched=n_pos,
                            t_filter=t_filter, t_dispatch=t_dispatch)
 
     # ------------------------------------------------ verification backends
@@ -523,7 +573,7 @@ class JoinEngine:
     # --------------------------------------------------- one-shot join call
     def filtered_join(self, Q, eps: float, *, predict=None, threshold=None,
                       verdicts=None, block: int | None = None,
-                      verify: str = "exact") -> EngineJoinResult:
+                      verify: VerifySpec = "exact") -> EngineJoinResult:
         """One synchronous filter -> threshold -> compact -> verify pass.
 
         Either pass `predict` = (params, fn) from an estimator's
@@ -531,15 +581,17 @@ class JoinEngine:
         or a precomputed host bool `verdicts` array (plug-in filters).
         `block` overrides the compaction bucket quantum (default
         self.block); `verify` picks the verification backend ("exact" |
-        "lsh" | "ivfpq", DESIGN.md §5). This is the synchronous reference
-        path — `stream` pipelines the same two stages."""
+        "lsh" | "ivfpq", DESIGN.md §5 — or any Searcher object whose
+        `candidates()` feeds the device verification path, DESIGN.md §9).
+        This is the synchronous reference path — `stream` pipelines the
+        same two stages."""
         st = self._stage_filter(Q, eps, predict=predict, threshold=threshold,
                                 verdicts=verdicts)
         return self._commit_verify(st, verify=verify, block=block).result()
 
     # ------------------------------------------------------------ streaming
     def stream_session(self, eps: float, *, predict=None, threshold=None,
-                       verify: str = "exact", depth: int = 2,
+                       verify: VerifySpec = "exact", depth: int = 2,
                        block: int | None = None) -> "StreamSession":
         """Open an asynchronous `StreamSession` (push interface) over this
         engine; `stream` is the pull/iterator form of the same pipeline."""
@@ -547,7 +599,7 @@ class JoinEngine:
                              verify=verify, depth=depth, block=block)
 
     def stream(self, batches: Iterable, eps: float, *, predict=None,
-               threshold=None, verify: str = "exact", depth: int = 2,
+               threshold=None, verify: VerifySpec = "exact", depth: int = 2,
                block: int | None = None) -> Iterator[EngineJoinResult]:
         """Serving loop: pipeline query batches through the engine.
 

@@ -17,10 +17,25 @@ the oracle semantics; "jnp"/"auto"/"pallas" use the bucketed blocked path
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def searcher_candidates(searcher, Q: np.ndarray, eps: float) -> np.ndarray:
+    """Probe a Searcher for candidate ids, passing `eps` only when the
+    probe is eps-aware (the protocol's `candidates(Q[, eps])` form,
+    DESIGN.md §9). Grid needs the radius to size its cells; LSH / IVF-PQ /
+    k-means-tree probes are radius-independent."""
+    try:
+        eps_aware = "eps" in inspect.signature(searcher.candidates).parameters
+    except (TypeError, ValueError):         # builtins / C callables
+        eps_aware = False
+    if eps_aware:
+        return searcher.candidates(Q, eps=float(eps))
+    return searcher.candidates(Q)
 
 
 def kmeans(X: np.ndarray, k: int, *, iters: int = 10, seed: int = 0,

@@ -54,17 +54,22 @@ class GridJoin:
             key = (key << 21) | (off[:, d] & ((1 << 21) - 1))
         return key
 
-    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+    def candidates(self, Q: np.ndarray, eps: float | None = None) -> np.ndarray:
+        """Neighbor-cell candidate ids, int32 [q, C] (-1 padded) — the
+        eps-aware probing half of the Searcher protocol (DESIGN.md §9).
+        `eps` widens the grid when the current cells are too fine for the
+        radius (exactness needs cell width >= the projected eps); callers
+        that omit it probe at the current width."""
         Q = np.asarray(Q, np.float32)
-        width_needed = self._l2_eps(eps)
-        if width_needed > self.width:   # grid too fine for this eps: rebuild
-            self._build(width_needed)
+        if eps is not None:
+            width_needed = self._l2_eps(eps)
+            if width_needed > self.width:   # grid too fine: rebuild coarser
+                self._build(width_needed)
         qproj = (Q - self.mu) @ self.basis
         qcells = np.floor(qproj / self.width).astype(np.int64)
 
         # 27 neighbor cells
         offs = np.array(np.meshgrid(*([[-1, 0, 1]] * self.dims))).reshape(self.dims, -1).T
-        counts = np.zeros((len(Q),), np.int64)
         # collect candidate ranges per query via searchsorted on sorted keys
         cand_lists = [[] for _ in range(len(Q))]
         max_c = 1
@@ -84,4 +89,11 @@ class GridJoin:
         cand = np.full((len(Q), max_c), -1, np.int32)
         for qi, c in enumerate(cand_lists):
             cand[qi, :len(c)] = c
+        return cand
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Exact eps-counts: probe the +-1 cell neighborhood, verify the
+        candidates in full dimension on device."""
+        Q = np.asarray(Q, np.float32)
+        cand = self.candidates(Q, eps=float(eps))
         return verify_candidates(self.R, Q, cand, float(eps), self.metric)

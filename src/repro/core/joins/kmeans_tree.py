@@ -46,12 +46,20 @@ class KmeansTreeJoin:
         self.leaf_centroids = np.stack(
             [self.R[v].mean(axis=0) for v in leaves]).astype(np.float32)
 
-    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+    def candidates(self, Q: np.ndarray) -> np.ndarray:
+        """Members of the best rho-fraction of leaves by centroid distance,
+        int32 [q, C] (-1 padded) — the probing half of the Searcher
+        protocol (DESIGN.md §9); radius-independent."""
         Q = np.asarray(Q, np.float32)
         n_leaves = len(self.leaf_centroids)
         n_inspect = max(1, int(np.ceil(self.rho * n_leaves)))
         d = (np.sum(Q * Q, 1)[:, None] - 2 * Q @ self.leaf_centroids.T
              + np.sum(self.leaf_centroids ** 2, 1)[None, :])
         top = np.argpartition(d, n_inspect - 1, axis=1)[:, :n_inspect]
-        cand = self.leaf_members[top].reshape(len(Q), -1)
-        return verify_candidates(self.R, Q, cand, float(eps), self.metric)
+        return self.leaf_members[top].reshape(len(Q), -1)
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Exact eps-counts over the probed leaves (device verify)."""
+        Q = np.asarray(Q, np.float32)
+        return verify_candidates(self.R, Q, self.candidates(Q), float(eps),
+                                 self.metric)

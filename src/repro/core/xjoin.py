@@ -1,28 +1,21 @@
-"""XJoin and the generic Xling-plugin wrapper (paper §IV-C).
+"""Legacy XJoin surface — thin shims over the protocol-first `JoinPlan`.
 
-FilteredJoin composes ANY base join method with ANY filter (Xling or the
-LSBF baseline): the filter predicts which queries have more than tau
-neighbors, and only those are ranged by the base method.
+`FilteredJoin`, `build_xjoin`, and `enhance_with_xling` predate the
+declarative API in `core/api.py` (DESIGN.md §9) and are kept working for
+existing callers; new code should build a `JoinPlan` directly:
 
-TPU-native skipping (DESIGN.md §3): predicted-positive queries are
-*compacted* into static-shape blocks (power-of-two bucketed to bound
-recompiles) rather than masked — skipped queries genuinely cost nothing on
-device. Negatives are reported with 0 found neighbors.
+    from repro.core import JoinPlan
+    plan = JoinPlan(R, metric).filter("xling", tau=50, xdt="fpr").search("lsh")
+    res = plan.run(Q, eps)
 
-Execution (DESIGN.md §4): given a `JoinEngine`, the whole hot path —
-estimator inference, XDT comparison, positive-query compaction and
-verification — runs as fused device programs against the engine's resident
-R (sharded over the mesh's data axis when the engine has one). Without an
-engine, or for base methods that are not the exact brute-force search, the
-original host-side compaction path is used.
-
-Streaming & verification backends (DESIGN.md §5): `run_stream` serves
-query batches through the engine's asynchronous double-buffered pipeline
-(batch k+1 dispatches while batch k's results transfer back; `depth`
-bounds the in-flight queue), and `verify="lsh"` / `"ivfpq"` swap the
-exact verification sweep for an approximate index probe + on-device
-candidate verification — sub-linear in |R|, recall measured against the
-exact oracle.
+Each shim maps its parameters onto a plan once at construction time — so
+configuration errors (e.g. an approximate `verify` backend without the
+engine path) surface immediately, not on the first `run()` — and then
+delegates `run` / `run_stream` to `JoinPlan.run` / `JoinPlan.stream`.
+Filter dispatch goes through the `Filter` protocol adapters (`as_filter`),
+not isinstance chains; any base method with `candidates()` routes its
+positives through the engine's device candidate verification
+(DESIGN.md §9), which supersedes the old host-compaction path.
 
 Paper default configs (§VI-A):
   * XJoin            = Naive base + FPR-based XDT (5% tolerance), tau = 50
@@ -30,52 +23,32 @@ Paper default configs (§VI-A):
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, Iterator, Optional
+from typing import Iterable, Iterator, Optional
 
 import numpy as np
 
-from repro.core.engine import JoinEngine, _bucket_size
+# _bucket_size is re-exported for legacy importers (tests/test_property.py)
+from repro.core.api import JoinPlan, JoinResult
+from repro.core.engine import JoinEngine, _bucket_size  # noqa: F401
 from repro.core.joins import make_join
-from repro.core.joins.lsbf import LSBF
 from repro.core.joins.naive import NaiveJoin
 from repro.core.xling import XlingConfig, XlingFilter
 
-
-@dataclass
-class JoinResult:
-    """Per-call join outcome: exact-at-candidates neighbor counts plus the
-    filter/search timing split and provenance metadata."""
-    counts: np.ndarray
-    n_queries: int
-    n_searched: int
-    t_filter: float
-    t_search: float
-    meta: dict = field(default_factory=dict)
-
-    @property
-    def t_total(self) -> float:
-        """Filter + search wall-clock for this call."""
-        return self.t_filter + self.t_search
-
-    def recall_vs(self, true_counts: np.ndarray) -> float:
-        """Pair-level recall: found pairs over true pairs (count-based —
-        exact for exact searchers; an upper-bound-free measure for
-        approximate searchers since found <= true per query)."""
-        denom = float(np.sum(true_counts))
-        if denom == 0:
-            return 1.0
-        return float(np.sum(np.minimum(self.counts, true_counts)) / denom)
+__all__ = ["FilteredJoin", "JoinResult", "build_xjoin", "enhance_with_xling"]
 
 
 class FilteredJoin:
-    """Filter-then-verify join: any base method gated by any filter.
+    """Filter-then-verify join: any base method gated by any filter
+    (legacy shim over `JoinPlan`).
 
-    With an `engine` (and a NaiveJoin base over the same engine) the hot
-    path runs fused on device; `verify` then picks the verification
-    backend — "exact" (brute-force sweep) or "lsh"/"ivfpq" (approximate
-    probe + on-device candidate verification, DESIGN.md §5)."""
+    The shim keeps the historical constructor and attributes but compiles
+    its configuration into a `JoinPlan` at construction time: a naive base
+    runs the fused engine path (DESIGN.md §4), any other base routes its
+    predicted positives through the engine's device candidate verification
+    via the base's `candidates()` (DESIGN.md §9). `verify` picks the
+    verification backend — "exact" (the base's own route) or "lsh"/"ivfpq"
+    (approximate probe + device verification; requires a NaiveJoin base
+    sharing this join's engine, enforced here at construction)."""
 
     def __init__(self, base, *, filter=None, tau: int = 0,
                  xdt_mode: Optional[str] = None,
@@ -89,138 +62,48 @@ class FilteredJoin:
         self.block = block
         self.engine = engine
         self.verify = verify
+        if verify != "exact" and not self._engine_usable():
+            raise ValueError(
+                "verify backends other than 'exact' need the engine path "
+                "(NaiveJoin base sharing this FilteredJoin's engine); for "
+                "plug-in verification on other bases build a JoinPlan and "
+                "use plan.verify(...)")
+        plan = JoinPlan(base.R, base.metric).search(base)
+        if filter is not None:
+            plan.filter(filter, tau=tau, xdt=xdt_mode,
+                        fpr_tolerance=fpr_tolerance)
+        # engine choice: the caller's engine when given (the plan's build
+        # validates it is over the base's exact (R, metric) — a foreign
+        # index set fails at construction instead of silently verifying
+        # against the wrong R), else the naive base's own; other bases
+        # without a caller engine get a fresh engine over base.R
+        eng = engine if engine is not None else (
+            base.engine if isinstance(base, NaiveJoin) else None)
+        plan.on(engine=eng, block=block,
+                backend=getattr(base, "backend", "auto"))
+        plan.verify(verify if verify != "exact" else "auto")
+        self._plan = plan.build()   # all validation at construction time
 
-    def _verdicts(self, Q: np.ndarray, eps: float) -> np.ndarray:
-        f = self.filter
-        if f is None:
-            return np.ones((len(Q),), bool)
-        if isinstance(f, XlingFilter):
-            pos, _ = f.query(Q, eps, self.tau, mode=self.xdt_mode,
-                             fpr_tolerance=self.fpr_tolerance)
-            return pos
-        if isinstance(f, LSBF):
-            return f.query(Q)
-        if callable(f):
-            return np.asarray(f(Q, eps), bool)
-        raise TypeError(f"unsupported filter {type(f)}")
-
-    # ----------------------------------------------------------- engine path
     def _engine_usable(self) -> bool:
-        """The fused verify is exact brute-force vs the engine's R — only
+        """The fused exact verify is brute-force vs the engine's R — only
         valid when the engine IS the base naive search's engine (identity,
         not just shape: a same-sized engine over a different R would
         silently verify against the wrong index set)."""
         return (self.engine is not None and isinstance(self.base, NaiveJoin)
                 and self.engine is self.base.engine)
 
-    def _device_filter_args(self, eps: float):
-        """(predict, threshold) for the fused device filter, or (None, None)
-        when the filter must run on host (per-batch `verdicts` instead).
-        The XDT threshold is calibrated through the same device fn that
-        will produce the online predictions (float-parity at the boundary);
-        for a serving stream this selection happens once, up front."""
-        f = self.filter
-        if (isinstance(f, XlingFilter)
-                and hasattr(f.estimator, "device_predict_fn")):
-            predict = f.estimator.device_predict_fn()
-            threshold = f.xdt(eps, self.tau, mode=self.xdt_mode,
-                              fpr_tolerance=self.fpr_tolerance,
-                              predict=predict)
-            return predict, threshold
-        return None, None
-
-    def _wrap_engine_result(self, res, n: int, eps: float,
-                            t_host: float = 0.0) -> JoinResult:
-        f = self.filter
-        return JoinResult(
-            counts=res.counts, n_queries=n, n_searched=res.n_searched,
-            t_filter=res.t_filter + t_host, t_search=res.t_search,
-            meta={"eps": eps, "tau": self.tau,
-                  "base": getattr(self.base, "name", "?"),
-                  "filter": type(f).__name__ if f else None,
-                  "engine": True, "verify": res.verify})
-
-    def _run_engine(self, Q: np.ndarray, eps: float) -> JoinResult:
-        t0 = time.perf_counter()
-        predict, threshold = self._device_filter_args(eps)
-        verdicts = None if predict is not None else self._verdicts(Q, eps)
-        t_host = time.perf_counter() - t0   # host filter / XDT-selection cost
-        res = self.engine.filtered_join(Q, eps, predict=predict,
-                                        threshold=threshold, verdicts=verdicts,
-                                        block=self.block, verify=self.verify)
-        return self._wrap_engine_result(res, len(Q), eps, t_host)
-
-    # -------------------------------------------------------------- host path
     def run(self, Q: np.ndarray, eps: float) -> JoinResult:
-        """One synchronous join pass over a query batch (engine-fused when
-        `_engine_usable`, host compaction otherwise)."""
-        Q = np.asarray(Q, np.float32)
-        if self._engine_usable():
-            return self._run_engine(Q, eps)
-        if self.verify != "exact":
-            raise ValueError(
-                "verify backends other than 'exact' need the engine path "
-                "(NaiveJoin base sharing this FilteredJoin's engine)")
-        t0 = time.perf_counter()
-        pos = self._verdicts(Q, eps)
-        t_filter = time.perf_counter() - t0
-
-        counts = np.zeros((len(Q),), np.int32)
-        idx = np.nonzero(pos)[0]
-        t1 = time.perf_counter()
-        if len(idx):
-            # compaction: gather positives, pad to a bucketed static size
-            n_pad = _bucket_size(len(idx), self.block)
-            qpos = Q[idx]
-            if n_pad > len(idx):
-                qpos = np.concatenate(
-                    [qpos, np.repeat(qpos[:1], n_pad - len(idx), axis=0)])
-            found = self.base.query_counts(qpos, eps)[: len(idx)]
-            counts[idx] = found
-        t_search = time.perf_counter() - t1
-        return JoinResult(counts=counts, n_queries=len(Q), n_searched=len(idx),
-                          t_filter=t_filter, t_search=t_search,
-                          meta={"eps": eps, "tau": self.tau,
-                                "base": getattr(self.base, "name", "?"),
-                                "filter": type(self.filter).__name__ if self.filter else None})
+        """One synchronous join pass over a query batch (delegates to
+        `JoinPlan.run`: fused filter -> compact -> verify on the engine)."""
+        return self._plan.run(Q, eps)
 
     def run_stream(self, batches: Iterable[np.ndarray], eps: float, *,
                    depth: int = 2) -> Iterator[JoinResult]:
-        """Serving form: yields one JoinResult per query batch, in order.
-
-        On the engine path this is the asynchronous double-buffered
-        pipeline (DESIGN.md §5): batch k+1's programs dispatch while batch
-        k's results transfer back; `depth` bounds the in-flight queue
-        (`depth=0` ≈ synchronous). Results are bit-identical to per-batch
-        `run` calls. Off the engine path it degrades to per-batch `run`.
-        """
-        if not self._engine_usable():
-            for Q in batches:
-                yield self.run(np.asarray(Q, np.float32), eps)
-            return
-        t0 = time.perf_counter()
-        predict, threshold = self._device_filter_args(eps)
-        t_host = time.perf_counter() - t0   # one-time XDT selection cost
-        sess = self.engine.stream_session(eps, predict=predict,
-                                          threshold=threshold,
-                                          verify=self.verify, depth=depth,
-                                          block=self.block)
-        pending: list[tuple[int, float]] = []   # FIFO of (n, host cost)
-
-        def _emit(results):
-            for res in results:
-                n, th = pending.pop(0)
-                yield self._wrap_engine_result(res, n, eps, th)
-
-        for Q in batches:
-            Q = np.asarray(Q, np.float32)
-            t1 = time.perf_counter()
-            verdicts = None if predict is not None else self._verdicts(Q, eps)
-            th = t_host + (time.perf_counter() - t1)
-            t_host = 0.0                    # charge XDT selection to batch 0
-            pending.append((len(Q), th))
-            yield from _emit(sess.submit(Q, verdicts=verdicts))
-        yield from _emit(sess.flush())
+        """Serving form: yields one JoinResult per query batch, in order,
+        through the asynchronous double-buffered pipeline (DESIGN.md §5);
+        bit-identical to per-batch `run` calls (delegates to
+        `JoinPlan.stream`)."""
+        return self._plan.stream(batches, eps, depth=depth)
 
 
 # ---------------------------------------------------------------- factories
@@ -234,6 +117,8 @@ def build_xjoin(R: np.ndarray, metric: str, *, xling_cfg: XlingConfig | None = N
     executed through a (optionally mesh-sharded) JoinEngine. `verify`
     selects the verification backend ("exact" | "lsh" | "ivfpq"); tune the
     approximate index by pre-building it via `engine.verifier(name, ...)`.
+    Legacy shim — equivalent to `JoinPlan(R, metric).filter("xling",
+    tau=tau, xdt="fpr").search("naive").verify(verify).on(...)`.
     """
     cfg = xling_cfg or XlingConfig(metric=metric, xdt_mode="fpr",
                                    fpr_tolerance=fpr_tolerance, backend=backend)
@@ -248,5 +133,12 @@ def build_xjoin(R: np.ndarray, metric: str, *, xling_cfg: XlingConfig | None = N
 
 def enhance_with_xling(base, filt: XlingFilter, *, tau: int = 0,
                        block: int = 512) -> FilteredJoin:
-    """<method>-Xling (paper: mean-based XDT, tau=0 to minimize added loss)."""
+    """<method>-Xling (paper: mean-based XDT, tau=0 to minimize added
+    loss). Legacy shim — equivalent to `JoinPlan(base.R,
+    base.metric).filter(filt, tau=tau, xdt="mean").search(base)`.
+
+    Note: a non-naive base gets its own device-resident engine per call;
+    when building MANY variants over one R (parameter sweeps), prefer the
+    plan form with a shared `on(engine=...)` so R is uploaded once — see
+    benchmarks/bench_tradeoff.py."""
     return FilteredJoin(base, filter=filt, tau=tau, xdt_mode="mean", block=block)

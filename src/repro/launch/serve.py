@@ -1,17 +1,19 @@
 """Serving driver: embedding model + Xling-filtered similarity join.
 
-This is the paper's production story end-to-end: a backbone produces
-embeddings for incoming requests; XJoin finds their eps-neighbors in the
-indexed corpus R, with the Xling filter skipping negative queries. Batches
-flow through the engine's asynchronous double-buffered stream
-(DESIGN.md §5): batch k+1 dispatches while batch k's results transfer
-back, with `--depth` bounding the in-flight queue and `--verify` picking
-the verification backend (exact sweep, or LSH / IVF-PQ candidate probing
-with on-device verification).
+This is the paper's production story end-to-end, on the declarative
+`JoinPlan` API (DESIGN.md §9): the CLI flags compile into one plan —
+filter("xling") -> search("naive") -> verify(--verify) — which is
+validated and built once (filter fit, engine construction, verifier
+index) and then serves query batches through the engine's asynchronous
+double-buffered stream (DESIGN.md §5): batch k+1 dispatches while batch
+k's results transfer back, with `--depth` bounding the in-flight queue
+and `--verify` picking the verification backend (exact sweep, or LSH /
+IVF-PQ candidate probing with on-device verification).
 
-Each batch line reports filter effectiveness (skip rate) and result
-quality (recall vs the exact oracle) alongside the timing split; the
-summary adds aggregate skip/recall plus p50/p95 per-batch latency.
+The first output line is the serialized plan (`plan.describe()`). Each
+batch line reports filter effectiveness (skip rate) and result quality
+(recall vs the exact oracle) alongside the timing split; the summary adds
+aggregate skip/recall plus p50/p95 per-batch latency.
 
   PYTHONPATH=src python -m repro.launch.serve --dataset glove --n 4000 \
       --eps 0.45 --tau 5 --batches 4 --batch-size 256 --verify lsh
@@ -24,8 +26,7 @@ import time
 
 import numpy as np
 
-from repro.configs.xling_paper import SMOKE as WORKLOAD
-from repro.core import XlingConfig, build_xjoin
+from repro.core import JoinPlan
 from repro.data import load_dataset
 
 
@@ -62,9 +63,23 @@ def summarize(stats: list[dict], build_s: float) -> dict:
     }
 
 
+def build_plan(args, R, metric: str) -> JoinPlan:
+    """Compile the CLI flags into a built `JoinPlan` (filter fit + engine +
+    verifier index all constructed here, so their one-time cost lands in
+    build_s, not in batch 0's reported latency)."""
+    return (JoinPlan(R, metric)
+            .filter("xling", tau=args.tau, xdt="fpr",
+                    estimator=args.estimator, epochs=args.epochs)
+            .search("naive")
+            .verify(args.verify)
+            .on(backend="jnp", cache_key=(args.dataset, args.n))
+            .build())
+
+
 def main():
-    """CLI entry point: build XJoin over the corpus, stream query batches
-    through the async engine pipeline, and print per-batch + summary JSON."""
+    """CLI entry point: compile the flags into a JoinPlan, stream query
+    batches through the async engine pipeline, and print the plan summary,
+    per-batch lines, and aggregate JSON."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="glove")
     ap.add_argument("--n", type=int, default=4000)
@@ -82,18 +97,11 @@ def main():
     args = ap.parse_args()
 
     R, S, spec = load_dataset(args.dataset, n=args.n)
-    xcfg = XlingConfig(estimator=args.estimator, metric=spec.metric,
-                       epochs=args.epochs, backend="jnp")
     t0 = time.time()
-    xj = build_xjoin(R, spec.metric, xling_cfg=xcfg, tau=args.tau,
-                     cache_key=(args.dataset, args.n), backend="jnp",
-                     verify=args.verify)
-    if args.verify != "exact":
-        # pre-build the approximate index so its one-time construction
-        # cost lands in build_s, not in batch 0's reported latency
-        xj.engine.verifier(args.verify)
+    plan = build_plan(args, R, spec.metric)
     build_s = time.time() - t0
-    naive = xj.base       # shares the xjoin engine's device-resident R
+    print(json.dumps({"plan": plan.describe()}, default=str))
+    naive = plan.base     # shares the plan engine's device-resident R
 
     batches = [q for b in range(args.batches)
                if len(q := S[b * args.batch_size:(b + 1) * args.batch_size])]
@@ -105,8 +113,8 @@ def main():
     # the async engine streaming path: R + estimator stay device-resident,
     # compiled programs are reused (bucketed shapes), and batch k+1
     # dispatches while batch k's verification results transfer back
-    for b, res in enumerate(xj.run_stream(batches, args.eps,
-                                          depth=args.depth)):
+    for b, res in enumerate(plan.stream(batches, args.eps,
+                                        depth=args.depth)):
         stats.append(batch_stats(b, res, truths[b]))
         print(json.dumps(stats[-1]))
 

@@ -1,0 +1,327 @@
+"""The protocol-first public API (core/api.py, DESIGN.md §9).
+
+Covers: the full `<method> x filter` plugin matrix — every registered join
+method composed with the Xling filter AND the LSBF baseline through
+`JoinPlan` (count parity vs the unfiltered base on predicted-positive
+queries, zeros on skipped queries, skip-rate sanity); engine-vs-host
+verification parity for non-naive bases; the acceptance invariant that
+`plan.stream` is bit-identical to per-batch `plan.run` on the engine path
+with a NON-naive base; build-time validation of every invalid
+filter/search/verify combination (including the legacy `FilteredJoin`
+shim inheriting the construction-time check); protocol conformance of the
+registered joins and filter adapters; and `describe()` serializability.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (Filter, JoinPlan, Searcher, XlingConfig, XlingFilter,
+                        as_filter, make_join)
+from repro.core.api import CallableAdapter, LSBFAdapter, XlingAdapter
+from repro.core.engine import JoinEngine
+from repro.core.joins import JOINS
+from repro.core.joins.lsbf import LSBF
+from repro.core.xjoin import FilteredJoin
+
+EPS = 0.45
+
+#: Small-but-meaningful per-method constructor params for the matrix.
+METHOD_PARAMS = {
+    "naive": {},
+    "grid": {},
+    "lsh": dict(k=12, l=10, n_probes=4, W=2.0),
+    "kmeanstree": dict(branching=3, rho=0.05),
+    "ivfpq": dict(C=32, n_probe=6, n_candidates=400),
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.data import load_dataset
+    R, S, spec = load_dataset("sift", n=1500, seed=0)
+    return R, S[:120], spec
+
+
+@pytest.fixture(scope="module")
+def bases(data):
+    R, _, spec = data
+    return {name: make_join(name, R, spec.metric, backend="jnp",
+                            **METHOD_PARAMS[name])
+            for name in JOINS}
+
+
+@pytest.fixture(scope="module")
+def xling(data):
+    R, _, spec = data
+    cfg = XlingConfig(estimator="nn", metric=spec.metric, epochs=3,
+                      backend="jnp", m=12)
+    return XlingFilter(cfg).fit(R)
+
+
+@pytest.fixture(scope="module")
+def lsbf(data):
+    R, _, spec = data
+    return LSBF(R, spec.metric, k=10, l=6, W=2.0)
+
+
+# ------------------------------------------------------- protocol conformance
+def test_joins_satisfy_searcher_protocol(bases):
+    for name, j in bases.items():
+        assert isinstance(j, Searcher), name
+        assert isinstance(j.name, str) and isinstance(j.exact, bool)
+    # every non-naive method exposes the probe half of the split
+    for name in set(JOINS) - {"naive"}:
+        assert hasattr(bases[name], "candidates"), name
+
+
+def test_filter_adapters_satisfy_protocol(xling, lsbf):
+    ax = as_filter(xling, tau=3, xdt_mode="fpr")
+    al = as_filter(lsbf)
+    ac = as_filter(lambda Q, eps: np.zeros(len(Q), bool))
+    assert isinstance(ax, XlingAdapter) and ax.tau == 3
+    assert isinstance(al, LSBFAdapter)
+    assert isinstance(ac, CallableAdapter)
+    for a in (ax, al, ac):
+        assert isinstance(a, Filter)
+    assert as_filter(ax) is ax           # protocol objects pass through
+    assert as_filter(None) is None
+    with pytest.raises(TypeError):
+        as_filter(object())
+    # the fused device form exists exactly where advertised
+    assert ax.device_filter(EPS) is not None
+    assert not hasattr(al, "device_filter")
+
+
+# ---------------------------------------------------- the <method>-Xling matrix
+@pytest.mark.parametrize("method", sorted(JOINS))
+@pytest.mark.parametrize("fname", ["xling", "lsbf"])
+def test_method_filter_matrix(data, bases, xling, lsbf, method, fname):
+    """Every registered join method composed with both filters through the
+    protocol: the filtered plan returns EXACTLY the base method's counts on
+    predicted-positive queries and 0 on skipped ones (count parity), with
+    n_searched equal to the verdict mass (skip-rate sanity)."""
+    R, S, spec = data
+    base = bases[method]
+    filt, kw = {"xling": (xling, dict(tau=0, xdt="mean")),
+                "lsbf": (lsbf, {})}[fname]
+    plan = (JoinPlan(R, spec.metric).filter(filt, **kw)
+            .search(base).on(backend="jnp").build())
+    res = plan.run(S, EPS)
+    mask = np.asarray(as_filter(
+        filt, tau=kw.get("tau", 0), xdt_mode=kw.get("xdt")).verdicts(S, EPS),
+        bool)
+    assert res.n_searched == int(mask.sum())
+    assert 0 <= res.n_searched <= len(S)
+    base_counts = np.asarray(base.query_counts(S, EPS))
+    np.testing.assert_array_equal(res.counts[mask], base_counts[mask])
+    assert (res.counts[~mask] == 0).all()
+    assert res.meta["base"] == method
+    assert res.meta["engine"] is True
+
+
+def test_engine_vs_host_parity_nonnaive(data, bases):
+    """Engine-vs-host verification parity for a non-naive base: routing the
+    positives through the engine's device-resident (padded) R must count
+    exactly what the base's own host-side query_counts path counts."""
+    R, S, spec = data
+    rng = np.random.default_rng(11)
+    verdicts = rng.random(len(S)) > 0.4
+    for method in ("lsh", "kmeanstree"):
+        base = bases[method]
+        plan = (JoinPlan(R, spec.metric)
+                .filter(lambda Q, eps, v=verdicts: v)
+                .search(base).on(backend="jnp").build())
+        res = plan.run(S, EPS)
+        want = np.where(verdicts,
+                        np.asarray(base.query_counts(S, EPS)), 0)
+        np.testing.assert_array_equal(res.counts, want)
+        assert res.n_searched == int(verdicts.sum())
+
+
+# --------------------------------------------- acceptance: non-naive streaming
+def test_stream_bit_identical_to_run_nonnaive(data, bases, xling):
+    """The acceptance invariant: a plan with a NON-naive base runs its
+    positive queries through JoinEngine device candidate verification, and
+    plan.stream stays bit-identical to per-batch plan.run on that path."""
+    R, S, spec = data
+    for method in ("lsh", "grid"):
+        plan = (JoinPlan(R, spec.metric).filter(xling, tau=0, xdt="mean")
+                .search(bases[method]).on(backend="jnp").build())
+        # deliberately ragged batch sizes to exercise distinct shape buckets
+        batches = [S[:50], S[50:51], S[51:]]
+        sync = [plan.run(b, EPS) for b in batches]
+        for depth in (0, 2):
+            stream = list(plan.stream(batches, EPS, depth=depth))
+            assert len(stream) == len(batches)
+            for s, a in zip(sync, stream):
+                np.testing.assert_array_equal(a.counts, s.counts)
+                assert a.n_searched == s.n_searched
+                assert a.meta["verify"] == method  # the base's candidates
+
+
+def test_verify_backend_swap_on_naive(data, xling):
+    """verify("lsh") on the naive base swaps the exact sweep for candidate
+    probing: counts never exceed the exact path's (precision 1)."""
+    R, S, spec = data
+    exact = (JoinPlan(R, spec.metric).filter(xling, tau=0, xdt="mean")
+             .search("naive").on(backend="jnp").build())
+    approx = (JoinPlan(R, spec.metric).filter(xling, tau=0, xdt="mean")
+              .search("naive").verify("lsh", k=10, l=8, n_probes=4, W=2.0)
+              .on(engine=exact.engine, backend="jnp").build())
+    r_exact, r_approx = exact.run(S, EPS), approx.run(S, EPS)
+    assert r_approx.meta["verify"] == "lsh"
+    assert r_approx.n_searched == r_exact.n_searched
+    assert (r_approx.counts <= r_exact.counts).all()
+
+
+class _LoopJoin:
+    """Minimal Searcher: query_counts only — the paper's generic
+    'any loop-based join method' plug-in, with no candidates() probe."""
+    name = "loop"
+    exact = True
+
+    def __init__(self, R, metric):
+        self.R, self.metric = np.asarray(R, np.float32), metric
+        self._naive = make_join("naive", self.R, metric, backend="jnp")
+
+    def query_counts(self, Q, eps):
+        return self._naive.query_counts(Q, eps)
+
+
+def test_query_counts_only_base_supported(data):
+    """A base exposing ONLY query_counts (no candidates) must still compose
+    with a filter — through JoinPlan's auto route (host verification of the
+    compacted positives) and through the legacy FilteredJoin shim."""
+    R, S, spec = data
+    rng = np.random.default_rng(3)
+    verdicts = rng.random(len(S)) > 0.5
+    base = _LoopJoin(R, spec.metric)
+    want = np.where(verdicts, np.asarray(base.query_counts(S, EPS)), 0)
+    plan = (JoinPlan(R, spec.metric).filter(lambda Q, eps: verdicts)
+            .search(base).on(backend="jnp").build())
+    res = plan.run(S, EPS)
+    np.testing.assert_array_equal(res.counts, want)
+    assert res.meta["verify"] == "loop"
+    fj = FilteredJoin(base, filter=lambda Q, eps: verdicts)
+    np.testing.assert_array_equal(fj.run(S, EPS).counts, want)
+
+
+def test_tuned_verifier_pinned_per_plan(data):
+    """verify(name, **params) pins the built index to the plan: a second
+    plan sharing the engine with different params must not clobber it
+    (verify(name) with no params keeps the name — the live retune hook)."""
+    R, S, spec = data
+    shared = (JoinPlan(R, spec.metric).search("naive")
+              .verify("lsh", k=10, l=16).on(backend="jnp").build())
+    engine = shared.engine
+    other = (JoinPlan(R, spec.metric).search("naive")
+             .verify("lsh", k=10, l=4).on(engine=engine,
+                                          backend="jnp").build())
+    assert shared._built.verify_route.l == 16      # pinned, not clobbered
+    assert other._built.verify_route.l == 4
+    untuned = (JoinPlan(R, spec.metric).search("naive").verify("lsh")
+               .on(engine=engine, backend="jnp").build())
+    assert untuned._built.verify_route == "lsh"    # name: retune-able
+
+
+# ----------------------------------------------------- build-time validation
+def test_build_time_validation(data, bases, xling):
+    R, S, spec = data
+    with pytest.raises(ValueError, match="unknown join method"):
+        JoinPlan(R, spec.metric).search("annoy").build()
+    with pytest.raises(ValueError, match="unknown filter"):
+        JoinPlan(R, spec.metric).filter("bloomier").build()
+    with pytest.raises(ValueError, match="unknown backend"):
+        JoinPlan(R, spec.metric).verify("naive").build()
+    with pytest.raises(ValueError, match="only composes with"):
+        JoinPlan(R, spec.metric).search("lsh", **METHOD_PARAMS["lsh"]) \
+            .verify("exact").build()
+    with pytest.raises(ValueError, match="tau must be"):
+        JoinPlan(R, spec.metric).filter(xling, tau=-1).build()
+    with pytest.raises(ValueError, match="expected 'fpr' or 'mean'"):
+        JoinPlan(R, spec.metric).filter(xling, xdt="median").build()
+    with pytest.raises(ValueError, match="fpr_tolerance"):
+        JoinPlan(R, spec.metric).filter(xling, fpr_tolerance=1.5).build()
+    with pytest.raises(ValueError, match="unknown option"):
+        JoinPlan(R, spec.metric).on(mesg=None)
+    with pytest.raises(ValueError, match="expected 'cosine' or 'l2'"):
+        JoinPlan(R, "hamming").build()
+    # engine over a different (R, metric) is rejected up front
+    other = JoinEngine(np.ascontiguousarray(R[:500]), spec.metric,
+                       backend="jnp")
+    with pytest.raises(ValueError, match="different"):
+        JoinPlan(R, spec.metric).on(engine=other).build()
+    # an instance base over a different R is rejected up front
+    foreign = make_join("lsh", R[:500].copy(), spec.metric,
+                        **METHOD_PARAMS["lsh"])
+    with pytest.raises(ValueError, match="different R"):
+        JoinPlan(R, spec.metric).search(foreign).build()
+    # ... including same-shape R differing only in INTERIOR rows (the
+    # silent wrong-index-set hazard)
+    R_mut = R.copy()
+    R_mut[len(R) // 2] += 0.25
+    with pytest.raises(ValueError, match="different R"):
+        JoinPlan(R, spec.metric).search(
+            make_join("lsh", R_mut, spec.metric,
+                      **METHOD_PARAMS["lsh"])).build()
+    # an instance base built for a different metric is rejected up front
+    other_metric = "cosine" if spec.metric == "l2" else "l2"
+    with pytest.raises(ValueError, match="metric"):
+        JoinPlan(R, spec.metric).search(
+            make_join("lsh", R, other_metric,
+                      **METHOD_PARAMS["lsh"])).build()
+    # tau/XDT knobs only parameterize Xling — rejected elsewhere
+    with pytest.raises(ValueError, match="tau/xdt"):
+        JoinPlan(R, spec.metric).filter("lsbf", tau=5).build()
+    with pytest.raises(ValueError, match="tau/xdt"):
+        JoinPlan(R, spec.metric).filter(lambda Q, eps: None, tau=5).build()
+
+
+def test_describe_reports_bypassed_base(data, xling):
+    """An explicit verify backend bypasses a non-naive base's own probe;
+    describe() must say so instead of reporting the base as what runs."""
+    R, S, spec = data
+    plan = (JoinPlan(R, spec.metric).filter(xling, tau=0, xdt="mean")
+            .search("kmeanstree", **METHOD_PARAMS["kmeanstree"])
+            .verify("lsh", k=10, l=8, n_probes=4, W=2.0)
+            .on(backend="jnp"))
+    d = plan.describe()
+    assert d["search"]["resolved"] == "kmeanstree"
+    assert d["search"]["active"] is False
+    assert d["verify"]["resolved"] == "lsh"
+    # whereas the auto route keeps the base active
+    auto = (JoinPlan(R, spec.metric)
+            .search("kmeanstree", **METHOD_PARAMS["kmeanstree"])
+            .on(backend="jnp"))
+    assert auto.describe()["search"]["active"] is True
+
+
+def test_legacy_shim_inherits_construction_check(data, bases):
+    """The legacy FilteredJoin shim must reject an approximate verify
+    backend without a usable engine AT CONSTRUCTION, not on first run()."""
+    R, S, spec = data
+    with pytest.raises(ValueError, match="engine path"):
+        FilteredJoin(bases["lsh"], verify="lsh")
+    with pytest.raises(ValueError, match="engine path"):
+        # naive base but a foreign engine (not the base's own): unusable
+        FilteredJoin(bases["naive"], verify="ivfpq",
+                     engine=JoinEngine(np.ascontiguousarray(R[:500]),
+                                       spec.metric, backend="jnp"))
+
+
+# ------------------------------------------------------------------ describe
+def test_describe_serializable_and_faithful(data, xling):
+    R, S, spec = data
+    plan = (JoinPlan(R, spec.metric).filter(xling, tau=7, xdt="fpr")
+            .search("lsh", **METHOD_PARAMS["lsh"]).on(backend="jnp"))
+    d = plan.describe()
+    json.dumps(d)                        # serializable as-is
+    assert d["metric"] == spec.metric and d["n_index"] == len(R)
+    assert d["filter"]["resolved"] == "XlingFilter"
+    assert d["filter"]["tau"] == 7
+    assert d["search"]["resolved"] == "lsh"
+    assert d["verify"]["resolved"] == "lsh"   # auto -> the base's candidates
+    assert d["exec"]["backend"] == "jnp"
+    # rebuilding after a spec change is reflected
+    assert plan.verify("ivfpq").describe()["verify"]["resolved"] == "ivfpq"
