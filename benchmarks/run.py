@@ -4,25 +4,84 @@ experiments/bench/*.json.
 
   PYTHONPATH=src python -m benchmarks.run [--only tab3,tab4,...]
   REPRO_BENCH_SCALE=small|medium|full  (default small)
+
+``--snapshot`` additionally writes a top-level ``BENCH_<n>.json``
+(suite -> {row name -> us_per_call}, next free n) so the perf trajectory
+is tracked across PRs; ``--snapshot-out PATH`` pins an explicit path
+instead (the CI smoke run writes to a temp file).
 """
 from __future__ import annotations
 
 import argparse
+import io
+import json
+import re
 import sys
 import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+class _Tee(io.TextIOBase):
+    """stdout tee: forward everything, keep a copy for CSV parsing."""
+
+    def __init__(self, sink):
+        self.sink = sink
+        self.parts: list[str] = []
+
+    def write(self, s: str) -> int:
+        self.parts.append(s)
+        return self.sink.write(s)
+
+    def flush(self) -> None:
+        self.sink.flush()
+
+    def text(self) -> str:
+        return "".join(self.parts)
+
+
+def parse_rows(text: str) -> dict[str, float]:
+    """{row name: us_per_call} from the emitted CSV lines (non-CSV lines —
+    headers, comments, tracebacks — are ignored)."""
+    rows: dict[str, float] = {}
+    for line in text.splitlines():
+        parts = line.split(",")
+        if len(parts) < 2 or parts[0].startswith("#") or not parts[0]:
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
+
+
+def next_snapshot_path(root: Path) -> Path:
+    """BENCH_<n>.json with the next n after the largest existing one."""
+    ns = [int(m.group(1)) for p in root.glob("BENCH_*.json")
+          if (m := re.fullmatch(r"BENCH_(\d+)\.json", p.name))]
+    return root / f"BENCH_{max(ns, default=0) + 1}.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,kernels,perf")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write suite->us_per_call to the next free "
+                         "top-level BENCH_<n>.json (perf trajectory "
+                         "across PRs)")
+    ap.add_argument("--snapshot-out", default=None,
+                    help="explicit snapshot path (implies --snapshot)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only != "all" else None
+    snapshot = args.snapshot or args.snapshot_out is not None
 
     from benchmarks import (bench_atcs, bench_e2e, bench_filter,
                             bench_generalization, bench_kernels,
                             bench_negative_portion, bench_perf_xjoin,
                             bench_tradeoff, bench_xdt)
+    from benchmarks.common import SCALE
     suites = [
         ("tab3", "Table III negative-query portions", bench_negative_portion.run),
         ("tab4", "Table IV ATCS vs fixed eps selection", bench_atcs.run),
@@ -35,18 +94,35 @@ def main() -> None:
         ("perf", "Perf: XJoin paper-faithful vs optimized", bench_perf_xjoin.run),
     ]
     print("name,us_per_call,derived")
+    captured: dict[str, dict[str, float]] = {}
     for key, title, fn in suites:
         if want is not None and key not in want:
             continue
         print(f"# === {key}: {title} ===", flush=True)
+        tee = _Tee(sys.stdout) if snapshot else None
         t0 = time.time()
         try:
-            fn()
+            if tee is not None:
+                old, sys.stdout = sys.stdout, tee
+                try:
+                    fn()
+                finally:
+                    sys.stdout = old
+                captured[key] = parse_rows(tee.text())
+            else:
+                fn()
             print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:
             import traceback
             traceback.print_exc()
             print(f"# {key} FAILED: {e}", file=sys.stderr, flush=True)
+
+    if snapshot:
+        path = (Path(args.snapshot_out) if args.snapshot_out
+                else next_snapshot_path(REPO_ROOT))
+        payload = {"scale": SCALE, "suites": captured}
+        path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+        print(f"# snapshot -> {path}", flush=True)
 
 
 if __name__ == '__main__':

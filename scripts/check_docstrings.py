@@ -4,8 +4,9 @@ modules must carry a docstring (the `make docs-check` target, wired into
 CI via scripts/ci.sh and tests/test_docs.py).
 
 Checked modules: core/api.py (the JoinPlan + Filter/Searcher protocol
-surface), core/engine.py, core/xjoin.py, launch/serve.py — the public API
-a user touches to serve a join stream. "Public" = module-level
+surface), core/engine.py, core/topology.py (the placement layer),
+core/xjoin.py, launch/serve.py — the public API a user touches to serve
+a join stream. "Public" = module-level
 defs, classes, and methods of public classes whose names don't start with
 an underscore (dunder methods other than __init__ are exempt; __init__ is
 exempt when the owning class documents construction in its own docstring).
@@ -21,6 +22,7 @@ REPO = Path(__file__).resolve().parent.parent
 CHECKED = (
     "src/repro/core/api.py",
     "src/repro/core/engine.py",
+    "src/repro/core/topology.py",
     "src/repro/core/xjoin.py",
     "src/repro/launch/serve.py",
 )

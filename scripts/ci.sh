@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Single CI entry point (DESIGN.md §8 test lanes):
-#   scripts/ci.sh          — docs gate + fast lane (default; target < 90 s)
-#   scripts/ci.sh full     — docs gate + tier-1 full suite (includes slow)
+#   scripts/ci.sh          — hygiene + docs gate + fast lane + bench smoke
+#                            snapshot (default; target < 2 min)
+#   scripts/ci.sh full     — same, but tier-1 full suite (includes slow)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,3 +31,21 @@ if [ "${1:-fast}" = "full" ]; then
 else
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow"
 fi
+
+# smoke-scale perf snapshot: proves the BENCH_<n>.json trajectory pipeline
+# (benchmarks/run.py --snapshot) end-to-end without touching the tracked
+# top-level snapshots — the real per-PR snapshot is written deliberately
+echo "== bench snapshot (smoke) =="
+snap_dir=$(mktemp -d)
+trap 'rm -rf "$snap_dir"' EXIT
+REPRO_BENCH_SCALE=small REPRO_BENCH_OUT="$snap_dir" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only kernels \
+    --snapshot-out "$snap_dir/BENCH_smoke.json" > "$snap_dir/bench.log"
+python - "$snap_dir/BENCH_smoke.json" <<'EOF'
+import json, sys
+snap = json.load(open(sys.argv[1]))
+rows = snap["suites"].get("kernels", {})
+assert rows, f"smoke snapshot captured no kernel rows: {snap}"
+print(f"snapshot OK ({len(rows)} rows, scale={snap['scale']})")
+EOF

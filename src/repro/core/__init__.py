@@ -7,16 +7,22 @@
   xjoin.py — legacy XJoin shims (FilteredJoin et al.) over JoinPlan
   joins/   — join methods on the Searcher protocol (naive/grid/LSH/
              LSBF/kmeans-tree/IVFPQ)
+  topology.py — engine placement layer (Replicated / RingSharded)
 """
 from repro.core.api import (Filter, JoinPlan, JoinResult, Searcher,
                             as_filter)
 from repro.core.xling import XlingConfig, XlingFilter
 from repro.core.xjoin import FilteredJoin, build_xjoin, enhance_with_xling
-from repro.core.engine import JoinEngine, sharded_range_count_hist
+from repro.core.engine import (JoinEngine, clear_program_cache,
+                               sharded_range_count_hist)
+from repro.core.topology import (TOPOLOGIES, Replicated, RingSharded,
+                                 Topology, resolve_topology)
 from repro.core import atcs, xdt
 from repro.core.joins import JOINS, make_join
 
 __all__ = ["Filter", "Searcher", "JoinPlan", "JoinResult", "as_filter",
            "XlingConfig", "XlingFilter", "FilteredJoin",
            "build_xjoin", "enhance_with_xling", "JoinEngine",
-           "sharded_range_count_hist", "atcs", "xdt", "JOINS", "make_join"]
+           "clear_program_cache", "sharded_range_count_hist",
+           "TOPOLOGIES", "Topology", "Replicated", "RingSharded",
+           "resolve_topology", "atcs", "xdt", "JOINS", "make_join"]

@@ -48,6 +48,7 @@ from typing import (Any, Callable, Iterable, Iterator, Optional, Protocol,
 import numpy as np
 
 from repro.core.engine import VERIFY_BACKENDS, JoinEngine
+from repro.core.topology import resolve_topology
 from repro.core.joins import JOINS, make_join
 from repro.core.joins.lsbf import LSBF
 from repro.core.joins.naive import NaiveJoin
@@ -273,7 +274,8 @@ class JoinPlan:
     how EVERY join method, not just the naive sweep, gets the
     fused-skipping and async-streaming machinery."""
 
-    _ON_KEYS = ("mesh", "backend", "block", "engine", "cache_key")
+    _ON_KEYS = ("mesh", "backend", "block", "engine", "cache_key",
+                "topology", "r_shards")
 
     def __init__(self, R: np.ndarray, metric: str = "cosine"):
         self._R = np.asarray(R, np.float32)
@@ -282,7 +284,8 @@ class JoinPlan:
         self._search_spec: tuple[Any, dict] = ("naive", {})
         self._verify_spec: tuple[Any, dict] = ("auto", {})
         self._exec: dict = {"mesh": None, "backend": "auto", "block": 512,
-                            "engine": None, "cache_key": None}
+                            "engine": None, "cache_key": None,
+                            "topology": None, "r_shards": None}
         self._built: Optional[_BuiltPlan] = None
         self._device_filter_cache: dict = {}
 
@@ -326,10 +329,16 @@ class JoinPlan:
 
     def on(self, **opts) -> "JoinPlan":
         """Set execution placement: `mesh` (query-axis sharding via
-        `launch.mesh.make_data_mesh`), `backend` (DESIGN.md §2 kernel
-        matrix), `block` (compaction bucket quantum), `engine` (share a
-        prebuilt `JoinEngine` over the same R), `cache_key` (ground-truth
-        table disk cache for the xling fit)."""
+        `launch.mesh.make_data_mesh` / `make_join_mesh`), `backend`
+        (DESIGN.md §2 kernel matrix), `block` (compaction bucket
+        quantum), `engine` (share a prebuilt `JoinEngine` over the same
+        R), `cache_key` (ground-truth table disk cache for the xling
+        fit), `topology` ("replicated" | "ring" | a `Topology` instance
+        — where R lives on the mesh, DESIGN.md §10), `r_shards` (ring
+        only: size of the R-sharding mesh axis; when no mesh is given the
+        plan builds a `make_join_mesh(r=r_shards)` over the local
+        devices). `describe()["exec"]["topology"]` reports the resolved
+        placement including per-device R bytes."""
         unknown = set(opts) - set(self._ON_KEYS)
         if unknown:
             raise ValueError(f"on(): unknown option(s) {sorted(unknown)}; "
@@ -402,9 +411,12 @@ class JoinPlan:
                                   fpr_tolerance=(0.05 if fpr_tolerance is None
                                                  else fpr_tolerance),
                                   backend=self._exec["backend"], **opts)
+                # the plan's engine already holds R device-resident —
+                # the ground-truth fit sweep reuses it instead of
+                # re-uploading (groundtruth.cardinality_table engine=)
                 filt = XlingFilter(cfg).fit(
                     self._R, cache_key=self._exec["cache_key"],
-                    mesh=self._exec["mesh"])
+                    mesh=self._exec["mesh"], engine=engine)
                 return XlingAdapter(filt, tau=tau, xdt_mode=xdt_mode,
                                     fpr_tolerance=fpr_tolerance)
             if spec == "lsbf":
@@ -423,7 +435,7 @@ class JoinPlan:
                              "filters")
         if isinstance(spec, XlingFilter) and spec.estimator is None:
             spec.fit(self._R, cache_key=self._exec["cache_key"],
-                     mesh=self._exec["mesh"])
+                     mesh=self._exec["mesh"], engine=engine)
         return as_filter(spec, tau=tau, xdt_mode=xdt_mode,
                          fpr_tolerance=fpr_tolerance)
 
@@ -495,7 +507,25 @@ class JoinPlan:
         if self.metric not in ("cosine", "l2"):
             raise ValueError(f"metric={self.metric!r}: expected 'cosine' or "
                              "'l2'")
+        topo_spec = self._exec["topology"]
+        r_shards = self._exec["r_shards"]
+        # resolve early: an unknown topology name fails here, not mid-build
+        topology = resolve_topology(topo_spec) if topo_spec is not None \
+            else None
         engine = self._exec["engine"]
+        if r_shards is not None:
+            # r_shards targets a ring placement: requested explicitly, or
+            # carried by a shared engine (then it is a pure cross-check)
+            ring_target = (getattr(topology, "name", None) == "ring"
+                           or (topology is None and engine is not None
+                               and engine.topology.name == "ring"))
+            if not ring_target:
+                raise ValueError(
+                    f"on(r_shards={r_shards}): r_shards sizes the ring "
+                    "topology's R-sharding axis — it needs "
+                    "on(topology='ring') or a shared ring engine")
+            if int(r_shards) < 1:
+                raise ValueError(f"on(r_shards={r_shards}): must be >= 1")
         if engine is not None:
             if engine.metric != self.metric or not self._same_R(engine._R_host):
                 raise ValueError(
@@ -510,10 +540,44 @@ class JoinPlan:
                     "own mesh; either drop mesh= (the engine's placement "
                     "wins) or drop engine= (the plan builds an engine on "
                     "that mesh)")
+            if topology is not None and engine.topology.name != topology.name:
+                raise ValueError(
+                    "on(engine=..., topology=...): a shared engine carries "
+                    f"its own placement ({engine.topology.name!r}); either "
+                    "drop topology= or drop engine=")
+            if r_shards is not None and engine.r_shards != int(r_shards):
+                raise ValueError(
+                    f"on(engine=..., r_shards={r_shards}): the shared "
+                    f"engine shards R {engine.r_shards} way(s)")
         else:
-            if self._exec["mesh"] is None:
+            mesh = self._exec["mesh"]
+            r_axis = getattr(topology, "r_axis", "r")
+            if topology is not None and topology.name == "ring":
+                if mesh is None:
+                    if r_shards is None:
+                        raise ValueError(
+                            "on(topology='ring') needs r_shards=... (the "
+                            "plan then builds a make_join_mesh(r=r_shards) "
+                            "over the local devices) or an explicit 2-D "
+                            f"mesh with an {r_axis!r} axis")
+                    if r_axis != "r":
+                        raise ValueError(
+                            f"on(topology=<ring over {r_axis!r}>): "
+                            "make_join_mesh only builds ('r', 'data') "
+                            "meshes — pass an explicit mesh carrying the "
+                            "custom axis")
+                    from repro.launch.mesh import make_join_mesh
+                    mesh = make_join_mesh(r=int(r_shards))
+                elif (r_shards is not None
+                        and int(mesh.shape.get(r_axis, 1)) != int(r_shards)):
+                    raise ValueError(
+                        f"on(topology='ring', r_shards={r_shards}, "
+                        f"mesh=...): the mesh's {r_axis!r} axis has size "
+                        f"{int(mesh.shape.get(r_axis, 1))}")
+            if mesh is None:
                 # adopt an instance base's own engine when it provably
-                # owns this plan's (R, metric) — a NaiveJoin base already
+                # owns this plan's (R, metric) AND no conflicting
+                # placement was requested — a NaiveJoin base already
                 # pinned R on device; a second engine would double
                 # residency (an explicit on(mesh=...) still forces a
                 # fresh engine on that mesh)
@@ -521,13 +585,15 @@ class JoinPlan:
                 cand = getattr(spec, "engine", None) \
                     if not isinstance(spec, str) else None
                 if (cand is not None and cand.metric == self.metric
-                        and self._same_R(cand._R_host)):
+                        and self._same_R(cand._R_host)
+                        and (topology is None
+                             or cand.topology.name == topology.name)):
                     engine = cand
             if engine is None:
-                engine = JoinEngine(self._R, self.metric,
-                                    mesh=self._exec["mesh"],
+                engine = JoinEngine(self._R, self.metric, mesh=mesh,
                                     backend=self._exec["backend"],
-                                    block=self._exec["block"])
+                                    block=self._exec["block"],
+                                    topology=topology or "replicated")
         base = self._build_base(engine)
         filt = self._build_filter(engine)
         verify_route, verify_label = self._build_verify(engine, base)
@@ -661,7 +727,14 @@ class JoinPlan:
                      "mesh": (None if mesh is None
                               else dict(zip(mesh.axis_names,
                                             map(int, mesh.devices.shape)))),
-                     "engine_shared": self._exec["engine"] is not None},
+                     "engine_shared": self._exec["engine"] is not None,
+                     # the placement that actually runs (DESIGN.md §10):
+                     # per_device_r_bytes is the number topology moves
+                     "topology": {
+                         "name": st.engine.topology.name,
+                         "r_shards": int(st.engine.r_shards),
+                         "per_device_r_bytes":
+                             int(st.engine.per_device_r_bytes)}},
         }
 
     @property

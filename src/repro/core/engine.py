@@ -4,12 +4,19 @@ The paper reduces similarity join to filter-then-verify, and both halves
 bottom out in dense range counting — work that should saturate accelerators.
 This module is the execution layer that makes that true:
 
-  * `JoinEngine` pins the index set R on device once (replicated over the
-    mesh) and runs every sweep against it with bucketed static shapes.
-  * The range-count sweep shards the QUERY axis over the mesh's data axis
-    with `shard_map` (each device sweeps its query slice against the full
-    replicated R), so ground-truth `cardinality_table` construction and
-    naive-join verification scale across devices.
+  * `JoinEngine` pins the index set R on device once and runs every sweep
+    against it with bucketed static shapes.  WHERE R lives is a
+    first-class choice (DESIGN.md §10): `topology="replicated"` (the
+    default — R on every device, queries sharded over the mesh's data
+    axis) or `topology="ring"` (R row-sharded over a second `r` mesh
+    axis; the sweep runs as a `jax.lax.ppermute` ring with per-shard
+    partial counts `psum`'d over `r`, so |R| scales past one device's
+    memory).  The placement logic itself lives in `core/topology.py`;
+    this module stays the scheduling/caching layer.
+  * The range-count sweep shards the QUERY axis over the mesh
+    with `shard_map` (each device sweeps its query slice against its
+    topology-resident view of R), so ground-truth `cardinality_table`
+    construction and naive-join verification scale across devices.
   * `filtered_join` is the fused XJoin hot path: estimator inference + XDT
     thresholding run as one device program; the single host sync reads the
     positive count to pick a power-of-two capacity bucket; compaction +
@@ -44,23 +51,10 @@ from typing import Callable, Iterable, Iterator, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
-try:                                    # moved to the stable namespace in
-    from jax import shard_map           # newer JAX; experimental on 0.4.x
-except ImportError:
-    from jax.experimental.shard_map import shard_map
-
-
-def _shard_mapped(f, mesh, in_specs, out_specs):
-    try:
-        return shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)
-    except TypeError:                   # newer API dropped check_rep
-        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-
-from repro.kernels import ops, ref
-from repro.kernels.range_count import range_count_hist_pallas
+from repro.core.topology import Topology, _data_size, resolve_topology
+from repro.kernels import ops
 
 
 def _bucket_size(n: int, block: int) -> int:
@@ -90,82 +84,41 @@ def _pad_rows_np(x: np.ndarray, n: int) -> np.ndarray:
     return np.concatenate([x, pad])
 
 
-def _q_blocked_hist(q, r, eps, *, metric, block_q, block_r, nr_valid):
-    """[n, m] histogram, scanning q in block_q tiles so the fused
-    compare tensor stays O(block_q * block_r * m). q rows % block_q == 0."""
-    nblk = q.shape[0] // block_q
-    qb = q.reshape(nblk, block_q, q.shape[1])
-    out = jax.lax.map(
-        lambda x: ops.blocked_hist(x, r, eps, metric=metric,
-                                   block_r=block_r, nr_valid=nr_valid), qb)
-    return out.reshape(nblk * block_q, eps.shape[0])
-
-
-def _data_size(mesh, data_axis: str) -> int:
-    return int(mesh.shape.get(data_axis, 1)) if mesh is not None else 1
-
-
 @functools.lru_cache(maxsize=128)
 def _hist_program(mesh, data_axis, backend, metric, block_q, block_r,
-                  eps_chunk, nr_valid):
-    """Compiled (optionally shard_map'ped) sweep. Module-level cache so
-    engines over the same (mesh, |R|) share one XLA executable."""
-    if backend == "pallas":
-        interpret = jax.default_backend() != "tpu"
-
-        def shard_fn(q, r, eps):
-            return range_count_hist_pallas(
-                q, r, eps, metric=metric, nr_valid=nr_valid, block_q=block_q,
-                block_r=block_r, eps_chunk=eps_chunk, interpret=interpret)
-    elif backend == "ref":
-        def shard_fn(q, r, eps):
-            return ref.range_count_hist(q, r, eps, metric)
-    else:
-        def shard_fn(q, r, eps):
-            return _q_blocked_hist(q, r, eps, metric=metric, block_q=block_q,
-                                   block_r=block_r, nr_valid=nr_valid)
-
-    if _data_size(mesh, data_axis) > 1:
-        shard_fn = _shard_mapped(shard_fn, mesh,
-                                 in_specs=(P(data_axis), P(), P()),
-                                 out_specs=P(data_axis))
-    return jax.jit(shard_fn)
+                  eps_chunk, nr_valid, topology):
+    """Compiled topology-parametrized sweep `(q, r, eps, nrv) -> [n, m]`.
+    Module-level cache so engines over the same (mesh, topology, |R|)
+    share one XLA executable; evict with `clear_program_cache`."""
+    return topology.hist_program(mesh, data_axis, backend, metric, block_q,
+                                 block_r, eps_chunk, nr_valid)
 
 
 @functools.lru_cache(maxsize=128)
 def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
-                     nr_valid):
-    """Fused compact -> verify -> scatter. `capacity` is the bucketed static
-    shape; `n_pos` rides along as a device scalar so the same executable
-    serves every occupancy of a bucket."""
+                     nr_valid, topology):
+    """Compiled topology-parametrized compact -> verify -> scatter program
+    `(q, pos, n_pos, r, eps, nrv, *, capacity) -> [n]`. `capacity` is the
+    bucketed static shape; `n_pos` rides along as a device scalar so the
+    same executable serves every occupancy of a bucket. Cached like
+    `_hist_program`; evict with `clear_program_cache`."""
+    return topology.compact_program(mesh, data_axis, backend, metric,
+                                    block_q, block_r, nr_valid)
 
-    def prog(q, pos, n_pos, r, eps, *, capacity: int):
-        idx = jnp.nonzero(pos, size=capacity, fill_value=0)[0]
-        valid = jnp.arange(capacity) < n_pos
-        qpos = jnp.take(q, idx, axis=0)
-        if _data_size(mesh, data_axis) > 1:
-            qpos = jax.lax.with_sharding_constraint(
-                qpos, NamedSharding(mesh, P(data_axis)))
-        eps1 = jnp.reshape(eps, (1,)).astype(jnp.float32)
-        if backend == "ref":
-            found = ref.range_count_hist(qpos, r, eps1, metric)[:, 0]
-        elif capacity > block_q and capacity % block_q == 0:
-            # large buckets get the same query tiling as the main sweep so
-            # the compare temporaries stay O(block_q * block_r)
-            found = _q_blocked_hist(qpos, r, eps1, metric=metric,
-                                    block_q=block_q, block_r=block_r,
-                                    nr_valid=nr_valid)[:, 0]
-        else:
-            found = ops.blocked_hist(qpos, r, eps1, metric=metric,
-                                     block_r=block_r, nr_valid=nr_valid)[:, 0]
-        # invalid (padding) lanes all scatter-add 0 onto row 0
-        contrib = jnp.where(valid, found, 0).astype(jnp.int32)
-        return jnp.zeros((q.shape[0],), jnp.int32).at[idx].add(contrib)
 
-    # the padded query buffer is dead after this program — donate it on TPU
-    # so the compact output can reuse its HBM (CPU donation only warns)
-    donate = (0,) if jax.default_backend() == "tpu" else ()
-    return jax.jit(prog, static_argnames=("capacity",), donate_argnums=donate)
+def clear_program_cache() -> None:
+    """Evict every module-level compiled-program cache.
+
+    The `_hist_program` / `_compact_program` `lru_cache`s key on the mesh
+    (among others) and thereby pin XLA executables — and through them
+    device buffers — alive for meshes a long-lived serve process or a
+    test suite has already discarded. Call this after tearing down a mesh
+    (tests do) to release them; programs rebuild transparently on the
+    next engine call."""
+    _hist_program.cache_clear()
+    _compact_program.cache_clear()
+    from repro.core.joins.common import _sharded_verify_program
+    _sharded_verify_program.cache_clear()
 
 
 @dataclass
@@ -330,19 +283,26 @@ class StreamSession:
 class JoinEngine:
     """Device-resident exact join over a fixed index set R.
 
-    mesh: optional `jax.sharding.Mesh` with a `data_axis` axis (use
-    `launch.mesh.make_data_mesh()`); queries shard over it, R replicates.
-    Without a mesh everything runs single-device through the same programs.
+    mesh: optional `jax.sharding.Mesh` (use `launch.mesh.make_data_mesh()`
+    or, for the ring topology, `launch.mesh.make_join_mesh(data=, r=)`).
+    topology: "replicated" (default — queries shard over `data_axis`, R
+    replicates) or "ring" (R row-sharded over the mesh's `r` axis; the
+    sweep runs as a ppermute ring, DESIGN.md §10), or a `Topology`
+    instance. Without a mesh everything runs single-device through the
+    same programs.
     """
 
     def __init__(self, R, metric: str = "cosine", *, mesh=None,
                  backend: str = "auto", block_q: int = 256, block_r: int = 512,
-                 block: int = 512, eps_chunk: int = 8, data_axis: str = "data"):
+                 block: int = 512, eps_chunk: int = 8, data_axis: str = "data",
+                 topology: "str | Topology" = "replicated"):
         self.metric = metric
         self.backend = ops._resolve(backend)
         self.mesh, self.data_axis = mesh, data_axis
         self.block_q, self.block_r, self.block = block_q, block_r, block
         self.eps_chunk = eps_chunk
+        self.topology = resolve_topology(topology)
+        self.topology.validate(mesh, data_axis)
         R = np.asarray(R, np.float32)
         self.nr, self.dim = R.shape
         # host-side R backs lazy approximate-verifier construction (§5);
@@ -350,25 +310,49 @@ class JoinEngine:
         self._R_host = R
         self._verifiers: dict = {}
         self.ndata = _data_size(mesh, data_axis)
-        # "ref" sweeps the raw R (the oracle handles any shape); the blocked
-        # backends see an R padded to a block_r multiple and mask via nr_valid
-        Rp = R if self.backend == "ref" else _pad_rows_np(
-            R, ((self.nr + block_r - 1) // block_r) * block_r)
+        self.r_shards = self.topology.r_shards(mesh)
+        # "ref" on the replicated topology sweeps the raw R (the oracle
+        # handles any shape); everything else sees an R padded to the
+        # topology's row quantum (equal block-aligned shards) and masks —
+        # statically via nr_valid, or via the traced pad-row correction
+        # on sharded placements
+        if self.backend == "ref" and self.r_shards == 1:
+            Rp = R
+        else:
+            quantum = self.topology.r_row_quantum(block_r, mesh)
+            Rp = _pad_rows_np(R, -(-self.nr // quantum) * quantum)
+        self.nr_padded = len(Rp)
+        nrv = self.topology.nr_valid_shards(self.nr, self.nr_padded, mesh)
         if mesh is not None:
-            self._q_sharding = NamedSharding(mesh, P(data_axis))
-            self._Rdev = jax.device_put(Rp, NamedSharding(mesh, P()))
+            self._q_sharding = NamedSharding(
+                mesh, self.topology.q_spec(data_axis))
+            self._Rdev = jax.device_put(
+                Rp, NamedSharding(mesh, self.topology.r_spec()))
+            self._nrv_dev = None if nrv is None else jax.device_put(
+                nrv, NamedSharding(mesh, self.topology.r_spec()))
         else:
             self._q_sharding = None
             self._Rdev = jnp.asarray(Rp)
+            self._nrv_dev = None if nrv is None else jnp.asarray(nrv)
         self._filter_progs: dict = {}
+
+    @property
+    def per_device_r_bytes(self) -> int:
+        """Bytes of (padded) R resident on EACH device — the number the
+        topology choice moves; reported by `JoinPlan.describe()`."""
+        return self.topology.per_device_r_bytes(self.nr_padded, self.dim,
+                                                self.mesh)
 
     # ------------------------------------------------------------- plumbing
     def _pad_q(self, Q) -> np.ndarray:
         """Bucket the query count to a power-of-two multiple of one full
-        mesh sweep (block_q rows per device) — bounds recompiles AND keeps
-        per-shard shapes block-aligned."""
+        mesh sweep (block_q rows per device, over every axis the topology
+        shards queries on) — bounds recompiles AND keeps per-shard shapes
+        block-aligned."""
         Q = np.asarray(Q, np.float32)
-        return _pad_rows_np(Q, _bucket_size(len(Q), self.block_q * self.ndata))
+        quantum = self.topology.q_row_quantum(self.block_q, self.mesh,
+                                              self.data_axis)
+        return _pad_rows_np(Q, _bucket_size(len(Q), quantum))
 
     def _put_q(self, qp: np.ndarray) -> jax.Array:
         if self._q_sharding is not None:
@@ -392,8 +376,9 @@ class JoinEngine:
         ep = self._pad_eps(eps_grid)
         prog = _hist_program(self.mesh, self.data_axis, self.backend,
                              self.metric, self.block_q, self.block_r,
-                             self.eps_chunk, self.nr)
-        return prog(self._put_q(qp), self._Rdev, jnp.asarray(ep))
+                             self.eps_chunk, self.nr, self.topology)
+        return prog(self._put_q(qp), self._Rdev, jnp.asarray(ep),
+                    self._nrv_dev)
 
     def range_count_hist(self, Q, eps_grid) -> np.ndarray:
         """counts[i, j] = #-neighbors of Q[i] in R within eps_grid[j]."""
@@ -503,9 +488,9 @@ class JoinEngine:
                            st.qdev.shape[0])
             cprog = _compact_program(self.mesh, self.data_axis, self.backend,
                                      self.metric, self.block_q, self.block_r,
-                                     self.nr)
+                                     self.nr, self.topology)
             counts_dev = cprog(st.qdev, st.pos_dev, st.n_pos_dev, self._Rdev,
-                               st.eps_dev, capacity=capacity)
+                               st.eps_dev, self._nrv_dev, capacity=capacity)
             _start_host_copy(counts_dev)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
         else:
@@ -520,9 +505,15 @@ class JoinEngine:
             qpos = st.Q[idx]
             if hasattr(searcher, "candidates"):
                 cand = searcher_candidates(searcher, qpos, st.eps)
+                # on sharded placements each device verifies the candidate
+                # ids that land in its own R shard (common.py psums them)
+                shard = {} if self.r_shards == 1 else dict(
+                    mesh=self.mesh, r_axis=self.topology.r_axis,
+                    data_axis=self.data_axis,
+                    shard_rows=self.nr_padded // self.r_shards)
                 pend = dispatch_verify_candidates(
                     self._Rdev, qpos, cand, st.eps, self.metric,
-                    backend=self.backend)
+                    backend=self.backend, **shard)
 
                 def finalize():
                     counts = np.zeros((n,), np.int32)
@@ -623,10 +614,34 @@ class JoinEngine:
 def sharded_range_count_hist(Q, R, eps_grid, *, metric: str = "cosine",
                              mesh=None, backend: str = "auto",
                              block_q: int = 256, block_r: int = 512,
-                             data_axis: str = "data") -> np.ndarray:
+                             data_axis: str = "data",
+                             topology: "str | Topology" = "replicated",
+                             engine: "JoinEngine | None" = None) -> np.ndarray:
     """One-shot functional form of `JoinEngine.range_count_hist` (used by
-    `data.groundtruth.cardinality_table`); prefer a `JoinEngine` when R is
-    swept more than once."""
+    `data.groundtruth.cardinality_table`).
+
+    Pass a pre-built `engine=` over the same (R, metric) to reuse its
+    device-resident padded R — without it every call re-pads and
+    re-uploads R (and that is exactly what repeated ground-truth sweeps
+    used to do). The engine is validated against (R, metric): a mismatch
+    raises instead of silently sweeping the wrong index set."""
+    if engine is not None:
+        if (engine.metric != metric or engine.nr != len(R)
+                or not (engine._R_host is R
+                        or np.array_equal(engine._R_host,
+                                          np.asarray(R, np.float32)))):
+            raise ValueError(
+                "sharded_range_count_hist(engine=...): engine is built over "
+                f"a different (R, metric) — engine has |R|={engine.nr}/"
+                f"{engine.metric!r}, call has |R|={len(R)}/{metric!r}")
+        if mesh is not None and engine.mesh is not mesh:
+            raise ValueError(
+                "sharded_range_count_hist(engine=..., mesh=...): the engine "
+                "carries its own placement; drop mesh= (the engine's mesh "
+                "wins) or drop engine= (a fresh engine is built on that "
+                "mesh) — silently ignoring the mesh request would change "
+                "where the sweep runs")
+        return engine.range_count_hist(Q, eps_grid)
     eng = JoinEngine(R, metric, mesh=mesh, backend=backend, block_q=block_q,
-                     block_r=block_r, data_axis=data_axis)
+                     block_r=block_r, data_axis=data_axis, topology=topology)
     return eng.range_count_hist(Q, eps_grid)

@@ -123,6 +123,53 @@ def _verify_ref(R, q, cand, eps, *, metric):
     return _verify_block_impl(R, q, cand, eps, metric=metric)
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
+                            block, backend):
+    """Candidate verification against an R row-sharded over `r_axis`
+    (the ring topology, DESIGN.md §10).
+
+    Each device localizes the global candidate ids to its own shard's row
+    range ([me*shard_rows, (me+1)*shard_rows) -> masked to -1 outside),
+    verifies them against its resident shard, and the per-shard counts
+    are `psum`'d over `r_axis`. A candidate id maps to exactly one shard,
+    so the per-shard sort/dedup of `_verify_block_impl` stays correct and
+    R's padding rows (never referenced by valid ids) stay inert. The
+    query/candidate chunk additionally shards over `data_axis` whenever
+    its (block-bucketed) row count divides evenly — the data columns
+    split the work instead of repeating it. Cached per (mesh, geometry);
+    evicted by `engine.clear_program_cache`."""
+    from repro.core.topology import _data_size, _shard_mapped
+    from jax.sharding import PartitionSpec as P
+
+    ndata = _data_size(mesh, data_axis)
+
+    def shard_fn(rs, qb, cb, e):
+        lo = jax.lax.axis_index(r_axis) * shard_rows
+        local = cb - lo
+        keep = (cb >= 0) & (local >= 0) & (local < shard_rows)
+        cl = jnp.where(keep, local, -1).astype(jnp.int32)
+        if backend == "ref":
+            cnt = _verify_block_impl(rs, qb, cl, e, metric=metric)
+        else:
+            cnt = _verify_blocks(rs, qb, cl, e, metric=metric, block=block)
+        return jax.lax.psum(cnt, r_axis)
+
+    def run(rs, qb, cb, e):
+        # rows are static at trace time, so the placement choice is too;
+        # jit caches one executable per chunk-shape bucket either way
+        qspec = P(data_axis) if (ndata > 1 and qb.shape[0] % ndata == 0
+                                 and (backend == "ref"
+                                      or (qb.shape[0] // ndata) % block == 0)
+                                 ) else P()
+        mapped = _shard_mapped(shard_fn, mesh,
+                               in_specs=(P(r_axis), qspec, qspec, P()),
+                               out_specs=qspec)
+        return mapped(rs, qb, cb, e)
+
+    return jax.jit(run)
+
+
 class PendingCounts:
     """In-flight candidate verification: per-chunk device arrays with their
     host copies already started. `result()` is the only blocking point."""
@@ -141,33 +188,50 @@ class PendingCounts:
 
 def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                                eps: float, metric: str, *, block: int = 32,
-                               chunk: int = 8192,
-                               backend: str = "auto") -> PendingCounts:
+                               chunk: int = 8192, backend: str = "auto",
+                               mesh=None, r_axis: str | None = None,
+                               data_axis: str = "data",
+                               shard_rows: int = 0) -> PendingCounts:
     """Non-blocking form of `verify_candidates`: dispatches every chunk's
     device program, kicks off async device→host copies, and returns a
     `PendingCounts` handle. `R` may be a host array or an already
     device-resident replica (e.g. `JoinEngine`'s padded R — candidate ids
-    never reference padding rows, so the extra rows are inert)."""
+    never reference padding rows, so the extra rows are inert).
+
+    When `R` is row-sharded over a mesh axis (the ring topology), pass
+    `mesh`, `r_axis`, and `shard_rows` (rows per shard): each device then
+    verifies only the ids landing in its own shard and the counts are
+    `psum`'d over `r_axis` — R is never gathered."""
     from repro.core.engine import _bucket_size, _start_host_copy
     from repro.kernels import ops
     backend = ops._resolve(backend)
     n = len(Q)
     Rj = R if isinstance(R, jax.Array) else jnp.asarray(R)
+    sharded = mesh is not None and r_axis is not None
+    if sharded:
+        prog = _sharded_verify_program(mesh, r_axis, data_axis,
+                                       int(shard_rows), metric, block,
+                                       backend)
     parts = []
     for i in range(0, n, chunk):
         j = min(i + chunk, n)
         if backend == "ref":
-            cnt = _verify_ref(Rj, jnp.asarray(Q[i:j], jnp.float32),
-                              jnp.asarray(cand_ids[i:j], jnp.int32),
-                              jnp.float32(eps), metric=metric)
+            qb = jnp.asarray(Q[i:j], jnp.float32)
+            cb = jnp.asarray(cand_ids[i:j], jnp.int32)
         else:
             n_pad = _bucket_size(j - i, block)
-            qb = np.zeros((n_pad,) + Q.shape[1:], np.float32)
-            qb[:j - i] = Q[i:j]
-            cb = np.full((n_pad,) + cand_ids.shape[1:], -1, np.int32)
-            cb[:j - i] = cand_ids[i:j]
-            cnt = _verify_blocks(Rj, jnp.asarray(qb), jnp.asarray(cb),
-                                 jnp.float32(eps), metric=metric, block=block)
+            qh = np.zeros((n_pad,) + Q.shape[1:], np.float32)
+            qh[:j - i] = Q[i:j]
+            ch = np.full((n_pad,) + cand_ids.shape[1:], -1, np.int32)
+            ch[:j - i] = cand_ids[i:j]
+            qb, cb = jnp.asarray(qh), jnp.asarray(ch)
+        if sharded:
+            cnt = prog(Rj, qb, cb, jnp.float32(eps))
+        elif backend == "ref":
+            cnt = _verify_ref(Rj, qb, cb, jnp.float32(eps), metric=metric)
+        else:
+            cnt = _verify_blocks(Rj, qb, cb, jnp.float32(eps), metric=metric,
+                                 block=block)
         _start_host_copy(cnt)
         parts.append((cnt, i, j))
     return PendingCounts(parts, n)
@@ -175,15 +239,22 @@ def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
 
 def verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                       eps: float, metric: str, *, block: int = 32,
-                      chunk: int = 8192, backend: str = "auto") -> np.ndarray:
+                      chunk: int = 8192, backend: str = "auto",
+                      mesh=None, r_axis: str | None = None,
+                      data_axis: str = "data",
+                      shard_rows: int = 0) -> np.ndarray:
     """Exact verification of candidate lists. cand_ids [q, C] int32 (-1 pad).
     Returns int32 [q] counts of unique true neighbors among candidates.
     Queries are padded to a bucketed multiple of `block` (bounded
     recompiles) and verified in one device call per `chunk` — the chunk
     bounds device residency of the [q, C] candidate matrix; typical query
     sets fit in a single call. `backend` selects the §2 compute path
-    ("ref" = unpadded oracle); counts are backend-invariant.
+    ("ref" = unpadded oracle); counts are backend-invariant. Pass
+    `mesh`/`r_axis`/`shard_rows` to verify against a row-sharded R
+    (see `dispatch_verify_candidates`).
     """
     return dispatch_verify_candidates(R, Q, cand_ids, eps, metric,
                                       block=block, chunk=chunk,
-                                      backend=backend).result()
+                                      backend=backend, mesh=mesh,
+                                      r_axis=r_axis, data_axis=data_axis,
+                                      shard_rows=shard_rows).result()

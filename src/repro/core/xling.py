@@ -59,14 +59,17 @@ class XlingFilter:
 
     # ------------------------------------------------------------------ fit
     def fit(self, R: np.ndarray, *, cache_key: tuple | None = None,
-            target_table: np.ndarray | None = None, mesh=None) -> "XlingFilter":
+            target_table: np.ndarray | None = None, mesh=None,
+            engine=None) -> "XlingFilter":
         cfg = self.cfg
         self.train_points = np.asarray(R, np.float32)
         if target_table is None:
+            # engine= reuses an already-device-resident R for the
+            # ground-truth sweep (JoinPlan passes its own engine in)
             target_table = cardinality_table(
                 self.train_points, self.train_points, self.eps_grid, cfg.metric,
                 backend=cfg.backend, cache_key=cache_key, exclude_self=True,
-                mesh=mesh)
+                mesh=mesh, engine=engine)
         self.target_table = target_table
 
         select = (atcs_mod.atcs_select if cfg.strategy == "atcs"

@@ -61,7 +61,34 @@ def make_cpu_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
 
 
 def make_data_mesh(n: int | None = None) -> jax.sharding.Mesh:
-    """1-D `("data",)` mesh over the first n local devices (join engine)."""
+    """1-D `("data",)` mesh over the first n local devices (join engine,
+    replicated topology)."""
     devs = jax.devices()
     n = len(devs) if n is None else min(n, len(devs))
     return make_mesh((n,), ("data",), devices=devs[:n])
+
+
+def make_join_mesh(data: int | None = None, r: int = 1) -> jax.sharding.Mesh:
+    """2-D `("r", "data")` join-engine mesh (DESIGN.md §10).
+
+    `r` is the index-sharding axis (R row-shards over it under
+    `topology="ring"`; per-device R memory drops by this factor), `data`
+    the query-sharding axis; `data=None` spreads the remaining devices
+    (len(devices) // r). Built through the mandatory `make_mesh` compat
+    path. Raises ValueError when the local device count cannot host the
+    requested shape — at build time, not inside a sweep."""
+    devs = jax.devices()
+    if r < 1:
+        raise ValueError(f"make_join_mesh(r={r}): r must be >= 1")
+    if len(devs) < r:
+        raise ValueError(
+            f"make_join_mesh(r={r}): only {len(devs)} local device(s); the "
+            "r axis cannot exceed the device count")
+    if data is None:
+        data = len(devs) // r
+    n = r * data
+    if data < 1 or n > len(devs):
+        raise ValueError(
+            f"make_join_mesh(data={data}, r={r}): needs {n} devices, have "
+            f"{len(devs)}")
+    return make_mesh((r, data), ("r", "data"), devices=devs[:n])

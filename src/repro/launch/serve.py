@@ -66,13 +66,16 @@ def summarize(stats: list[dict], build_s: float) -> dict:
 def build_plan(args, R, metric: str) -> JoinPlan:
     """Compile the CLI flags into a built `JoinPlan` (filter fit + engine +
     verifier index all constructed here, so their one-time cost lands in
-    build_s, not in batch 0's reported latency)."""
+    build_s, not in batch 0's reported latency). `--topology ring` shards
+    R over `--r-shards` devices (DESIGN.md §10) — the resolved placement,
+    including per-device R bytes, lands in the printed plan line."""
     return (JoinPlan(R, metric)
             .filter("xling", tau=args.tau, xdt="fpr",
                     estimator=args.estimator, epochs=args.epochs)
             .search("naive")
             .verify(args.verify)
-            .on(backend="jnp", cache_key=(args.dataset, args.n))
+            .on(backend="jnp", cache_key=(args.dataset, args.n),
+                topology=args.topology, r_shards=args.r_shards)
             .build())
 
 
@@ -94,6 +97,14 @@ def main():
                     help="verification backend (DESIGN.md §5)")
     ap.add_argument("--depth", type=int, default=2,
                     help="async in-flight queue bound (0 ~= synchronous)")
+    ap.add_argument("--topology", default=None,
+                    choices=("replicated", "ring"),
+                    help="where R lives on the mesh (DESIGN.md §10): "
+                         "replicated (default) or ring (R sharded over "
+                         "--r-shards devices)")
+    ap.add_argument("--r-shards", type=int, default=None,
+                    help="ring topology: number of R shards (the mesh's "
+                         "r-axis size)")
     args = ap.parse_args()
 
     R, S, spec = load_dataset(args.dataset, n=args.n)

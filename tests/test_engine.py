@@ -1,13 +1,16 @@
-"""The sharded join engine (core/engine.py) + mesh-compat helper.
+"""The sharded join engine (core/engine.py) + topology + mesh-compat.
 
 Covers: single-device engine vs the ref oracle, FilteredJoin compaction
 parity for every verdict pattern, the streaming API (including the async
 double-buffered pipeline vs the synchronous path, and the StreamSession
 submit/flush invariants), the pluggable verification backends (lsh/ivfpq
 recall floors vs the exact oracle, verify_candidates backend parity), the
-exact-mode target clamp regression, and — in a forced-8-device subprocess,
-mirroring test_system — bit-for-bit equality of the sharded sweep with the
-ref backend while the query axis is genuinely distributed.
+topology layer (DESIGN.md §10: ring == ref on a degenerate 1-device ring,
+build-time validation, program-cache eviction, ground-truth engine
+reuse), the exact-mode target clamp regression, and — in forced-8-device
+subprocesses, mirroring test_system — bit-for-bit equality of the sharded
+sweep with the ref backend while the query axis is genuinely distributed,
+for BOTH the replicated and the ring (r x data ppermute ring) topologies.
 """
 import os
 import subprocess
@@ -257,6 +260,96 @@ def test_bucket_size_reexport():
     assert _bucket_size(513, 512) == 1024
 
 
+# ----------------------------------------------------- topology layer (§10)
+def test_ring_topology_single_device_parity(world):
+    """The ring topology on a degenerate 1x1 (r, data) mesh must stay
+    bit-identical to the ref oracle — this exercises the full ring code
+    path (ppermute ring, psum, zero-pad-row correction: R=900 pads to
+    1024 rows, and l2 eps up to 1.8 > sqrt(2) means uncorrected padding
+    rows WOULD count) without needing forced devices."""
+    from repro.launch.mesh import make_join_mesh
+    R, Q, eps = world
+    mesh = make_join_mesh(data=1, r=1)
+    assert mesh.axis_names == ("r", "data")
+    eng = JoinEngine(R, "l2", mesh=mesh, backend="jnp", topology="ring")
+    ref_eng = JoinEngine(R, "l2", backend="ref")
+    np.testing.assert_array_equal(eng.range_count_hist(Q, eps),
+                                  ref_eng.range_count_hist(Q, eps))
+    want = np.asarray(ref_eng.range_count(Q, 0.8))
+    v = np.random.default_rng(11).random(len(Q)) > 0.5
+    res = eng.filtered_join(Q, 0.8, verdicts=v)
+    np.testing.assert_array_equal(res.counts, np.where(v, want, 0))
+    # StreamSession parity + invariants under topology="ring"
+    sess = eng.stream_session(0.8, depth=1)
+    got = []
+    verdicts = [np.random.default_rng(s).random(50) > 0.5 for s in range(4)]
+    for i in range(4):
+        got.extend(sess.submit(Q[i * 25:i * 25 + 50], verdicts=verdicts[i]))
+        assert len(sess._inflight) <= 1
+    got.extend(sess.flush())
+    assert len(got) == 4
+    for i, r in enumerate(got):
+        w = eng.filtered_join(Q[i * 25:i * 25 + 50], 0.8,
+                              verdicts=verdicts[i])
+        np.testing.assert_array_equal(r.counts, w.counts)
+
+
+def test_topology_validation():
+    """Placement misconfiguration must fail at build/construction time
+    with actionable messages, never data-dependently mid-stream."""
+    from repro.core import JoinPlan, resolve_topology
+    from repro.core.topology import RingSharded
+    R = np.eye(8, dtype=np.float32)
+    with pytest.raises(ValueError, match="topology"):
+        resolve_topology("bogus")
+    with pytest.raises(ValueError, match="ring"):
+        JoinEngine(R, "l2", topology="ring")        # no mesh
+    with pytest.raises(ValueError, match="r_shards"):
+        JoinPlan(R, "l2").on(r_shards=2).build()    # replicated + r_shards
+    with pytest.raises(ValueError, match="r_shards"):
+        JoinPlan(R, "l2").on(topology="ring").build()
+    with pytest.raises(ValueError):                 # more shards than devices
+        JoinPlan(R, "l2").on(topology="ring", r_shards=64).build()
+    eng = JoinEngine(R, "l2", backend="jnp")        # replicated engine
+    with pytest.raises(ValueError, match="placement"):
+        JoinPlan(R, "l2").on(engine=eng, topology="ring",
+                             r_shards=1).build()
+    assert isinstance(resolve_topology("ring"), RingSharded)
+    assert resolve_topology(None).name == "replicated"
+
+
+def test_clear_program_cache(world):
+    """clear_program_cache() must evict the module-level compiled-program
+    caches (long-lived serve processes / test suites would otherwise pin
+    executables for discarded meshes) and the engine must transparently
+    rebuild afterwards."""
+    from repro.core import engine as engine_mod
+    R, Q, _ = world
+    eng = JoinEngine(R, "l2", backend="jnp")
+    want = eng.range_count(Q, 0.8)
+    assert engine_mod._hist_program.cache_info().currsize > 0
+    engine_mod.clear_program_cache()
+    assert engine_mod._hist_program.cache_info().currsize == 0
+    assert engine_mod._compact_program.cache_info().currsize == 0
+    np.testing.assert_array_equal(eng.range_count(Q, 0.8), want)
+
+
+def test_groundtruth_engine_reuse(world):
+    """cardinality_table(engine=...) must reuse the prebuilt engine's
+    device-resident R (identical counts) and reject an engine built over
+    a different index set instead of silently sweeping the wrong R."""
+    from repro.data.groundtruth import cardinality_table
+    R, Q, eps = world
+    eng = JoinEngine(R, "l2", backend="jnp")
+    want = cardinality_table(Q, R, eps, "l2", backend="jnp")
+    np.testing.assert_array_equal(
+        cardinality_table(Q, R, eps, "l2", engine=eng), want)
+    with pytest.raises(ValueError, match="different"):
+        cardinality_table(Q, R[:100], eps, "l2", engine=eng)
+    with pytest.raises(ValueError, match="different"):
+        cardinality_table(Q, R, eps, "cosine", engine=eng)
+
+
 # ------------------------------------------------- exact-target clamp (bugfix)
 def test_exact_targets_clamped_on_outliers():
     """An isolated point has range-count 1 (itself); after the self-match
@@ -331,15 +424,101 @@ def test_sharded_engine_subprocess_8dev():
     assert "ENGINE_SHARDED_OK" in out.stdout, out.stderr[-2000:]
 
 
+@pytest.mark.slow
+def test_ring_topology_subprocess_8dev():
+    """Forced 8-host-device subprocess: the ring topology (R row-sharded
+    over the r axis, ppermute ring sweep) must stay bit-for-bit equal to
+    the ref oracle on a 2x4 (r, data) mesh — raw sweep, compaction,
+    sharded candidate verification, and the async stream — and on a 4x2
+    mesh `JoinPlan.describe()` must report per-device R bytes reduced 4x
+    vs the replicated placement."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import numpy as np, jax\n"
+        "from repro.launch.mesh import make_join_mesh\n"
+        "from repro.core.engine import JoinEngine\n"
+        "from repro.core.api import JoinPlan\n"
+        "from repro.core.joins.common import verify_candidates\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(2)\n"
+        "def unit(n, d):\n"
+        "    x = rng.normal(size=(n, d)).astype(np.float32)\n"
+        "    return x / np.linalg.norm(x, axis=1, keepdims=True)\n"
+        "R, Q = unit(700, 16), unit(357, 16)\n"
+        "eps = np.linspace(0.2, 1.8, 19).astype(np.float32)\n"
+        "ref_eng = JoinEngine(R, 'l2', backend='ref')\n"
+        "want = ref_eng.range_count_hist(Q, eps)\n"
+        "mesh = make_join_mesh(data=4, r=2)\n"
+        "assert dict(zip(mesh.axis_names, mesh.devices.shape)) == "
+        "{'r': 2, 'data': 4}\n"
+        "eng = JoinEngine(R, 'l2', mesh=mesh, backend='jnp', "
+        "topology='ring')\n"
+        "out = eng.device_range_count_hist(Q, eps)\n"
+        "assert len({s.device for s in out.addressable_shards}) == 8\n"
+        "assert len({s.device for s in eng._Rdev.addressable_shards}) == 8\n"
+        "np.testing.assert_array_equal(eng.range_count_hist(Q, eps), want)\n"
+        "for seed in (0, 1):\n"
+        "    v = np.random.default_rng(seed).random(len(Q)) > 0.4\n"
+        "    res = eng.filtered_join(Q, float(eps[9]), verdicts=v)\n"
+        "    np.testing.assert_array_equal(res.counts, "
+        "np.where(v, want[:, 9], 0))\n"
+        "cand = rng.integers(-1, len(R), size=(len(Q), 33)).astype(np.int32)\n"
+        "want_vc = verify_candidates(R, Q, cand, 0.8, 'l2', backend='jnp')\n"
+        "got_vc = verify_candidates(eng._Rdev, Q, cand, 0.8, 'l2', "
+        "backend='jnp', mesh=mesh, r_axis='r', "
+        "shard_rows=eng.nr_padded // eng.r_shards)\n"
+        "np.testing.assert_array_equal(got_vc, want_vc)\n"
+        "batches = [Q[:50], Q[50:51], Q[51:200], Q[200:]]\n"
+        "sync = [eng.filtered_join(b, 0.8, verdicts=np.ones(len(b), bool)) "
+        "for b in batches]\n"
+        "stream = list(eng.stream(batches, 0.8, depth=2))\n"
+        "for s, a in zip(sync, stream):\n"
+        "    np.testing.assert_array_equal(a.counts, s.counts)\n"
+        # JoinPlan on a 4x2 mesh: counts identical to replicated/ref AND
+        # per-device R bytes down 4x (|R|=4096 divides 4*block_r evenly)
+        "R2, Q2 = unit(4096, 16), unit(193, 16)\n"
+        "mesh4 = make_join_mesh(data=2, r=4)\n"
+        "ring_plan = JoinPlan(R2, 'l2').filter('none').on(mesh=mesh4, "
+        "backend='jnp', topology='ring')\n"
+        "rep_plan = JoinPlan(R2, 'l2').filter('none').on(backend='jnp')\n"
+        "want2 = JoinEngine(R2, 'l2', backend='ref').range_count(Q2, 0.8)\n"
+        "a, b = ring_plan.run(Q2, 0.8), rep_plan.run(Q2, 0.8)\n"
+        "np.testing.assert_array_equal(a.counts, want2)\n"
+        "np.testing.assert_array_equal(b.counts, want2)\n"
+        "sc = np.concatenate([r.counts for r in "
+        "ring_plan.stream([Q2[:100], Q2[100:]], 0.8)])\n"
+        "np.testing.assert_array_equal(sc, want2)\n"
+        "tr = ring_plan.describe()['exec']['topology']\n"
+        "tp = rep_plan.describe()['exec']['topology']\n"
+        "assert tr['name'] == 'ring' and tr['r_shards'] == 4, tr\n"
+        "assert tp['per_device_r_bytes'] == 4 * tr['per_device_r_bytes'], "
+        "(tp, tr)\n"
+        "print('RING_TOPOLOGY_OK')\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         capture_output=True, text=True, timeout=300)
+    assert "RING_TOPOLOGY_OK" in out.stdout, out.stderr[-2000:]
+
+
 # ------------------------------------------------------------- mesh compat
 def test_make_mesh_no_axistype_dependency():
     """The compat helper must build meshes on JAX versions without
     jax.sharding.AxisType (the installed 0.4.x) and with explicit devices."""
     import jax
-    from repro.launch.mesh import make_cpu_mesh, make_data_mesh, make_mesh
+    from repro.launch.mesh import (make_cpu_mesh, make_data_mesh,
+                                   make_join_mesh, make_mesh)
     m = make_mesh((1, 1), ("data", "model"))
     assert m.axis_names == ("data", "model")
     m2 = make_mesh((1,), ("data",), devices=jax.devices()[:1])
     assert m2.devices.shape == (1,)
     assert make_cpu_mesh().axis_names == ("data", "model")
     assert make_data_mesh().axis_names == ("data",)
+    assert make_join_mesh(data=1, r=1).axis_names == ("r", "data")
+    with pytest.raises(ValueError):
+        make_join_mesh(r=0)
+    with pytest.raises(ValueError):
+        make_join_mesh(r=len(jax.devices()) + 1)
