@@ -1,0 +1,101 @@
+"""XJoin probe-placement rows (DESIGN.md §11): host- vs device-probe,
+replicated vs ring.
+
+Smoke-scale end-to-end streams of the engine's approximate-verification
+pipeline, timing the SAME workload with the index probe on host (the
+legacy route: verdict readback -> NumPy/jit probe -> candidate upload)
+and on device (`probe="device"`: compact -> probe -> verify fused into
+mesh programs, positives never leaving the device). Every query is
+probed (filter "none") so the rows isolate probing cost — the filtered
+end-to-end picture lives in bench_e2e (fig2). Small 64-query batches
+are the serving-shaped regime where per-batch host glue matters.
+
+Rows: ``xjoin/<verify>-<probe>-<topology>`` -> us/query over the
+streamed batches (median of REPS passes); the device rows' derived
+column carries the speedup vs their host counterpart — the BENCH_<n>
+acceptance number. Runs at a fixed smoke n regardless of
+REPRO_BENCH_SCALE (the comparison, not the scale, is the point).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, get_data, save_json
+
+DATASET = "glove"
+N = 6000
+EPS = 0.45
+BATCH, NBATCH, DEPTH = 64, 30, 2
+WARM, REPS = 2, 5
+
+PARAMS = {
+    "lsh": dict(k=14, l=10, n_probes=4, W=2.5),
+    "ivfpq": dict(C=64, n_probe=8, n_candidates=400),
+}
+
+
+def _stream_ms(plan, batches) -> float:
+    """Median wall-clock (ms) of one full streamed pass over `batches`."""
+    def one():
+        t0 = time.perf_counter()
+        list(plan.stream(batches, EPS, depth=DEPTH))
+        return time.perf_counter() - t0
+
+    for _ in range(WARM):
+        one()
+    return float(np.median([one() for _ in range(REPS)])) * 1e3
+
+
+def run() -> list:
+    import jax
+
+    from repro.core import JoinPlan
+    from repro.launch.mesh import make_join_mesh
+
+    R, S, spec = get_data(DATASET, N)
+    batches = [S[i * BATCH:(i + 1) * BATCH] for i in range(NBATCH)]
+    batches = [b for b in batches if len(b)]
+    nq = sum(len(b) for b in batches)
+
+    r_shards = 2 if len(jax.devices()) >= 2 else 1
+    topologies = {
+        "replicated": dict(),
+        # degenerate r=1 on single-device hosts still exercises the full
+        # ring program path (ppermute ring, per-shard probe tables)
+        f"ring{r_shards}": dict(mesh=make_join_mesh(r=r_shards),
+                                topology="ring"),
+    }
+
+    rows = []
+    for topo, on_extra in topologies.items():
+        engine = None
+        for verify, params in PARAMS.items():
+            ms = {}
+            for probe in ("host", "device"):
+                plan = (JoinPlan(R, spec.metric).filter("none")
+                        .search("naive").verify(verify, **params)
+                        .on(backend="jnp", probe=probe,
+                            **(dict(engine=engine) if engine else on_extra))
+                        .build())
+                engine = plan.engine       # share R + verifier indices
+                ms[probe] = _stream_ms(plan, batches)
+            speedup = ms["host"] / max(ms["device"], 1e-9)
+            for probe in ("host", "device"):
+                derived = (f"speedup_vs_host={speedup:.3f}"
+                           if probe == "device" else
+                           f"total_ms={ms[probe]:.1f}")
+                emit(f"xjoin/{verify}-{probe}-{topo}",
+                     ms[probe] * 1e3 / nq, derived)
+                rows.append({"verify": verify, "probe": probe,
+                             "topology": topo, "total_ms": ms[probe],
+                             "us_per_query": ms[probe] * 1e3 / nq,
+                             "speedup_vs_host": (speedup if probe ==
+                                                 "device" else None)})
+    save_json("xjoin_probe_placement", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -66,7 +66,8 @@ def next_snapshot_path(root: Path) -> Path:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,kernels,perf")
+                    help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,"
+                         "kernels,perf,xjoin")
     ap.add_argument("--snapshot", action="store_true",
                     help="write suite->us_per_call to the next free "
                          "top-level BENCH_<n>.json (perf trajectory "
@@ -80,7 +81,7 @@ def main() -> None:
     from benchmarks import (bench_atcs, bench_e2e, bench_filter,
                             bench_generalization, bench_kernels,
                             bench_negative_portion, bench_perf_xjoin,
-                            bench_tradeoff, bench_xdt)
+                            bench_probe, bench_tradeoff, bench_xdt)
     from benchmarks.common import SCALE
     suites = [
         ("tab3", "Table III negative-query portions", bench_negative_portion.run),
@@ -92,6 +93,8 @@ def main() -> None:
         ("fig45", "Figures 4/5 generalization", bench_generalization.run),
         ("kernels", "Kernel micro-benchmarks", bench_kernels.run),
         ("perf", "Perf: XJoin paper-faithful vs optimized", bench_perf_xjoin.run),
+        ("xjoin", "XJoin probe placement: host vs device, per topology",
+         bench_probe.run),
     ]
     print("name,us_per_call,derived")
     captured: dict[str, dict[str, float]] = {}

@@ -5,8 +5,8 @@ CI via scripts/ci.sh and tests/test_docs.py).
 
 Checked modules: core/api.py (the JoinPlan + Filter/Searcher protocol
 surface), core/engine.py, core/topology.py (the placement layer),
-core/xjoin.py, launch/serve.py — the public API a user touches to serve
-a join stream. "Public" = module-level
+core/probe.py (the device-resident probing layer), core/xjoin.py,
+launch/serve.py — the public API a user touches to serve a join stream. "Public" = module-level
 defs, classes, and methods of public classes whose names don't start with
 an underscore (dunder methods other than __init__ are exempt; __init__ is
 exempt when the owning class documents construction in its own docstring).
@@ -22,6 +22,7 @@ REPO = Path(__file__).resolve().parent.parent
 CHECKED = (
     "src/repro/core/api.py",
     "src/repro/core/engine.py",
+    "src/repro/core/probe.py",
     "src/repro/core/topology.py",
     "src/repro/core/xjoin.py",
     "src/repro/launch/serve.py",

@@ -32,6 +32,39 @@ else
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow"
 fi
 
+# device-probe smoke (DESIGN.md §11): single-device parity of the
+# probe="device" route with host probing, under the jnp backend AND the
+# pallas backend (interpret mode off-TPU) — the new layer cannot regress
+# silently on hosts without accelerators
+echo "== device-probe smoke (jnp + pallas-interpret) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import numpy as np
+from repro.core import JoinPlan
+
+rng = np.random.default_rng(0)
+def unit(n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+R, Q = unit(600, 16), unit(96, 16)
+for backend in ("jnp", "pallas"):
+    dev = (JoinPlan(R, "l2").search("naive")
+           .verify("lsh", k=8, l=6, n_probes=4)
+           .on(backend=backend, probe="device").build())
+    host = (JoinPlan(R, "l2").search("naive")
+            .verify("lsh", k=8, l=6, n_probes=4)
+            .on(engine=dev.engine, backend=backend, probe="host").build())
+    assert dev.describe()["exec"]["probe"]["resolved"] == "device"
+    a, b = dev.run(Q, 0.8), host.run(Q, 0.8)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    exact = np.asarray(dev.engine.range_count(Q, 0.8))   # engine sweep on
+    assert (a.counts <= exact).all()                     # this backend
+    sc = np.concatenate(
+        [r.counts for r in dev.stream([Q[:48], Q[48:]], 0.8)])
+    np.testing.assert_array_equal(sc, a.counts)
+    print(f"device-probe smoke OK (backend={backend})")
+EOF
+
 # smoke-scale perf snapshot: proves the BENCH_<n>.json trajectory pipeline
 # (benchmarks/run.py --snapshot) end-to-end without touching the tracked
 # top-level snapshots — the real per-PR snapshot is written deliberately

@@ -9,8 +9,8 @@
              LSBF/kmeans-tree/IVFPQ)
   topology.py — engine placement layer (Replicated / RingSharded)
 """
-from repro.core.api import (Filter, JoinPlan, JoinResult, Searcher,
-                            as_filter)
+from repro.core.api import (DeviceSearcher, Filter, JoinPlan, JoinResult,
+                            Searcher, as_filter)
 from repro.core.xling import XlingConfig, XlingFilter
 from repro.core.xjoin import FilteredJoin, build_xjoin, enhance_with_xling
 from repro.core.engine import (JoinEngine, clear_program_cache,
@@ -20,7 +20,8 @@ from repro.core.topology import (TOPOLOGIES, Replicated, RingSharded,
 from repro.core import atcs, xdt
 from repro.core.joins import JOINS, make_join
 
-__all__ = ["Filter", "Searcher", "JoinPlan", "JoinResult", "as_filter",
+__all__ = ["Filter", "Searcher", "DeviceSearcher", "JoinPlan", "JoinResult",
+           "as_filter",
            "XlingConfig", "XlingFilter", "FilteredJoin",
            "build_xjoin", "enhance_with_xling", "JoinEngine",
            "clear_program_cache", "sharded_range_count_hist",

@@ -85,6 +85,29 @@ class Searcher(Protocol):
         ...
 
 
+@runtime_checkable
+class DeviceSearcher(Searcher, Protocol):
+    """A Searcher whose index probe can run ON the mesh (DESIGN.md §11).
+
+    `device_probe(eps)` is the Searcher analogue of
+    `Filter.device_filter`: it returns a probe spec (`core/probe.py` —
+    an object exposing `place(engine) -> PlacedProbe`) or None when the
+    index cannot probe on device. The engine places each distinct spec
+    once (tables uploaded and pinned like R, per the topology) and then
+    runs probe -> candidate verification entirely on device, leaving the
+    positive-count read as the only per-batch host sync. Contract:
+    `eps` may be None (plan-build/validation calls) — return the
+    radius-free spec or None; radius-DEPENDENT probes must return one
+    (preferably memoized) spec per distinct eps, since placement is
+    cached by spec identity. Searchers whose classes cannot grow the
+    method register a builder in `probe.PROBE_BUILDERS` instead;
+    searchers doing neither simply keep the host probe path."""
+
+    def device_probe(self, eps: float):
+        """Probe spec for the engine to place on its mesh, or None."""
+        ...
+
+
 # ======================================================== filter adapters
 class XlingAdapter:
     """`XlingFilter` on the Filter protocol: verdicts via the estimator +
@@ -246,6 +269,7 @@ class _BuiltPlan:
     filter: Optional[Any]
     verify_route: Any                       # "exact" | Searcher object
     verify_label: str
+    placed_probe: Any = None                # PlacedProbe | None (§11)
 
 
 def _spec_name(spec) -> str:
@@ -275,7 +299,7 @@ class JoinPlan:
     fused-skipping and async-streaming machinery."""
 
     _ON_KEYS = ("mesh", "backend", "block", "engine", "cache_key",
-                "topology", "r_shards")
+                "topology", "r_shards", "probe")
 
     def __init__(self, R: np.ndarray, metric: str = "cosine"):
         self._R = np.asarray(R, np.float32)
@@ -285,7 +309,8 @@ class JoinPlan:
         self._verify_spec: tuple[Any, dict] = ("auto", {})
         self._exec: dict = {"mesh": None, "backend": "auto", "block": 512,
                             "engine": None, "cache_key": None,
-                            "topology": None, "r_shards": None}
+                            "topology": None, "r_shards": None,
+                            "probe": "auto"}
         self._built: Optional[_BuiltPlan] = None
         self._device_filter_cache: dict = {}
 
@@ -337,8 +362,13 @@ class JoinPlan:
         — where R lives on the mesh, DESIGN.md §10), `r_shards` (ring
         only: size of the R-sharding mesh axis; when no mesh is given the
         plan builds a `make_join_mesh(r=r_shards)` over the local
-        devices). `describe()["exec"]["topology"]` reports the resolved
-        placement including per-device R bytes."""
+        devices), `probe` ("auto" | "device" | "host", DESIGN.md §11 —
+        where the approximate verify route's index probe runs; "auto"
+        picks the device whenever the searcher advertises
+        `device_probe`, "device" requires it and fails at build when
+        unavailable). `describe()["exec"]["topology"]` /
+        `describe()["exec"]["probe"]` report the resolved placement
+        including per-device R and probe-table bytes."""
         unknown = set(opts) - set(self._ON_KEYS)
         if unknown:
             raise ValueError(f"on(): unknown option(s) {sorted(unknown)}; "
@@ -597,9 +627,15 @@ class JoinPlan:
         base = self._build_base(engine)
         filt = self._build_filter(engine)
         verify_route, verify_label = self._build_verify(engine, base)
+        # resolve the probe placement now (DESIGN.md §11): probe='device'
+        # with a route that has no device probe fails HERE with an
+        # actionable message, and the 'auto' placement cost (probe-table
+        # upload + program build) lands at build time, not in batch 0
+        placed = engine.device_probe_for(verify_route, self._exec["probe"])
         self._built = _BuiltPlan(engine=engine, base=base, filter=filt,
                                  verify_route=verify_route,
-                                 verify_label=verify_label)
+                                 verify_label=verify_label,
+                                 placed_probe=placed)
         self._device_filter_cache.clear()
         return self
 
@@ -623,6 +659,22 @@ class JoinPlan:
             return None                     # engine treats None as all-pos
         return np.asarray(f.verdicts(Q, eps), bool)
 
+    def _route_searcher(self):
+        """The searcher object behind the verify route ("exact" -> None;
+        engine-cached instance for by-name routes)."""
+        route = self._built.verify_route
+        if route == "exact":
+            return None
+        if isinstance(route, str):
+            return self._built.engine.verifier(route)
+        return route
+
+    def _overflow_frac(self) -> Optional[float]:
+        """The verify route's build-time candidate-loss budget
+        (`LSHJoin.overflow_frac`), or None when the route has none."""
+        frac = getattr(self._route_searcher(), "overflow_frac", None)
+        return None if frac is None else float(frac)
+
     def _wrap(self, res, n: int, eps: float, t_host: float) -> JoinResult:
         st = self._built
         return JoinResult(
@@ -631,7 +683,9 @@ class JoinPlan:
             meta={"eps": eps, "tau": getattr(st.filter, "tau", 0),
                   "base": getattr(st.base, "name", "?"),
                   "filter": _filter_label(st.filter),
-                  "engine": True, "verify": res.verify})
+                  "engine": True, "verify": res.verify,
+                  "probe": res.probe,
+                  "overflow_frac": self._overflow_frac()})
 
     def run(self, Q: np.ndarray, eps: float) -> JoinResult:
         """One synchronous join pass: fused filter (or uploaded host
@@ -645,7 +699,7 @@ class JoinPlan:
         res = self._built.engine.filtered_join(
             Q, float(eps), predict=predict, threshold=threshold,
             verdicts=verdicts, block=self._exec["block"],
-            verify=self._built.verify_route)
+            verify=self._built.verify_route, probe=self._exec["probe"])
         return self._wrap(res, len(Q), eps, t_host)
 
     def stream(self, batches: Iterable[np.ndarray], eps: float, *,
@@ -662,7 +716,7 @@ class JoinPlan:
         sess = self._built.engine.stream_session(
             eps, predict=predict, threshold=threshold,
             verify=self._built.verify_route, depth=depth,
-            block=self._exec["block"])
+            block=self._exec["block"], probe=self._exec["probe"])
         pending: list[tuple[int, float]] = []   # FIFO of (n, host cost)
 
         def _emit(results):
@@ -721,7 +775,11 @@ class JoinPlan:
                        "params": scalars(sparams)},
             "verify": {"spec": _spec_name(vspec),
                        "resolved": st.verify_label,
-                       "params": scalars(vparams)},
+                       "params": scalars(vparams),
+                       # the route's build-time candidate-loss budget
+                       # (LSH bucket-capacity overflow) — None when the
+                       # route tracks none
+                       "overflow_frac": self._overflow_frac()},
             "exec": {"backend": st.engine.backend,
                      "block": self._exec["block"],
                      "mesh": (None if mesh is None
@@ -734,7 +792,23 @@ class JoinPlan:
                          "name": st.engine.topology.name,
                          "r_shards": int(st.engine.r_shards),
                          "per_device_r_bytes":
-                             int(st.engine.per_device_r_bytes)}},
+                             int(st.engine.per_device_r_bytes)},
+                     # where the verify route's index probe runs (§11):
+                     # "device" with table residency, "host" for probing
+                     # routes without a device probe, None for the exact
+                     # sweep (it has no probe stage)
+                     "probe": {
+                         "mode": self._exec["probe"],
+                         "resolved": (
+                             "device" if st.placed_probe is not None
+                             else ("host" if self._route_searcher()
+                                   is not None else None)),
+                         "table_bytes_per_device": (
+                             None if st.placed_probe is None else
+                             int(st.placed_probe.table_bytes_per_device)),
+                         "cand_width": (
+                             None if st.placed_probe is None else
+                             int(st.placed_probe.cand_width))}},
         }
 
     @property

@@ -27,14 +27,19 @@ This module is the execution layer that makes that true:
     with an approximate index probe over the same device-resident R —
     candidates are verified on device through
     `joins.common.verify_candidates`, so counts stay exact *per candidate*
-    and recall is measured against the exact path.
+    and recall is measured against the exact path. WHERE the probe runs
+    is a placement choice (DESIGN.md §11, `probe="auto"|"device"|"host"`):
+    with a device-capable searcher the probe tables live on the mesh
+    (`core/probe.py`) and compact → probe → verify is all device
+    programs — the positive-count read is the only per-batch host sync.
   * `stream` / `StreamSession` wrap that path for serving as an
-    asynchronous double-buffered pipeline (DESIGN.md §5): batch *k+1*'s
-    device programs are dispatched while batch *k*'s verification is still
-    in flight and its results transfer back via non-blocking host copies;
-    a bounded in-flight queue caps memory and `flush()` is the shutdown
-    barrier. Compiled programs are reused across batches because every
-    shape is bucketed.
+    asynchronous pipelined stream (DESIGN.md §5, §11): batches flow
+    filter-staged -> probe-staged -> committed, so batch *k+1*'s device
+    programs (and, with device probing, batch *k*'s probe) are dispatched
+    while batch *k−1*'s verification is still in flight and its results
+    transfer back via non-blocking host copies; a bounded in-flight queue
+    caps memory and `flush()` is the shutdown barrier. Compiled programs
+    are reused across batches because every shape is bucketed.
 
 Backend matrix (DESIGN.md §2): per-shard compute is the Pallas kernel on
 TPU ("pallas"), the blocked-jnp path elsewhere ("jnp"/"auto"), or the
@@ -119,6 +124,8 @@ def clear_program_cache() -> None:
     _compact_program.cache_clear()
     from repro.core.joins.common import _sharded_verify_program
     _sharded_verify_program.cache_clear()
+    from repro.core.probe import clear_probe_program_cache
+    clear_probe_program_cache()
 
 
 @dataclass
@@ -129,6 +136,7 @@ class EngineJoinResult:
     t_filter: float
     t_search: float
     verify: str = "exact"   # label of the backend that produced `counts`
+    probe: Optional[str] = None   # "device" | "host" | None (exact sweep)
 
 
 #: Verification backends accepted *by name* in `filtered_join(verify=...)` /
@@ -144,6 +152,23 @@ VERIFY_BACKENDS = ("exact", "lsh", "ivfpq")
 #: (candidates() for device verification, query_counts() for the host
 #: fallback) — validated by `_check_verify`.
 VerifySpec = "str | object"
+
+#: Probe placement modes (DESIGN.md §11): "auto" runs the probe on
+#: device whenever the verify route's searcher advertises a device probe
+#: (DeviceSearcher / probe.PROBE_BUILDERS), "device" requires it (fails
+#: at construction when unavailable), "host" forces the legacy host
+#: probe even when a device probe exists.
+PROBE_MODES = ("auto", "device", "host")
+
+
+def _note_host_sync(kind: str) -> None:
+    """Test-instrumentation hook invoked at every per-batch host
+    synchronization point: "n_pos" (the positive-count read), "verdicts"
+    (device->host verdict readback for host probing), "probe" (the host
+    index probe itself), "result" (final counts materialization). A
+    no-op in production; tests monkeypatch it to assert the device-probe
+    route performs no per-batch host transfers beyond the count read and
+    the result readback (the ISSUE 5 acceptance invariant)."""
 
 
 def _check_verify(verify) -> str:
@@ -178,10 +203,14 @@ def _start_host_copy(arr) -> None:
 
 
 class _StagedBatch:
-    """Stage-1 handle: queries resident, filter program dispatched, nothing
-    synced. `n_pos` is None until `JoinEngine._commit_verify` reads it."""
+    """Stage-1/2 handle: queries resident, filter program dispatched,
+    nothing synced. `n_pos` is None until `JoinEngine._stage_probe` (or
+    `_commit_verify` as a fallback) reads it; on a device-probe route
+    `_stage_probe` additionally fills `qpos_dev` / `idx_dev` / `cand_dev`
+    and sets `probe` to the placed probe that produced them."""
     __slots__ = ("Q", "n", "eps", "qdev", "eps_dev", "pos_dev", "n_pos_dev",
-                 "n_pos", "t_stage")
+                 "n_pos", "t_stage", "probe", "qpos_dev", "idx_dev",
+                 "cand_dev", "capacity")
 
 
 class PendingJoin:
@@ -194,9 +223,11 @@ class PendingJoin:
     """
 
     def __init__(self, finalize: Callable[[], np.ndarray], *, verify: str,
-                 n_searched: int, t_filter: float, t_dispatch: float):
+                 n_searched: int, t_filter: float, t_dispatch: float,
+                 probe: Optional[str] = None):
         self._finalize = finalize
         self._verify = verify
+        self._probe = probe
         self._n_searched = n_searched
         self._t_filter = t_filter
         self._t_dispatch = t_dispatch
@@ -205,53 +236,72 @@ class PendingJoin:
     def result(self) -> EngineJoinResult:
         """Materialize (blocking if the device is still busy)."""
         if self._res is None:
+            _note_host_sync("result")
             t0 = time.perf_counter()
             counts = self._finalize()
             self._res = EngineJoinResult(
                 counts, self._n_searched, self._t_filter,
-                self._t_dispatch + (time.perf_counter() - t0), self._verify)
+                self._t_dispatch + (time.perf_counter() - t0), self._verify,
+                self._probe)
         return self._res
 
 
 class StreamSession:
-    """Asynchronous double-buffered serving session (DESIGN.md §5).
+    """Asynchronous pipelined serving session (DESIGN.md §5, §11).
 
-    Push interface under `JoinEngine.stream`: `submit(Q)` stages the new
-    batch's device programs, commits the previously staged batch's
-    verification, and returns any results forced out by the `depth` bound;
-    `flush()` is the shutdown barrier — it commits the staged batch,
-    materializes everything outstanding, and returns the remaining results.
+    Push interface under `JoinEngine.stream`. Batches flow through THREE
+    stages — filter-staged -> probe-staged -> committed (verifying) —
+    so with a device-probe route batch k+1's probing executes on device
+    while batch k's verification is still in flight. `submit(Q)` stages
+    the new batch's filter programs, commits the probe-staged batch's
+    verification, advances the filter-staged batch into the probe stage
+    (its positive-count read is the per-batch host sync), and returns
+    any results forced out by the `depth` bound; `flush()` is the
+    shutdown barrier — it drains all three stages and returns the
+    remaining results.
 
     Invariants:
       * results come back in submission order (FIFO), bit-identical to
         per-batch `filtered_join` calls;
-      * at most `depth` committed batches plus one staged batch are in
-        flight, bounding device memory at (depth + 2) padded batches;
-      * on the exact verify route, the only per-batch host sync is the
-        staged batch's positive-count read, issued AFTER the next batch's
-        programs are enqueued (approximate/plug-in routes additionally
-        read back the verdicts and probe on host inside commit — their
-        candidate *verification* still overlaps, but probing is
-        synchronous);
+      * at most `depth` committed batches plus one probe-staged and one
+        filter-staged batch are in flight, bounding device memory at
+        (depth + 3) padded batches;
+      * on the exact and device-probe verify routes, the only per-batch
+        host syncs are the probe-staged batch's positive-count read —
+        issued AFTER the next batch's filter programs and the previous
+        batch's verification are enqueued — and the final result
+        readback (host-probe routes additionally read back the verdicts
+        and probe on host inside commit — their candidate *verification*
+        still overlaps, but probing is synchronous);
       * after `flush()` returns, no engine program of this session is
         outstanding.
     """
 
     def __init__(self, engine: "JoinEngine", eps: float, *, predict=None,
                  threshold=None, verify: VerifySpec = "exact", depth: int = 2,
-                 block: int | None = None):
+                 block: int | None = None, probe: str = "auto"):
         _check_verify(verify)
+        # resolve the probe route up front: probe="device" without a
+        # device-capable searcher fails here, never mid-stream
+        self._placed = engine.device_probe_for(verify, probe, eps=eps)
         self.engine = engine
         self.eps = float(eps)
         self.predict, self.threshold = predict, threshold
         self.verify, self.depth, self.block = verify, max(int(depth), 0), block
         self._staged: Optional[_StagedBatch] = None
+        self._probed: Optional[_StagedBatch] = None
         self._inflight: collections.deque[PendingJoin] = collections.deque()
 
-    def _commit_staged(self) -> None:
-        if self._staged is not None:
+    def _commit_probed(self) -> None:
+        if self._probed is not None:
             self._inflight.append(self.engine._commit_verify(
-                self._staged, verify=self.verify, block=self.block))
+                self._probed, verify=self.verify, block=self.block))
+            self._probed = None
+
+    def _advance_staged(self) -> None:
+        if self._staged is not None:
+            self._probed = self.engine._stage_probe(
+                self._staged, placed=self._placed, block=self.block)
             self._staged = None
 
     def submit(self, Q, *, verdicts=None) -> list[EngineJoinResult]:
@@ -262,7 +312,8 @@ class StreamSession:
         st = self.engine._stage_filter(
             Q, self.eps, predict=self.predict, threshold=self.threshold,
             verdicts=verdicts)
-        self._commit_staged()               # previous batch enters verify
+        self._commit_probed()               # batch k-1 enters verify
+        self._advance_staged()              # batch k probes (count read)
         self._staged = st
         out = []
         while len(self._inflight) > self.depth:
@@ -273,7 +324,9 @@ class StreamSession:
         """Barrier: drain the pipeline, returning all remaining results in
         submission order. Safe to call repeatedly; the session can keep
         submitting afterwards (the pipeline just restarts cold)."""
-        self._commit_staged()
+        self._commit_probed()
+        self._advance_staged()
+        self._commit_probed()
         out = []
         while self._inflight:
             out.append(self._inflight.popleft().result())
@@ -309,6 +362,7 @@ class JoinEngine:
         # np.asarray above is a no-copy view for float32 input
         self._R_host = R
         self._verifiers: dict = {}
+        self._probes: dict = {}     # searcher -> PlacedProbe | None (§11)
         self.ndata = _data_size(mesh, data_axis)
         self.r_shards = self.topology.r_shards(mesh)
         # "ref" on the replicated topology sweeps the raw R (the oracle
@@ -452,10 +506,96 @@ class JoinEngine:
                 jnp.asarray(threshold, jnp.float32),
                 jnp.asarray(st.n, jnp.int32))
             st.n_pos = None                 # read at commit time
+        st.probe = None                     # set by _stage_probe (§11)
         st.t_stage = time.perf_counter() - t0
         return st
 
-    # ------------------------------------- stage 2: verify dispatch (commit)
+    # ------------------------------------------- stage 2: probe dispatch
+    def device_probe_for(self, verify: VerifySpec, mode: str = "auto", *,
+                         eps: float | None = None):
+        """Resolve the device-probe route for a verify spec (§11).
+
+        mode="host" returns None (legacy host probing); "auto" returns a
+        placed probe when the route's searcher advertises one
+        (`device_probe(eps)` / `probe.PROBE_BUILDERS`) and None
+        otherwise; "device" REQUIRES one and raises ValueError when the
+        route has no probe stage (the exact sweep, query_counts-only
+        plug-ins) or the searcher is host-only — at construction time,
+        not mid-stream. `eps` is forwarded to the searcher's
+        `device_probe` (None at plan-build/validation time); placement
+        (table upload + program build) is cached per returned SPEC, so
+        radius-free probes — which memoize one spec per index — pay the
+        upload once, while an eps-aware searcher gets one placement per
+        distinct spec it returns."""
+        if mode not in PROBE_MODES:
+            raise ValueError(f"probe={mode!r}: expected one of "
+                             f"{list(PROBE_MODES)}")
+        if mode == "host":
+            return None
+        label = _check_verify(verify)
+        searcher = None
+        if isinstance(verify, str):
+            if verify != "exact":
+                searcher = self.verifier(verify)
+        elif hasattr(verify, "candidates"):
+            searcher = verify
+        if searcher is None:
+            if mode == "device":
+                raise ValueError(
+                    f"probe='device': verify={label!r} has no probe stage "
+                    "(the exact sweep and query_counts-only plug-ins "
+                    "produce no candidates); use probe='auto'|'host' or an "
+                    "approximate searcher")
+            return None
+        from repro.core.probe import as_device_probe
+        spec = as_device_probe(searcher, eps)
+        if spec is None:
+            if mode == "device":
+                raise ValueError(
+                    f"probe='device': searcher {label!r} exposes no device "
+                    "probe — implement device_probe(eps) (DESIGN.md §11) "
+                    "or register a builder in probe.PROBE_BUILDERS; "
+                    "probe='auto' falls back to host probing")
+            return None
+        placed = self._probes.get(spec)
+        if placed is None:
+            placed = spec.place(self)
+            self._probes[spec] = placed
+        return placed
+
+    def _stage_probe(self, st: "_StagedBatch", *, placed=None,
+                     block: int | None = None) -> "_StagedBatch":
+        """Stage 2 of the pipeline (§11): read the staged batch's positive
+        count (the pipeline's per-batch host sync — it waits on this
+        batch's cheap filter program only) and, on a device-probe route,
+        dispatch the compact-gather and probe programs, producing the
+        candidate ids on device while the PREVIOUS batch's verification
+        is still executing. Host-probe routes only perform the count
+        read here; the probing itself stays in `_commit_verify`."""
+        t0 = time.perf_counter()
+        if st.n_pos is None:
+            _note_host_sync("n_pos")
+            st.n_pos = int(st.n_pos_dev)
+        if placed is not None:
+            st.probe = placed               # the route, even if this batch
+            if st.n_pos > 0:                # stages nothing (all-negative)
+                from repro.core.probe import _gather_program
+                # probe cost is per-row (unlike the exact sweep, whose
+                # program cost is dominated by |R|), so the capacity bucket
+                # uses a fine 64-row quantum — the lcm of the IVF-PQ ADC
+                # tile and the verify block — instead of the coarse
+                # compaction block: small batches probe ~n_pos rows, not a
+                # whole padded batch
+                st.capacity = min(_bucket_size(st.n_pos, 64),
+                                  st.qdev.shape[0])
+                gather = _gather_program(self.mesh, self.data_axis)
+                st.qpos_dev, st.idx_dev = gather(st.qdev, st.pos_dev,
+                                                 capacity=st.capacity)
+                st.cand_dev = placed.probe(st.qpos_dev)
+        st.t_stage += time.perf_counter() - t0
+        return st
+
+    # ------------------------------------- stage 3: verify dispatch (commit)
     def _commit_verify(self, st: "_StagedBatch", *, verify: VerifySpec = "exact",
                        block: int | None = None) -> "PendingJoin":
         """Read the staged batch's positive count and dispatch verification.
@@ -473,14 +613,18 @@ class JoinEngine:
         DESIGN.md §9 protocol contract."""
         label = _check_verify(verify)       # fail fast, not data-dependently
         t0 = time.perf_counter()
-        if st.n_pos is None:
+        if st.n_pos is None:                # direct callers skipped stage 2
+            _note_host_sync("n_pos")
             st.n_pos = int(st.n_pos_dev)
         t_filter = st.t_stage + (time.perf_counter() - t0)
         n, n_pos = st.n, st.n_pos
+        probe_label = None if verify == "exact" else \
+            ("device" if st.probe is not None else "host")
 
         if n_pos == 0:
             return PendingJoin(lambda: np.zeros((n,), np.int32), verify=label,
-                               n_searched=0, t_filter=t_filter, t_dispatch=0.0)
+                               n_searched=0, t_filter=t_filter,
+                               t_dispatch=0.0, probe=probe_label)
 
         t1 = time.perf_counter()
         if verify == "exact":
@@ -493,6 +637,15 @@ class JoinEngine:
                                st.eps_dev, self._nrv_dev, capacity=capacity)
             _start_host_copy(counts_dev)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
+        elif st.probe is not None:
+            # device-probe route (§11): candidates were produced on device
+            # by _stage_probe — verification + scatter dispatch here, with
+            # no host transfer of verdicts or candidates at all
+            counts_dev = st.probe.verify(
+                st.qpos_dev, st.cand_dev, st.idx_dev, st.n_pos_dev,
+                st.eps_dev, out_rows=st.qdev.shape[0])
+            _start_host_copy(counts_dev)
+            finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
         else:
             from repro.core.joins.common import (dispatch_verify_candidates,
                                                  searcher_candidates)
@@ -500,10 +653,12 @@ class JoinEngine:
                 else verify
             # host probing needs the verdicts; the filter program is already
             # complete (n_pos was just read), so this transfer is cheap
+            _note_host_sync("verdicts")
             pos_host = np.asarray(st.pos_dev)[:n]
             idx = np.nonzero(pos_host)[0]
             qpos = st.Q[idx]
             if hasattr(searcher, "candidates"):
+                _note_host_sync("probe")
                 cand = searcher_candidates(searcher, qpos, st.eps)
                 # on sharded placements each device verifies the candidate
                 # ids that land in its own R shard (common.py psums them)
@@ -523,6 +678,7 @@ class JoinEngine:
                 # candidate-less plug-in: the searcher verifies the
                 # compacted positives itself (synchronous host hop — the
                 # generic "any loop-based method" fallback)
+                _note_host_sync("probe")
                 found = np.asarray(searcher.query_counts(qpos, st.eps),
                                    np.int32)
 
@@ -532,7 +688,8 @@ class JoinEngine:
                     return counts
         t_dispatch = time.perf_counter() - t1
         return PendingJoin(finalize, verify=label, n_searched=n_pos,
-                           t_filter=t_filter, t_dispatch=t_dispatch)
+                           t_filter=t_filter, t_dispatch=t_dispatch,
+                           probe=probe_label)
 
     # ------------------------------------------------ verification backends
     def verifier(self, name: str, **params):
@@ -555,6 +712,12 @@ class JoinEngine:
         v = None if params else self._verifiers.get(name)
         if v is None:
             from repro.core.joins import make_join   # circular at import time
+            stale = self._verifiers.get(name)
+            if stale is not None:
+                # a retune replaces the index: drop the old searcher's
+                # placed probe too, or its device-resident tables would
+                # stay pinned in self._probes for the engine's lifetime
+                self._probes.pop(getattr(stale, "_probe_spec", None), None)
             v = make_join(name, self._R_host, self.metric, **params)
             if not hasattr(v, "candidates"):
                 raise TypeError(f"join {name!r} exposes no candidates()")
@@ -564,8 +727,9 @@ class JoinEngine:
     # --------------------------------------------------- one-shot join call
     def filtered_join(self, Q, eps: float, *, predict=None, threshold=None,
                       verdicts=None, block: int | None = None,
-                      verify: VerifySpec = "exact") -> EngineJoinResult:
-        """One synchronous filter -> threshold -> compact -> verify pass.
+                      verify: VerifySpec = "exact",
+                      probe: str = "auto") -> EngineJoinResult:
+        """One synchronous filter -> threshold -> probe -> verify pass.
 
         Either pass `predict` = (params, fn) from an estimator's
         `device_predict_fn()` plus the XDT `threshold` (fully fused path),
@@ -573,25 +737,31 @@ class JoinEngine:
         `block` overrides the compaction bucket quantum (default
         self.block); `verify` picks the verification backend ("exact" |
         "lsh" | "ivfpq", DESIGN.md §5 — or any Searcher object whose
-        `candidates()` feeds the device verification path, DESIGN.md §9).
-        This is the synchronous reference path — `stream` pipelines the
-        same two stages."""
+        `candidates()` feeds the device verification path, DESIGN.md §9);
+        `probe` ("auto" | "device" | "host", DESIGN.md §11) selects where
+        the approximate route's index probe runs. This is the synchronous
+        reference path — `stream` pipelines the same three stages."""
+        placed = self.device_probe_for(verify, probe, eps=eps)
         st = self._stage_filter(Q, eps, predict=predict, threshold=threshold,
                                 verdicts=verdicts)
+        self._stage_probe(st, placed=placed, block=block)
         return self._commit_verify(st, verify=verify, block=block).result()
 
     # ------------------------------------------------------------ streaming
     def stream_session(self, eps: float, *, predict=None, threshold=None,
                        verify: VerifySpec = "exact", depth: int = 2,
-                       block: int | None = None) -> "StreamSession":
+                       block: int | None = None,
+                       probe: str = "auto") -> "StreamSession":
         """Open an asynchronous `StreamSession` (push interface) over this
         engine; `stream` is the pull/iterator form of the same pipeline."""
         return StreamSession(self, eps, predict=predict, threshold=threshold,
-                             verify=verify, depth=depth, block=block)
+                             verify=verify, depth=depth, block=block,
+                             probe=probe)
 
     def stream(self, batches: Iterable, eps: float, *, predict=None,
                threshold=None, verify: VerifySpec = "exact", depth: int = 2,
-               block: int | None = None) -> Iterator[EngineJoinResult]:
+               block: int | None = None,
+               probe: str = "auto") -> Iterator[EngineJoinResult]:
         """Serving loop: pipeline query batches through the engine.
 
         Asynchronous double-buffered (DESIGN.md §5): each incoming batch is
@@ -605,7 +775,8 @@ class JoinEngine:
         commit-then-materialize per batch (still one staged batch of
         lookahead)."""
         sess = self.stream_session(eps, predict=predict, threshold=threshold,
-                                   verify=verify, depth=depth, block=block)
+                                   verify=verify, depth=depth, block=block,
+                                   probe=probe)
         for Q in batches:
             yield from sess.submit(Q)
         yield from sess.flush()

@@ -123,37 +123,46 @@ def _verify_ref(R, q, cand, eps, *, metric):
     return _verify_block_impl(R, q, cand, eps, metric=metric)
 
 
-@functools.lru_cache(maxsize=64)
-def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
-                            block, backend):
-    """Candidate verification against an R row-sharded over `r_axis`
-    (the ring topology, DESIGN.md §10).
-
-    Each device localizes the global candidate ids to its own shard's row
-    range ([me*shard_rows, (me+1)*shard_rows) -> masked to -1 outside),
-    verifies them against its resident shard, and the per-shard counts
-    are `psum`'d over `r_axis`. A candidate id maps to exactly one shard,
-    so the per-shard sort/dedup of `_verify_block_impl` stays correct and
-    R's padding rows (never referenced by valid ids) stay inert. The
-    query/candidate chunk additionally shards over `data_axis` whenever
-    its (block-bucketed) row count divides evenly — the data columns
-    split the work instead of repeating it. Cached per (mesh, geometry);
-    evicted by `engine.clear_program_cache`."""
-    from repro.core.topology import _data_size, _shard_mapped
-    from jax.sharding import PartitionSpec as P
-
-    ndata = _data_size(mesh, data_axis)
-
+def localized_shard_verify(r_axis, shard_rows, metric, block, backend):
+    """Per-shard candidate verification against an R row-sharded over
+    `r_axis`: `shard_fn(rs, qb, cb, e)` localizes the global candidate
+    ids to this device's row range ([me*shard_rows, (me+1)*shard_rows)
+    -> masked to -1 outside), verifies them against the resident shard,
+    and `psum`s the counts over `r_axis`. A candidate id maps to exactly
+    one shard, so the per-shard sort/dedup of `_verify_block_impl` stays
+    correct and R's padding rows (never referenced by valid ids) stay
+    inert. The SINGLE implementation behind `_sharded_verify_program`
+    (host probing) and `probe.py`'s ring verify programs (device
+    probing, DESIGN.md §11) — the two routes cannot diverge."""
     def shard_fn(rs, qb, cb, e):
         lo = jax.lax.axis_index(r_axis) * shard_rows
         local = cb - lo
         keep = (cb >= 0) & (local >= 0) & (local < shard_rows)
         cl = jnp.where(keep, local, -1).astype(jnp.int32)
-        if backend == "ref":
+        if backend == "ref" or qb.shape[0] % block != 0:
             cnt = _verify_block_impl(rs, qb, cl, e, metric=metric)
         else:
             cnt = _verify_blocks(rs, qb, cl, e, metric=metric, block=block)
         return jax.lax.psum(cnt, r_axis)
+
+    return shard_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
+                            block, backend):
+    """Candidate verification against an R row-sharded over `r_axis`
+    (the ring topology, DESIGN.md §10): `localized_shard_verify` mapped
+    over the mesh. The query/candidate chunk additionally shards over
+    `data_axis` whenever its (block-bucketed) row count divides evenly —
+    the data columns split the work instead of repeating it. Cached per
+    (mesh, geometry); evicted by `engine.clear_program_cache`."""
+    from repro.core.topology import _data_size, _shard_mapped
+    from jax.sharding import PartitionSpec as P
+
+    ndata = _data_size(mesh, data_axis)
+    shard_fn = localized_shard_verify(r_axis, shard_rows, metric, block,
+                                      backend)
 
     def run(rs, qb, cb, e):
         # rows are static at trace time, so the placement choice is too;

@@ -4,12 +4,19 @@ IVF: coarse k-means into C lists; the query probes the p nearest lists.
 PQ:  vectors split into m segments, each quantized to 256 codes; candidate
      distances are approximated by ADC table lookups, the best
      `n_candidates` (paper: 1000) are verified exactly against eps.
+
+The coarse probe + ADC ranking math lives in `core/probe.py` (DESIGN.md
+§11), shared bit-for-bit between this host path and the engine's device
+probe programs; `device_probe()` advertises the DeviceSearcher
+capability so a plan with `probe="device"` quantizes and ranks on the
+mesh with candidates never leaving the device.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.joins.common import assign_nearest, build_capacity_table, kmeans, verify_candidates
+from repro.core.probe import IVFPQProbe, ivfpq_candidates
 
 
 class IVFPQJoin:
@@ -55,36 +62,23 @@ class IVFPQJoin:
         """ADC-ranked candidate ids, int32 [q, k] (-1 padded), k =
         min(n_candidates, probed pool). Host probing half of the
         host-probe / device-verify split (common.py); the engine's
-        `verify="ivfpq"` backend consumes this directly."""
-        Q = np.asarray(Q, np.float32)
-        nq = len(Q)
-        # 1. probe the p nearest IVF lists
-        dc = (np.sum(Q * Q, 1)[:, None] - 2 * Q @ self.centroids.T
-              + np.sum(self.centroids ** 2, 1)[None, :])
-        probes = np.argpartition(dc, self.n_probe - 1, axis=1)[:, :self.n_probe]
-        cand = self.lists[probes].reshape(nq, -1)             # [q, P*cap]
+        `verify="ivfpq"` backend consumes this directly. Runs the same
+        compiled coarse-probe + ADC math as `device_probe()`."""
+        return ivfpq_candidates(
+            Q, self.centroids, self.lists, self.codes, self.codebooks,
+            n_probe=self.n_probe,
+            n_cand=min(self.n_candidates,
+                       self.n_probe * self.lists.shape[1]))
 
-        # 2. ADC: approximate distances from per-segment lookup tables
-        k = min(self.n_candidates, cand.shape[1])
-        out = np.empty((nq, k), np.int32)
-        blk = 64
-        for i in range(0, nq, blk):
-            j = min(i + blk, nq)
-            qb, cb = Q[i:j], cand[i:j]
-            # tables [bq, m, 256]
-            tables = np.stack([
-                np.sum((qb[:, None, s * self.seg:(s + 1) * self.seg]
-                        - self.codebooks[s][None]) ** 2, axis=2)
-                for s in range(self.m)], axis=1)
-            safe = np.maximum(cb, 0)
-            code_blk = self.codes[safe]                       # [bq, C, m]
-            adc = np.take_along_axis(
-                tables.transpose(0, 2, 1),                    # [bq, 256, m]
-                code_blk.astype(np.int64), axis=1).sum(axis=2)
-            adc[cb < 0] = np.inf
-            top = np.argpartition(adc, k - 1, axis=1)[:, :k]
-            out[i:j] = np.take_along_axis(cb, top, axis=1)
-        return out
+    def device_probe(self, eps: float | None = None):
+        """DeviceSearcher capability (DESIGN.md §11): the probe spec the
+        engine places on its mesh (quantizer state replicated — ADC
+        ranking is a global top-k). Radius-free; one memoized spec per
+        index."""
+        spec = self.__dict__.get("_probe_spec")
+        if spec is None:
+            spec = self._probe_spec = IVFPQProbe(self)
+        return spec
 
     def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
         """Exact eps-counts over the ADC-ranked candidates (device verify)."""

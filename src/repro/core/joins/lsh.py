@@ -6,12 +6,22 @@ L2:     k p-stable (Gaussian) quantized projections, combined by a random
 Multiprobe: perturb one hash coordinate at a time (bit-flip / +-1) and take
 the first n_p probe buckets per table — structured multiprobe in the spirit
 of FALCONN/E2LSH.
+
+All hash/probe math lives in `core/probe.py` (DESIGN.md §11) and is shared
+bit-for-bit between this host path and the engine's device probe programs:
+`device_probe()` advertises the DeviceSearcher capability, so a plan with
+`probe="device"` runs the multiprobe on the mesh with candidates never
+leaving the device.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 from repro.core.joins.common import build_capacity_table, verify_candidates
+from repro.core.probe import (LSHProbe, lsh_bucket_ids, lsh_hash_codes,
+                              lsh_probe_buckets)
 
 _PRIMES = (73856093, 19349663, 83492791, 32452843, 67867967, 86028121,
            49979687, 29996224275833, 982451653, 15485863, 2038074743,
@@ -38,54 +48,64 @@ class LSHJoin:
         self.salt = rng.integers(1, 2 ** 31, size=(l, k)).astype(np.int64)
         codes = self._hash_codes(self.R)                     # [n, l, k] int
         buckets = self._combine(codes)                       # [n, l]
+        occ = np.stack([np.bincount(buckets[:, t], minlength=self.n_buckets)
+                        for t in range(l)])                  # [l, B]
         if cap is None:
             # size the bucket capacity at the p99.9 occupancy so the table
-            # stays dense; overflow silently drops (approximate method).
-            occ = [np.bincount(buckets[:, t], minlength=self.n_buckets)
-                   for t in range(l)]
-            cap = int(max(2, np.quantile(np.concatenate(occ), 0.999)))
+            # stays dense; overflow drops rows — counted below, no longer
+            # silently (the overflow_frac satellite of ISSUE 5).
+            cap = int(max(2, np.quantile(occ.reshape(-1), 0.999)))
+        self.cap = cap
+        #: fraction of (row, table) memberships dropped by bucket-capacity
+        #: overflow at build time — the index's silent-candidate-loss
+        #: budget, surfaced by `JoinPlan.describe()` and the serve report.
+        self.overflow_frac = float(np.maximum(occ - cap, 0).sum()
+                                   / max(n * l, 1))
+        if self.overflow_frac > 0.01:
+            warnings.warn(
+                f"LSHJoin: bucket-capacity overflow drops "
+                f"{self.overflow_frac:.1%} of row memberships (cap={cap}, "
+                f"n_buckets={self.n_buckets}); recall degrades — raise "
+                "cap= or n_buckets=", RuntimeWarning, stacklevel=2)
         self.tables = np.stack([
             build_capacity_table(buckets[:, t], self.n_buckets, cap)
             for t in range(l)])                              # [l, B, cap]
 
     # -- hashing -------------------------------------------------------------
     def _hash_codes(self, X: np.ndarray) -> np.ndarray:
-        h = np.einsum("nd,lkd->nlk", X.astype(np.float32), self.proj)
-        if self.metric == "cosine":
-            return (h > 0).astype(np.int64)
-        return np.floor((h + self.bias[None]) / self.W).astype(np.int64)
+        return lsh_hash_codes(X, self.proj, self.bias, metric=self.metric,
+                              W=self.W)
 
     def _combine(self, codes: np.ndarray) -> np.ndarray:
-        mixed = (codes * self.salt[None]).sum(axis=2)
-        return (mixed % self.n_buckets).astype(np.int64)
+        return lsh_bucket_ids(codes, self.salt, self.n_buckets)
 
     def _probe_buckets(self, X: np.ndarray) -> np.ndarray:
-        """[q, l, n_probes] bucket ids: identity probe + single-coord perturbs."""
-        codes = self._hash_codes(X)                          # [q, l, k]
-        probes = [self._combine(codes)]
-        for j in range(self.k):
-            if len(probes) >= self.n_probes:
-                break
-            pert = codes.copy()
-            if self.metric == "cosine":
-                pert[:, :, j] = 1 - pert[:, :, j]
-            else:
-                pert[:, :, j] += np.where((j % 2) == 0, 1, -1)
-            probes.append(self._combine(pert))
-        while len(probes) < self.n_probes:
-            probes.append(probes[0])
-        return np.stack(probes[: self.n_probes], axis=2)
+        """[q, l, n_probes] bucket ids: identity probe + single-coord
+        perturbs (the shared `core/probe.py` schedule)."""
+        return lsh_probe_buckets(X, self.proj, self.bias, self.salt,
+                                 metric=self.metric, W=self.W,
+                                 n_probes=self.n_probes,
+                                 n_buckets=self.n_buckets)
 
     # -- query ----------------------------------------------------------------
     def candidates(self, Q: np.ndarray) -> np.ndarray:
         """Multiprobe candidate ids, int32 [q, l*n_probes*cap] (-1 padded).
         Host probing half of the host-probe / device-verify split
         (common.py); the engine's `verify="lsh"` backend consumes this
-        directly."""
+        directly. Runs the same compiled math as `device_probe()`."""
         pb = self._probe_buckets(Q)                          # [q, l, p]
         q = len(Q)
         cand = self.tables[np.arange(self.l)[None, :, None], pb]  # [q, l, p, cap]
         return cand.reshape(q, -1)
+
+    def device_probe(self, eps: float | None = None):
+        """DeviceSearcher capability (DESIGN.md §11): the probe spec the
+        engine places on its mesh. Radius-free (eps is ignored); one
+        memoized spec per index."""
+        spec = self.__dict__.get("_probe_spec")
+        if spec is None:
+            spec = self._probe_spec = LSHProbe(self)
+        return spec
 
     def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
         """Exact eps-counts over the probed candidates (device verify)."""

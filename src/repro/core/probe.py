@@ -1,0 +1,539 @@
+"""Device-resident probing layer (DESIGN.md §11).
+
+The engine's approximate verification (DESIGN.md §5) used to split every
+batch across the PCIe boundary: candidate *verification* ran on device,
+but the index *probe* that produces the candidates ran in NumPy on the
+host — a device→host→device round trip inside every streamed batch,
+exactly the sync the async pipeline was built to avoid.  This module
+moves probing onto the mesh: FALCONN-style LSH multiprobe (hyperplane +
+p-stable) and the FAISS-style IVF-PQ coarse quantizer + ADC ranking are
+dense einsum + gather workloads, so they compile into the same
+bucketed-static-shape device programs as the range-count sweep.
+
+Three layers:
+
+  * **Shared probing math** — `lsh_hash_codes` / `lsh_bucket_ids` /
+    `lsh_probe_buckets` / `ivfpq_candidates` are jitted jnp functions
+    used by BOTH the host path (`LSHJoin.candidates`,
+    `IVFPQJoin.candidates` call them and pull the result back) and the
+    device probe programs.  One source of truth means device-probe
+    candidates are bit-identical to host-probe candidates — the parity
+    the subprocess tests enforce.
+  * **Probe specs + the adapter registry** — a Searcher advertises the
+    capability with `device_probe(eps)` (the `DeviceSearcher` half of
+    the DESIGN.md §9 protocol, analogous to `Filter.device_filter`),
+    returning a spec (`LSHProbe` / `IVFPQProbe`) or None.  Third-party
+    searchers that cannot grow the method register a builder in
+    `PROBE_BUILDERS`; `as_device_probe` resolves either form, and
+    host-only searchers (grid, kmeans-tree, plug-ins) simply keep the
+    host path.
+  * **Placed probes** — `spec.place(engine)` uploads the probe tables
+    once, pinned like R, with placement chosen per topology
+    (`core/topology.py::Topology.probe_shards`): replicated by default;
+    under `"ring"` the LSH member tables are row-partitioned over the
+    `r` axis (`_shard_lsh_tables` — each shard's table holds exactly
+    the global table's ids that land in its R shard, so candidate ids
+    stay local and R is never gathered), while the IVF-PQ tables stay
+    replicated because ADC ranking is a global top-k.  The returned
+    `PlacedProbe` exposes `probe(qpos)` (candidate generation) and
+    `verify(...)` (candidate verification + scatter) as separately
+    dispatchable device programs, which is what lets the engine stage
+    batch k+1's probing while batch k verifies (DESIGN.md §11 staging).
+
+Compiled programs live in module-level `lru_cache`s keyed ONLY on static
+geometry (mesh, metric, probe shape) — table arrays are runtime
+arguments — so engines sharing a geometry share executables, and
+`engine.clear_program_cache()` evicts them via
+`clear_probe_program_cache`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.joins.common import (_verify_block_impl, _verify_blocks,
+                                     localized_shard_verify)
+from repro.core.topology import _data_size, _shard_mapped
+
+# ====================================================== shared LSH math
+# Bucket combination runs in int32 with two's-complement wraparound on
+# host AND device (the sum of salted codes is reduced mod 2**32 before
+# the mod-n_buckets): identical residues everywhere, no x64 dependency.
+
+
+def _lsh_codes(X, proj, bias, *, metric: str, W: float):
+    """int32 [n, l, k] hash codes: hyperplane sign bits (cosine) or
+    p-stable quantized projections (l2)."""
+    h = jnp.einsum("nd,lkd->nlk", X.astype(jnp.float32),
+                   proj.astype(jnp.float32))
+    if metric == "cosine":
+        return (h > 0).astype(jnp.int32)
+    return jnp.floor((h + bias[None]) / jnp.float32(W)).astype(jnp.int32)
+
+
+def _lsh_combine(codes, salt32, n_buckets: int):
+    """int32 [n, l] bucket ids from salted-code sums (int32 wraparound;
+    `jnp.mod` keeps the result non-negative)."""
+    mixed = jnp.sum(codes * salt32[None], axis=2, dtype=jnp.int32)
+    return jnp.mod(mixed, jnp.int32(n_buckets))
+
+
+def _lsh_multiprobe(codes, salt32, *, metric: str, n_probes: int,
+                    n_buckets: int):
+    """int32 [n, l, n_probes] probe bucket ids: the identity probe plus
+    single-coordinate perturbations (bit-flip / ±1), FALCONN-style
+    structured multiprobe. The schedule is a trace-time Python loop so
+    host and device paths share it exactly."""
+    probes = [_lsh_combine(codes, salt32, n_buckets)]
+    for j in range(codes.shape[2]):
+        if len(probes) >= n_probes:
+            break
+        if metric == "cosine":
+            pert = codes.at[:, :, j].set(1 - codes[:, :, j])
+        else:
+            pert = codes.at[:, :, j].add(1 if j % 2 == 0 else -1)
+        probes.append(_lsh_combine(pert, salt32, n_buckets))
+    while len(probes) < n_probes:
+        probes.append(probes[0])
+    return jnp.stack(probes[:n_probes], axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "W"))
+def _lsh_codes_fn(X, proj, bias, *, metric, W):
+    return _lsh_codes(X, proj, bias, metric=metric, W=W)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets",))
+def _lsh_combine_fn(codes, salt32, *, n_buckets):
+    return _lsh_combine(codes, salt32, n_buckets)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "W", "n_probes", "n_buckets"))
+def _lsh_probe_fn(X, proj, bias, salt32, *, metric, W, n_probes, n_buckets):
+    codes = _lsh_codes(X, proj, bias, metric=metric, W=W)
+    return _lsh_multiprobe(codes, salt32, metric=metric, n_probes=n_probes,
+                           n_buckets=n_buckets)
+
+
+def lsh_hash_codes(X, proj, bias, *, metric: str, W: float) -> np.ndarray:
+    """Host entry: int32 [n, l, k] codes via the shared device math —
+    the single implementation behind table build, host probing, and the
+    device probe programs (bit parity by construction)."""
+    return np.asarray(_lsh_codes_fn(
+        jnp.asarray(X, jnp.float32), jnp.asarray(proj, jnp.float32),
+        jnp.asarray(bias, jnp.float32), metric=metric, W=float(W)))
+
+
+def lsh_bucket_ids(codes, salt, n_buckets: int) -> np.ndarray:
+    """Host entry: int32 [n, l] bucket ids for table build (same int32
+    wraparound combine as probing — build and probe can never skew)."""
+    return np.asarray(_lsh_combine_fn(
+        jnp.asarray(codes, jnp.int32),
+        jnp.asarray(np.asarray(salt, np.int64).astype(np.int32)),
+        n_buckets=int(n_buckets)))
+
+
+def _bucket_rows(X: np.ndarray) -> np.ndarray:
+    """Zero-pad query rows to the engine's 64-row bucket quantum so the
+    jitted host wrappers compile once per bucket, not once per distinct
+    batch size (probing is row-independent; padding rows are sliced off
+    by the caller)."""
+    from repro.core.engine import _bucket_size, _pad_rows_np
+    X = np.asarray(X, np.float32)
+    return _pad_rows_np(X, _bucket_size(max(len(X), 1), 64))
+
+
+def lsh_probe_buckets(X, proj, bias, salt, *, metric: str, W: float,
+                      n_probes: int, n_buckets: int) -> np.ndarray:
+    """Host entry: int32 [q, l, n_probes] multiprobe bucket ids."""
+    n = len(X)
+    return np.asarray(_lsh_probe_fn(
+        jnp.asarray(_bucket_rows(X)), jnp.asarray(proj, jnp.float32),
+        jnp.asarray(bias, jnp.float32),
+        jnp.asarray(np.asarray(salt, np.int64).astype(np.int32)),
+        metric=metric, W=float(W), n_probes=int(n_probes),
+        n_buckets=int(n_buckets)))[:n]
+
+
+# =================================================== shared IVF-PQ math
+_IVFPQ_BLOCK = 64      # query tile of the blocked ADC scan
+
+
+def _sq_dists(a, b):
+    return (jnp.sum(a * a, 1)[:, None] - 2.0 * a @ b.T
+            + jnp.sum(b * b, 1)[None, :])
+
+
+def _ivfpq_block(qb, centroids, lists, codes, codebooks, *, n_probe: int,
+                 n_cand: int):
+    """One query tile: coarse-quantize, gather the probed lists, ADC-rank
+    the pool, keep the best n_cand ids. int32 [b, n_cand] (-1 padded)."""
+    b = qb.shape[0]
+    dc = _sq_dists(qb, centroids)
+    _, probed = jax.lax.top_k(-dc, n_probe)                # [b, P]
+    cand = lists[probed].reshape(b, -1)                    # [b, P*cap]
+    m, _, seg = codebooks.shape
+    qseg = qb.reshape(b, m, seg)
+    tables = (jnp.sum(qseg * qseg, -1)[:, :, None]
+              - 2.0 * jnp.einsum("bms,mcs->bmc", qseg, codebooks)
+              + jnp.sum(codebooks * codebooks, -1)[None])  # [b, m, 256]
+    code_blk = codes[jnp.maximum(cand, 0)].astype(jnp.int32)   # [b, C, m]
+    adc = jnp.take_along_axis(jnp.transpose(tables, (0, 2, 1)),
+                              code_blk, axis=1).sum(axis=2)
+    adc = jnp.where(cand < 0, jnp.inf, adc)
+    _, top = jax.lax.top_k(-adc, n_cand)
+    return jnp.take_along_axis(cand, top, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "n_cand"))
+def _ivfpq_probe_fn(q, centroids, lists, codes, codebooks, *, n_probe,
+                    n_cand):
+    # tile size divides the (static) row count exactly: the full ADC tile
+    # when rows are a 64-multiple (the host wrapper and the engine's
+    # default capacity buckets), its gcd otherwise (small block_q engines
+    # whose padded batch is shorter than one tile)
+    blk = math.gcd(q.shape[0], _IVFPQ_BLOCK)
+    nb = q.shape[0] // blk
+    qb = q.reshape(nb, blk, q.shape[1])
+    out = jax.lax.map(
+        lambda x: _ivfpq_block(x, centroids, lists, codes, codebooks,
+                               n_probe=n_probe, n_cand=n_cand), qb)
+    return out.reshape(nb * blk, -1)
+
+
+def ivfpq_candidates(Q, centroids, lists, codes, codebooks, *, n_probe: int,
+                     n_cand: int) -> np.ndarray:
+    """Host entry: ADC-ranked candidate ids int32 [q, n_cand] (-1 padded)
+    via the shared blocked device math (`IVFPQJoin.candidates` delegates
+    here; the device probe program runs the identical tiles)."""
+    Q = np.asarray(Q, np.float32)
+    n = len(Q)
+    if n == 0:
+        return np.empty((0, n_cand), np.int32)
+    qp = _bucket_rows(Q)                   # 64-row buckets: one compile
+    out = _ivfpq_probe_fn(jnp.asarray(qp), jnp.asarray(centroids),
+                          jnp.asarray(lists), jnp.asarray(codes),
+                          jnp.asarray(codebooks), n_probe=int(n_probe),
+                          n_cand=int(n_cand))
+    return np.asarray(out)[:n]
+
+
+# ============================================= compiled device programs
+@functools.lru_cache(maxsize=128)
+def _gather_program(mesh, data_axis):
+    """Compiled positive-compaction gather `(q, pos, *, capacity) ->
+    (qpos [capacity, d], idx [capacity])`, output replicated so the
+    probe programs see the whole compacted block. Padding lanes point at
+    row 0; the verify scatter masks their contribution to 0."""
+    def run(q, pos, *, capacity: int):
+        idx = jnp.nonzero(pos, size=capacity, fill_value=0)[0] \
+                 .astype(jnp.int32)
+        qpos = jnp.take(q, idx, axis=0)
+        if mesh is not None:
+            rep = NamedSharding(mesh, P())
+            qpos = jax.lax.with_sharding_constraint(qpos, rep)
+            idx = jax.lax.with_sharding_constraint(idx, rep)
+        return qpos, idx
+
+    return jax.jit(run, static_argnames=("capacity",))
+
+
+@functools.lru_cache(maxsize=128)
+def _lsh_probe_program(metric, W, n_probes, n_buckets):
+    """Compiled replicated LSH probe `(qpos, proj, bias, salt, tables) ->
+    cand [q, l*p*cap]` — tables are runtime args, so every engine with
+    this geometry shares one executable."""
+    def run(qpos, proj, bias, salt, tables):
+        codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
+        pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
+                             n_buckets=n_buckets)
+        cand = tables[jnp.arange(tables.shape[0])[None, :, None], pb]
+        return cand.reshape(qpos.shape[0], -1)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=128)
+def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets):
+    """Compiled ring LSH probe: each device probes its OWN per-shard
+    member table (`_shard_lsh_tables` row-partition), producing the
+    candidate axis sharded over `r` — ids stay local to the R shard that
+    will verify them, and neither tables nor candidates are gathered."""
+    def shard_fn(qpos, proj, bias, salt, tables):
+        codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
+        pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
+                             n_buckets=n_buckets)
+        t = tables[0]                        # this device's shard table
+        cand = t[jnp.arange(t.shape[0])[None, :, None], pb]
+        return cand.reshape(qpos.shape[0], -1)
+
+    mapped = _shard_mapped(shard_fn, mesh,
+                           in_specs=(P(), P(), P(), P(), P(r_axis)),
+                           out_specs=P(None, r_axis))
+    return jax.jit(mapped)
+
+
+@functools.lru_cache(maxsize=128)
+def _probe_verify_program(mesh, data_axis, metric, block, backend):
+    """Compiled candidate-verify + scatter program for replicated R:
+    `(R, qpos, cand, idx, n_pos, eps, *, out_rows) -> int32 [out_rows]`.
+    The work shards over `data` when the capacity divides evenly."""
+    ndata = _data_size(mesh, data_axis)
+
+    def run(R, qpos, cand, idx, n_pos, eps, *, out_rows: int):
+        cap = qpos.shape[0]
+        qp, cb = qpos, cand
+        if (mesh is not None and ndata > 1 and cap % ndata == 0
+                and (backend == "ref" or (cap // ndata) % block == 0)):
+            s = NamedSharding(mesh, P(data_axis))
+            qp = jax.lax.with_sharding_constraint(qp, s)
+            cb = jax.lax.with_sharding_constraint(cb, s)
+        if backend == "ref" or cap % block != 0:
+            # unblocked fallback also covers small-block_q engines whose
+            # capacity is below one verify tile
+            cnt = _verify_block_impl(R, qp, cb, eps, metric=metric)
+        else:
+            cnt = _verify_blocks(R, qp, cb, eps, metric=metric, block=block)
+        contrib = jnp.where(jnp.arange(cap) < n_pos, cnt, 0) \
+                     .astype(jnp.int32)
+        return jnp.zeros((out_rows,), jnp.int32).at[idx].add(contrib)
+
+    return jax.jit(run, static_argnames=("out_rows",))
+
+
+@functools.lru_cache(maxsize=128)
+def _ring_probe_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
+                               block, backend, cand_sharded):
+    """Compiled candidate-verify + scatter for ring-sharded R: each
+    device verifies the candidate ids that land in its own shard's row
+    range against its resident R shard and the counts are `psum`'d over
+    `r` (`joins.common.localized_shard_verify` — the same shard compute
+    as the host-probe route). With `cand_sharded` (per-shard probe
+    tables) each device sees only its own candidate slice; otherwise the
+    replicated candidate list is localized per shard (ids outside the
+    range mask to -1)."""
+    cspec = P(None, r_axis) if cand_sharded else P()
+    shard_fn = localized_shard_verify(r_axis, shard_rows, metric, block,
+                                      backend)
+    mapped = _shard_mapped(shard_fn, mesh,
+                           in_specs=(P(r_axis), P(), cspec, P()),
+                           out_specs=P())
+
+    def run(R, qpos, cand, idx, n_pos, eps, *, out_rows: int):
+        cnt = mapped(R, qpos, cand, eps)
+        contrib = jnp.where(jnp.arange(qpos.shape[0]) < n_pos, cnt, 0) \
+                     .astype(jnp.int32)
+        return jnp.zeros((out_rows,), jnp.int32).at[idx].add(contrib)
+
+    return jax.jit(run, static_argnames=("out_rows",))
+
+
+def clear_probe_program_cache() -> None:
+    """Evict every module-level compiled probe-program cache (the caches
+    key on the mesh and would otherwise pin executables for meshes a
+    long-lived serve process has discarded). Called by
+    `engine.clear_program_cache`; programs rebuild transparently."""
+    for cache in (_gather_program, _lsh_probe_program,
+                  _lsh_ring_probe_program, _probe_verify_program,
+                  _ring_probe_verify_program):
+        cache.cache_clear()
+
+
+# ============================================== table sharding (ring)
+def _shard_lsh_tables(tables: np.ndarray, shards: int,
+                      rows: int) -> np.ndarray:
+    """Partition a global [l, B, cap] LSH member table into per-shard
+    tables [shards, l, B, cap_s] (-1 padded), shard s holding EXACTLY
+    the global table's ids in row range [s*rows, (s+1)*rows).
+
+    Because the partition is of the *retained* global entries (not a
+    rebuild from scratch), the union over shards equals the global
+    table bit-for-bit — per-shard probing stays candidate-identical to
+    the replicated probe, and per-device table bytes drop by roughly
+    the shard count (cap_s ≈ cap / shards on balanced data)."""
+    vals = tables.astype(np.int64)
+    big = np.int64(1) << 40
+    per, caps = [], []
+    for s in range(shards):
+        lo, hi = s * rows, (s + 1) * rows
+        m = (vals >= lo) & (vals < hi)
+        per.append(np.sort(np.where(m, vals, big), axis=-1))
+        caps.append(int(m.sum(axis=-1).max()))
+    cap_s = max(max(caps), 1)
+    out = np.stack([p[..., :cap_s] for p in per])
+    out[out >= big] = -1
+    return out.astype(np.int32)
+
+
+# ================================================ specs + placed probes
+class PlacedProbe:
+    """A probe spec bound to one engine: tables uploaded per the
+    engine's topology, probe/verify programs resolved. `probe(qpos)`
+    and `verify(...)` are separately dispatchable device programs —
+    the split that lets `StreamSession` stage batch k+1's probing while
+    batch k's verification executes (DESIGN.md §11)."""
+
+    def __init__(self, engine, *, name: str, probe_fn: Callable,
+                 state: tuple, cand_sharded: bool, table_bytes: int,
+                 cand_width: int):
+        self.engine = engine
+        self.name = name
+        self._probe_fn = probe_fn
+        self._state = state
+        self.cand_sharded = cand_sharded
+        #: probe-table bytes resident on EACH device (reported by
+        #: `JoinPlan.describe()["exec"]["probe"]`)
+        self.table_bytes_per_device = int(table_bytes)
+        #: candidate ids produced per query (global, across shards)
+        self.cand_width = int(cand_width)
+
+    def probe(self, qpos) -> jax.Array:
+        """Dispatch the probe program: compacted queries [capacity, d]
+        -> candidate ids [capacity, cand_width] (-1 padded), all on
+        device — no host hop."""
+        return self._probe_fn(qpos, *self._state)
+
+    def verify(self, qpos, cand, idx, n_pos, eps, *, out_rows: int,
+               block: int = 32) -> jax.Array:
+        """Dispatch candidate verification + scatter against the
+        engine's resident R; returns the per-query counts [out_rows]
+        (device array — the caller starts the async host copy)."""
+        eng = self.engine
+        if eng.r_shards > 1:
+            prog = _ring_probe_verify_program(
+                eng.mesh, eng.topology.r_axis, eng.data_axis,
+                eng.nr_padded // eng.r_shards, eng.metric, block,
+                eng.backend, self.cand_sharded)
+        else:
+            prog = _probe_verify_program(eng.mesh, eng.data_axis,
+                                         eng.metric, block, eng.backend)
+        return prog(eng._Rdev, qpos, cand, idx, n_pos, eps,
+                    out_rows=out_rows)
+
+
+def _device_put(arr, mesh, spec=P()):
+    if mesh is not None:
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+    return jnp.asarray(arr)
+
+
+class LSHProbe:
+    """Device-probe spec for `LSHJoin` (DESIGN.md §11): projection /
+    bias / salt / member tables uploaded once; under the ring topology
+    the member tables are row-partitioned over `r`
+    (`_shard_lsh_tables`) so probing AND verification stay local to
+    each R shard."""
+
+    name = "lsh"
+
+    def __init__(self, join):
+        self.join = join
+
+    def place(self, engine) -> PlacedProbe:
+        """Upload the probe tables onto the engine's mesh (placement per
+        its topology) and resolve the compiled probe program."""
+        j = self.join
+        mesh = engine.mesh
+        salt32 = np.asarray(j.salt, np.int64).astype(np.int32)
+        shards = engine.topology.probe_shards(mesh)
+        small = (_device_put(j.proj, mesh), _device_put(j.bias, mesh),
+                 _device_put(salt32, mesh))
+        if shards > 1:
+            tabs = _shard_lsh_tables(j.tables, shards,
+                                     engine.nr_padded // shards)
+            tables = _device_put(tabs, mesh, engine.topology.probe_spec())
+            prog = _lsh_ring_probe_program(
+                mesh, engine.topology.r_axis, j.metric, float(j.W),
+                int(j.n_probes), int(j.n_buckets))
+            table_bytes = (tabs.nbytes // shards + j.proj.nbytes
+                           + j.bias.nbytes + salt32.nbytes)
+            cand_width = shards * tabs.shape[1] * j.n_probes * tabs.shape[3]
+            cand_sharded = True
+        else:
+            tables = _device_put(np.asarray(j.tables, np.int32), mesh)
+            prog = _lsh_probe_program(j.metric, float(j.W),
+                                      int(j.n_probes), int(j.n_buckets))
+            table_bytes = (j.tables.nbytes + j.proj.nbytes + j.bias.nbytes
+                           + salt32.nbytes)
+            cand_width = j.l * j.n_probes * j.tables.shape[2]
+            cand_sharded = False
+        return PlacedProbe(engine, name=self.name, probe_fn=prog,
+                           state=small + (tables,),
+                           cand_sharded=cand_sharded,
+                           table_bytes=table_bytes, cand_width=cand_width)
+
+
+class IVFPQProbe:
+    """Device-probe spec for `IVFPQJoin`: centroids / inverted lists /
+    PQ codes / codebooks uploaded once, replicated on every device
+    under EITHER topology — ADC ranking is a global top-k, so the
+    candidate list must see the whole pool; under the ring topology the
+    replicated candidates are localized per R shard by the verify
+    program instead."""
+
+    name = "ivfpq"
+
+    def __init__(self, join):
+        self.join = join
+
+    def place(self, engine) -> PlacedProbe:
+        """Upload the quantizer state replicated and resolve the blocked
+        coarse-probe + ADC-rank program."""
+        j = self.join
+        mesh = engine.mesh
+        n_cand = int(min(j.n_candidates, j.n_probe * j.lists.shape[1]))
+        state = (_device_put(j.centroids, mesh),
+                 _device_put(np.asarray(j.lists, np.int32), mesh),
+                 _device_put(j.codes, mesh),
+                 _device_put(j.codebooks, mesh))
+
+        def prog(qpos, centroids, lists, codes, codebooks):
+            return _ivfpq_probe_fn(qpos, centroids, lists, codes, codebooks,
+                                   n_probe=int(j.n_probe), n_cand=n_cand)
+
+        table_bytes = (j.centroids.nbytes + j.lists.nbytes + j.codes.nbytes
+                       + j.codebooks.nbytes)
+        return PlacedProbe(engine, name=self.name, probe_fn=prog,
+                           state=state, cand_sharded=False,
+                           table_bytes=table_bytes, cand_width=n_cand)
+
+
+# ============================================== the adapter registry
+#: Searcher type -> `builder(searcher, eps) -> spec | None` for searcher
+#: classes that cannot grow a `device_probe` method themselves (the
+#: DESIGN.md §9 adapter-registry pattern, mirroring FILTER_ADAPTERS).
+#: Searchers matching neither route simply keep the host probe path.
+PROBE_BUILDERS: dict[type, Callable[[Any, Optional[float]], Any]] = {}
+
+
+def register_probe(searcher_type: type, builder: Callable) -> None:
+    """Register a device-probe builder for a searcher class (the
+    extension point for searchers whose source cannot be edited)."""
+    PROBE_BUILDERS[searcher_type] = builder
+
+
+def as_device_probe(searcher, eps: float | None = None):
+    """Resolve a searcher's device-probe spec, or None for host-only
+    searchers. Resolution order: the searcher's own `device_probe(eps)`
+    (the DeviceSearcher protocol), then the `PROBE_BUILDERS` registry
+    walked over the class MRO. Returning None is not an error — it
+    selects the host probe path. `eps` may be None (plan-build
+    validation); the engine caches placement per returned spec, so
+    radius-free probes should memoize one spec per index and eps-aware
+    probes one spec per distinct eps."""
+    fn = getattr(searcher, "device_probe", None)
+    if fn is not None:
+        return fn(eps)
+    for cls in type(searcher).__mro__:
+        builder = PROBE_BUILDERS.get(cls)
+        if builder is not None:
+            return builder(searcher, eps)
+    return None

@@ -171,6 +171,16 @@ class Topology:
         placement needs no per-shard masking (replicated)."""
         return None
 
+    def probe_shards(self, mesh) -> int:
+        """Number of ways device-probe tables shard on this mesh
+        (DESIGN.md §11): 1 = replicated on every device."""
+        return 1
+
+    def probe_spec(self) -> P:
+        """PartitionSpec of a probe table's leading shard axis (only
+        meaningful when `probe_shards` > 1)."""
+        return P()
+
     def per_device_r_bytes(self, nr_padded: int, dim: int, mesh) -> int:
         """Bytes of R resident on EACH device under this placement."""
         raise NotImplementedError
@@ -333,6 +343,17 @@ class RingSharded(Topology):
         r = self.r_shards(mesh)
         rows = nr_padded // r
         return np.clip(nr - np.arange(r) * rows, 0, rows).astype(np.int32)
+
+    def probe_shards(self, mesh) -> int:
+        """Probe tables shard `r_shards` ways: each device probes only
+        the member table of its own R shard (DESIGN.md §11), so
+        candidate ids stay local and per-device table bytes drop by the
+        r-axis size alongside R itself."""
+        return self.r_shards(mesh)
+
+    def probe_spec(self) -> P:
+        """Probe tables shard their leading axis over the ``r`` axis."""
+        return P(self.r_axis)
 
     def per_device_r_bytes(self, nr_padded: int, dim: int, mesh) -> int:
         """Each device holds one R shard: padded rows / r_shards."""

@@ -4,11 +4,13 @@ This is the paper's production story end-to-end, on the declarative
 `JoinPlan` API (DESIGN.md §9): the CLI flags compile into one plan —
 filter("xling") -> search("naive") -> verify(--verify) — which is
 validated and built once (filter fit, engine construction, verifier
-index) and then serves query batches through the engine's asynchronous
-double-buffered stream (DESIGN.md §5): batch k+1 dispatches while batch
-k's results transfer back, with `--depth` bounding the in-flight queue
-and `--verify` picking the verification backend (exact sweep, or LSH /
-IVF-PQ candidate probing with on-device verification).
+index, probe-table placement) and then serves query batches through the
+engine's asynchronous pipelined stream (DESIGN.md §5, §11): batch k+1
+dispatches while batch k's results transfer back, with `--depth`
+bounding the in-flight queue, `--verify` picking the verification
+backend (exact sweep, or LSH / IVF-PQ candidate probing with on-device
+verification), and `--probe` picking where the index probe runs
+(`device` keeps the whole probe→verify path on the mesh).
 
 The first output line is the serialized plan (`plan.describe()`). Each
 batch line reports filter effectiveness (skip rate) and result quality
@@ -32,7 +34,9 @@ from repro.data import load_dataset
 
 def batch_stats(b: int, res, true_counts: np.ndarray) -> dict:
     """One report line for a served batch: filter skip rate, verification
-    recall vs the exact oracle, and the filter/search timing split."""
+    recall vs the exact oracle, probe placement + the verify index's
+    build-time candidate-loss budget (LSH bucket-capacity overflow,
+    DESIGN.md §11), and the filter/search timing split."""
     return {
         "batch": b,
         "queries": int(res.n_queries),
@@ -40,6 +44,8 @@ def batch_stats(b: int, res, true_counts: np.ndarray) -> dict:
         "skipped_frac": 1.0 - res.n_searched / max(res.n_queries, 1),
         "recall": res.recall_vs(true_counts),
         "verify": res.meta.get("verify", "exact"),
+        "probe": res.meta.get("probe"),
+        "overflow_frac": res.meta.get("overflow_frac"),
         "t_filter_ms": res.t_filter * 1e3,
         "t_search_ms": res.t_search * 1e3,
     }
@@ -65,17 +71,20 @@ def summarize(stats: list[dict], build_s: float) -> dict:
 
 def build_plan(args, R, metric: str) -> JoinPlan:
     """Compile the CLI flags into a built `JoinPlan` (filter fit + engine +
-    verifier index all constructed here, so their one-time cost lands in
-    build_s, not in batch 0's reported latency). `--topology ring` shards
-    R over `--r-shards` devices (DESIGN.md §10) — the resolved placement,
-    including per-device R bytes, lands in the printed plan line."""
+    verifier index + probe tables all constructed here, so their one-time
+    cost lands in build_s, not in batch 0's reported latency). `--topology
+    ring` shards R over `--r-shards` devices (DESIGN.md §10); `--probe
+    device` pins the verify index's probe tables on the mesh too
+    (DESIGN.md §11) — the resolved placement, including per-device R and
+    probe-table bytes, lands in the printed plan line."""
     return (JoinPlan(R, metric)
             .filter("xling", tau=args.tau, xdt="fpr",
                     estimator=args.estimator, epochs=args.epochs)
             .search("naive")
             .verify(args.verify)
             .on(backend="jnp", cache_key=(args.dataset, args.n),
-                topology=args.topology, r_shards=args.r_shards)
+                topology=args.topology, r_shards=args.r_shards,
+                probe=args.probe)
             .build())
 
 
@@ -105,6 +114,11 @@ def main():
     ap.add_argument("--r-shards", type=int, default=None,
                     help="ring topology: number of R shards (the mesh's "
                          "r-axis size)")
+    ap.add_argument("--probe", default="auto",
+                    choices=("auto", "device", "host"),
+                    help="where the approximate verify route's index "
+                         "probe runs (DESIGN.md §11): auto = on device "
+                         "whenever the searcher supports it")
     args = ap.parse_args()
 
     R, S, spec = load_dataset(args.dataset, n=args.n)

@@ -1,0 +1,404 @@
+"""The device-resident probing layer (core/probe.py, DESIGN.md §11).
+
+Covers: bit-parity of device-probe candidates with the host probe (the
+shared-math guarantee) for LSH and IVF-PQ; count parity of the
+probe="device" route with probe="host" through the engine and JoinPlan
+(run AND stream, bit-identical); the acceptance invariant that a
+device-probe streamed batch performs no per-batch host transfers beyond
+the positive-count read and the result readback (via the
+`engine._note_host_sync` instrumentation hook); build-time validation of
+probe= misconfiguration; `clear_program_cache` evicting the probe-program
+caches; the `LSHJoin.overflow_frac` satellite (exposure, describe(),
+warning above 1%); the DeviceSearcher protocol + PROBE_BUILDERS adapter
+registry; and — in a forced-8-device subprocess — candidate-subset and
+post-verify-count parity plus recall floors under BOTH topologies.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import DeviceSearcher, JoinPlan, make_join
+from repro.core.engine import JoinEngine
+from repro.core.joins.lsh import LSHJoin
+from repro.core import probe as probe_mod
+
+EPS = 0.4
+
+LSH_PARAMS = dict(k=10, l=8, n_probes=4, W=2.5)
+IVFPQ_PARAMS = dict(C=24, m=8, n_probe=8, n_candidates=600)
+
+
+def _unit(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    """Clustered corpus/queries sharing centers — enough true pairs that
+    approximate recall is a meaningful, stable number."""
+    rng = np.random.default_rng(5)
+    d, nc, spread = 32, 6, 0.03
+    c = rng.normal(size=(nc, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+
+    def draw(per):
+        pts = (np.repeat(c, per, axis=0)
+               + rng.normal(size=(nc * per, d)) * spread)
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        return pts.astype(np.float32)
+
+    return draw(150), draw(25)
+
+
+# --------------------------------------------------- candidate-level parity
+@pytest.mark.parametrize("backend,params", [
+    ("lsh", LSH_PARAMS), ("ivfpq", IVFPQ_PARAMS)])
+def test_device_probe_candidates_match_host(clustered, backend, params):
+    """The placed probe program must produce, per query, exactly the host
+    probe's candidate id set (shared math, shared tables) — the property
+    that makes device-probe counts bit-identical to host-probe counts."""
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    searcher = eng.verifier(backend, **params)
+    placed = eng.device_probe_for(backend, "device")
+    assert placed is not None and placed.cand_width > 0
+    host_cand = searcher.candidates(Q)
+    qp = np.zeros((256, Q.shape[1]), np.float32)   # a capacity bucket
+    qp[:len(Q)] = Q
+    dev_cand = np.asarray(placed.probe(jnp.asarray(qp)))[:len(Q)]
+    assert dev_cand.shape[1] == placed.cand_width
+    for h, d in zip(host_cand, dev_cand):
+        assert set(d[d >= 0].tolist()) == set(h[h >= 0].tolist())
+
+
+# ------------------------------------------------------- count-level parity
+@pytest.mark.parametrize("backend,params", [
+    ("lsh", LSH_PARAMS), ("ivfpq", IVFPQ_PARAMS)])
+def test_device_probe_counts_match_host(clustered, backend, params):
+    """probe="device" and probe="host" must return identical counts for
+    every verdict pattern, and never exceed the exact sweep."""
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier(backend, **params)
+    true = eng.range_count(Q, EPS)
+    rng = np.random.default_rng(3)
+    for verdicts in (np.ones(len(Q), bool), rng.random(len(Q)) > 0.5):
+        host = eng.filtered_join(Q, EPS, verdicts=verdicts, verify=backend,
+                                 probe="host")
+        dev = eng.filtered_join(Q, EPS, verdicts=verdicts, verify=backend,
+                                probe="device")
+        assert host.probe == "host" and dev.probe == "device"
+        np.testing.assert_array_equal(dev.counts, host.counts)
+        assert (dev.counts <= np.where(verdicts, true, 0)).all()
+
+
+def test_stream_bit_identical_to_run_device_probe(clustered):
+    """plan.stream with device probing must stay bit-identical to
+    per-batch plan.run — the §11 pipeline reshuffle cannot change
+    results, only overlap."""
+    R, Q = clustered
+    plan = (JoinPlan(R, "l2").search("naive").verify("lsh", **LSH_PARAMS)
+            .on(backend="jnp", probe="device").build())
+    assert plan.describe()["exec"]["probe"]["resolved"] == "device"
+    batches = [Q[:50], Q[50:51], Q[51:]]   # ragged: distinct shape buckets
+    sync = [plan.run(b, EPS) for b in batches]
+    for depth in (0, 2):
+        stream = list(plan.stream(batches, EPS, depth=depth))
+        assert len(stream) == len(batches)
+        for s, a in zip(sync, stream):
+            np.testing.assert_array_equal(a.counts, s.counts)
+            assert a.meta["probe"] == "device"
+
+
+def test_auto_selects_device_probe_for_capable_base(clustered):
+    """verify('auto') with an LSH base must pick device probing without
+    being asked (the searcher advertises DeviceSearcher), while a
+    candidates-less plug-in stays on the host route."""
+    R, Q = clustered
+    plan = (JoinPlan(R, "l2").search("lsh", **LSH_PARAMS)
+            .on(backend="jnp").build())
+    d = plan.describe()["exec"]["probe"]
+    assert d["mode"] == "auto" and d["resolved"] == "device"
+    assert d["table_bytes_per_device"] > 0
+    res = plan.run(Q, EPS)
+    assert res.meta["probe"] == "device"
+    np.testing.assert_array_equal(res.counts,
+                                  plan.base.query_counts(Q, EPS))
+
+
+# ----------------------------------------------- host-sync instrumentation
+def test_device_probe_route_host_syncs(clustered, monkeypatch):
+    """The ISSUE 5 acceptance invariant: with probe="device", a streamed
+    batch performs NO per-batch host transfer other than the
+    positive-count read and the result readback; the host route performs
+    its verdict readback + host probe as before."""
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier("lsh", **LSH_PARAMS)
+    eng.filtered_join(Q, EPS, verify="lsh", probe="device")   # warm programs
+
+    events = []
+    monkeypatch.setattr("repro.core.engine._note_host_sync", events.append)
+    # the host probe itself must never run on the device route
+    monkeypatch.setattr(
+        LSHJoin, "candidates",
+        lambda *a, **k: pytest.fail("host probe called on device route"))
+    batches = [Q[:64], Q[64:128], Q[128:]]
+    out = list(eng.stream(batches, EPS, verify="lsh", probe="device",
+                          depth=2))
+    assert len(out) == 3
+    # no filter -> verdicts are host-known, so not even the count read
+    # syncs; with a fused filter the only extra event is "n_pos"
+    assert set(events) <= {"n_pos", "result"}, events
+    assert events.count("result") == len(batches)
+
+    monkeypatch.undo()
+    events2 = []
+    monkeypatch.setattr("repro.core.engine._note_host_sync", events2.append)
+    list(eng.stream(batches, EPS, verify="lsh", probe="host", depth=2))
+    assert {"verdicts", "probe"} <= set(events2)
+
+
+# ----------------------------------------------------- build-time validation
+def test_probe_validation(clustered):
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    with pytest.raises(ValueError, match="probe="):
+        eng.filtered_join(Q, EPS, verify="lsh", probe="gpu")
+    with pytest.raises(ValueError, match="no probe stage"):
+        eng.filtered_join(Q, EPS, verify="exact", probe="device")
+    with pytest.raises(ValueError, match="no probe stage"):
+        JoinPlan(R, "l2").search("naive").on(backend="jnp",
+                                             probe="device").build()
+    # a host-only searcher (no device_probe, not registered) under
+    # probe="device" fails at build with an actionable message
+    grid = make_join("grid", R, "l2")
+    with pytest.raises(ValueError, match="no device probe"):
+        JoinPlan(R, "l2").search(grid).on(backend="jnp",
+                                          probe="device").build()
+    # ... but keeps working under the default auto route (host probing)
+    plan = JoinPlan(R, "l2").search(grid).on(backend="jnp").build()
+    assert plan.describe()["exec"]["probe"]["resolved"] == "host"
+    res = plan.run(Q, EPS)
+    assert res.meta["probe"] == "host"
+
+
+# --------------------------------------------------------- protocol/registry
+def test_device_searcher_protocol(clustered):
+    R, _ = clustered
+    assert isinstance(make_join("lsh", R, "l2", **LSH_PARAMS),
+                      DeviceSearcher)
+    assert isinstance(make_join("ivfpq", R, "l2", **IVFPQ_PARAMS),
+                      DeviceSearcher)
+    assert not isinstance(make_join("grid", R, "l2"), DeviceSearcher)
+
+
+def test_probe_builders_registry(clustered):
+    """A searcher class that cannot grow device_probe() itself plugs in
+    through the PROBE_BUILDERS registry — same counts, device route."""
+    R, Q = clustered
+
+    class _Wrapped:
+        name = "wrapped"
+        exact = False
+
+        def __init__(self, R, metric):
+            self._lsh = LSHJoin(R, metric, **LSH_PARAMS)
+
+        def candidates(self, Q):
+            return self._lsh.candidates(Q)
+
+        def query_counts(self, Q, eps):
+            return self._lsh.query_counts(Q, eps)
+
+    probe_mod.register_probe(_Wrapped,
+                             lambda s, eps: probe_mod.LSHProbe(s._lsh))
+    try:
+        eng = JoinEngine(R, "l2", backend="jnp")
+        searcher = _Wrapped(R, "l2")
+        dev = eng.filtered_join(Q, EPS, verify=searcher, probe="device")
+        host = eng.filtered_join(Q, EPS, verify=searcher, probe="host")
+        assert dev.probe == "device"
+        np.testing.assert_array_equal(dev.counts, host.counts)
+    finally:
+        probe_mod.PROBE_BUILDERS.pop(_Wrapped, None)
+
+
+def test_device_probe_small_block_q(clustered):
+    """An engine whose padded batches are shorter than one ADC/verify
+    tile (small block_q) must still probe on device with identical
+    counts — the tile sizes fall back instead of failing to reshape."""
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp", block_q=24)
+    eng.verifier("ivfpq", **IVFPQ_PARAMS)
+    eng.verifier("lsh", **LSH_PARAMS)
+    q = Q[:20]                   # pads to 24 rows; capacity 24: % 64 != 0
+    for backend in ("ivfpq", "lsh"):
+        host = eng.filtered_join(q, EPS, verify=backend, probe="host")
+        dev = eng.filtered_join(q, EPS, verify=backend, probe="device")
+        np.testing.assert_array_equal(dev.counts, host.counts)
+
+
+def test_retune_evicts_stale_placed_probe(clustered):
+    """engine.verifier(name, **params) retunes replace the index; the
+    previous index's placed probe (device-resident tables) must be
+    evicted from the engine's probe cache, not pinned forever."""
+    R, _ = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier("lsh", **LSH_PARAMS)
+    p1 = eng.device_probe_for("lsh", "device")
+    assert len(eng._probes) == 1
+    eng.verifier("lsh", k=8, l=4, n_probes=2)
+    p2 = eng.device_probe_for("lsh", "device")
+    assert p2 is not p1
+    assert len(eng._probes) == 1         # stale placement dropped
+
+
+# ------------------------------------------------------------ cache eviction
+def test_clear_program_cache_evicts_probe_programs(clustered):
+    """engine.clear_program_cache() must evict the probe-program caches
+    too (they key on the mesh and would otherwise pin executables for
+    discarded meshes), and the route must transparently rebuild."""
+    from repro.core import engine as engine_mod
+    R, Q = clustered
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier("lsh", **LSH_PARAMS)
+    want = eng.filtered_join(Q, EPS, verify="lsh", probe="device").counts
+    assert probe_mod._gather_program.cache_info().currsize > 0
+    assert (probe_mod._lsh_probe_program.cache_info().currsize
+            + probe_mod._lsh_ring_probe_program.cache_info().currsize) > 0
+    assert (probe_mod._probe_verify_program.cache_info().currsize
+            + probe_mod._ring_probe_verify_program.cache_info().currsize) > 0
+    engine_mod.clear_program_cache()
+    for cache in (probe_mod._gather_program, probe_mod._lsh_probe_program,
+                  probe_mod._lsh_ring_probe_program,
+                  probe_mod._probe_verify_program,
+                  probe_mod._ring_probe_verify_program):
+        assert cache.cache_info().currsize == 0
+    np.testing.assert_array_equal(
+        eng.filtered_join(Q, EPS, verify="lsh", probe="device").counts, want)
+
+
+# ------------------------------------------------------------- overflow_frac
+def test_lsh_overflow_frac_exposed_and_warns(clustered):
+    R, Q = clustered
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        quiet = LSHJoin(R, "l2", k=10, l=4, n_probes=2, cap=len(R))
+    assert quiet.overflow_frac == 0.0
+    with pytest.warns(RuntimeWarning, match="overflow"):
+        lossy = LSHJoin(R, "l2", k=2, l=4, n_probes=2, n_buckets=4, cap=2)
+    assert lossy.overflow_frac > 0.01
+    # surfaced by describe() and per-result meta
+    plan = (JoinPlan(R, "l2").search("naive")
+            .verify(lossy).on(backend="jnp").build())
+    d = plan.describe()
+    assert d["verify"]["overflow_frac"] == pytest.approx(lossy.overflow_frac)
+    res = plan.run(Q, EPS)
+    assert res.meta["overflow_frac"] == pytest.approx(lossy.overflow_frac)
+    # the exact route tracks none
+    exact = JoinPlan(R, "l2").search("naive").on(backend="jnp").build()
+    assert exact.describe()["verify"]["overflow_frac"] is None
+
+
+def test_serve_batch_stats_reports_probe_and_overflow(clustered):
+    """The serve per-batch report line carries the probe placement and
+    the overflow fraction of the verify index."""
+    from repro.launch.serve import batch_stats
+    R, Q = clustered
+    plan = (JoinPlan(R, "l2").search("naive").verify("lsh", **LSH_PARAMS)
+            .on(backend="jnp", probe="device").build())
+    res = plan.run(Q, EPS)
+    line = batch_stats(0, res, np.asarray(plan.engine.range_count(Q, EPS)))
+    assert line["probe"] == "device"
+    assert line["overflow_frac"] == pytest.approx(
+        plan.engine.verifier("lsh").overflow_frac)
+
+
+# ------------------------------------------------------- multi-device (mesh)
+@pytest.mark.slow
+def test_device_probe_subprocess_8dev():
+    """Forced 8-host-device subprocess: under BOTH topologies
+    (replicated data mesh, 2x4 ring mesh) the device probe's candidates
+    are a subset of the host probe's with equal post-verify counts,
+    plan.stream stays bit-identical to per-batch run with device probing
+    on, and the lsh/ivfpq recall floors hold vs the exact oracle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import numpy as np, jax\n"
+        "import jax.numpy as jnp\n"
+        "from repro.launch.mesh import make_data_mesh, make_join_mesh\n"
+        "from repro.core.engine import JoinEngine\n"
+        "from repro.core.api import JoinPlan\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(5)\n"
+        "c = rng.normal(size=(6, 32))\n"
+        "c /= np.linalg.norm(c, axis=1, keepdims=True)\n"
+        "def draw(per):\n"
+        "    p = (np.repeat(c, per, axis=0)\n"
+        "         + rng.normal(size=(6 * per, 32)) * 0.03)\n"
+        "    return (p / np.linalg.norm(p, axis=1, keepdims=True))"
+        ".astype(np.float32)\n"
+        "R, Q = draw(150), draw(25)\n"
+        "SPECS = {'lsh': (dict(k=10, l=8, n_probes=4, W=2.5), 0.90),\n"
+        "         'ivfpq': (dict(C=24, m=8, n_probe=8, n_candidates=600),"
+        " 0.95)}\n"
+        "for mesh, topo in ((make_data_mesh(), 'replicated'),\n"
+        "                   (make_join_mesh(data=4, r=2), 'ring')):\n"
+        "    eng = JoinEngine(R, 'l2', mesh=mesh, backend='jnp',"
+        " topology=topo)\n"
+        "    true = eng.range_count(Q, 0.4)\n"
+        "    assert true.sum() > 1000\n"
+        "    for name, (params, floor) in SPECS.items():\n"
+        "        searcher = eng.verifier(name, **params)\n"
+        "        placed = eng.device_probe_for(name, 'device')\n"
+        "        host_cand = searcher.candidates(Q)\n"
+        "        qp = np.zeros((256, Q.shape[1]), np.float32)\n"
+        "        qp[:len(Q)] = Q\n"
+        "        dev_cand = np.asarray(placed.probe(jnp.asarray(qp)))"
+        "[:len(Q)]\n"
+        "        for h, d in zip(host_cand, dev_cand):\n"
+        "            hs, ds = set(h[h >= 0].tolist()), "
+        "set(d[d >= 0].tolist())\n"
+        "            assert ds <= hs, (topo, name)\n"
+        "        v = np.ones(len(Q), bool)\n"
+        "        host = eng.filtered_join(Q, 0.4, verdicts=v, verify=name,"
+        " probe='host')\n"
+        "        dev = eng.filtered_join(Q, 0.4, verdicts=v, verify=name,"
+        " probe='device')\n"
+        "        np.testing.assert_array_equal(dev.counts, host.counts)\n"
+        "        assert (dev.counts <= true).all()\n"
+        "        recall = float(np.minimum(dev.counts, true).sum()"
+        " / true.sum())\n"
+        "        assert recall >= floor, (topo, name, recall)\n"
+        "        batches = [Q[:10], Q[10:11], Q[11:]]\n"
+        "        stream = list(eng.stream(batches, 0.4, verify=name,"
+        " probe='device', depth=2))\n"
+        "        sync = [eng.filtered_join(b, 0.4, verify=name,"
+        " probe='device') for b in batches]\n"
+        "        for s, a in zip(sync, stream):\n"
+        "            np.testing.assert_array_equal(a.counts, s.counts)\n"
+        "    plan = (JoinPlan(R, 'l2').search('naive')\n"
+        "            .verify('lsh', **SPECS['lsh'][0])\n"
+        "            .on(engine=eng, backend='jnp', probe='device')"
+        ".build())\n"
+        "    pd = plan.describe()['exec']['probe']\n"
+        "    assert pd['resolved'] == 'device' and "
+        "pd['table_bytes_per_device'] > 0, pd\n"
+        "print('DEVICE_PROBE_8DEV_OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert "DEVICE_PROBE_8DEV_OK" in out.stdout, out.stderr[-3000:]
