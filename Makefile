@@ -1,7 +1,7 @@
 # Developer entry points (see DESIGN.md §8 for the lane definitions).
 PYTEST := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest
 
-.PHONY: test fast docs-check ci serve example
+.PHONY: test fast lint docs-check guard ci serve example
 
 test:        ## tier-1: the full suite (what the driver runs)
 	$(PYTEST) -x -q
@@ -9,10 +9,16 @@ test:        ## tier-1: the full suite (what the driver runs)
 fast:        ## developer fast lane (< 90 s)
 	$(PYTEST) -q -m "not slow"
 
-docs-check:  ## fail if a public def in engine/xjoin/serve lacks a docstring
-	python scripts/check_docstrings.py
+lint:        ## xlint: static analysis of the DESIGN.md invariants (§12)
+	python scripts/xlint
 
-ci:          ## docs gate + fast lane, one entry point
+docs-check:  ## docs gate — alias for the xlint docstring-gate rule
+	python scripts/xlint --rule docstring-gate
+
+guard:       ## runtime transfer-guard lane only (tests/test_guards.py)
+	$(PYTEST) -q -m guard
+
+ci:          ## hygiene + lint gate + fast lane, one entry point
 	bash scripts/ci.sh
 
 serve:       ## smoke-run the async serving driver

@@ -3,71 +3,40 @@
 modules must carry a docstring (the `make docs-check` target, wired into
 CI via scripts/ci.sh and tests/test_docs.py).
 
-Checked modules: core/api.py (the JoinPlan + Filter/Searcher protocol
-surface), core/engine.py, core/topology.py (the placement layer),
-core/probe.py (the device-resident probing layer), core/xjoin.py,
-launch/serve.py — the public API a user touches to serve a join stream. "Public" = module-level
-defs, classes, and methods of public classes whose names don't start with
-an underscore (dunder methods other than __init__ are exempt; __init__ is
-exempt when the owning class documents construction in its own docstring).
-Exits 1 listing offenders as file:line so editors can jump to them.
+Since xlint landed (DESIGN.md §12) the check itself lives in
+`scripts/xlint/rules/docstrings.py` as the `docstring-gate` rule — this
+script is a thin shim kept so the historical entry point, its CLI
+contract (exit 1 + `file:line qualname` offender lines, explicit paths
+override the default module set), and `make docs-check` keep working.
+The default set is the serving surface (core/api.py, core/engine.py,
+core/probe.py, core/topology.py, core/xjoin.py, launch/serve.py) plus
+the xlint package itself.
 """
 from __future__ import annotations
 
-import ast
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-CHECKED = (
-    "src/repro/core/api.py",
-    "src/repro/core/engine.py",
-    "src/repro/core/probe.py",
-    "src/repro/core/topology.py",
-    "src/repro/core/xjoin.py",
-    "src/repro/launch/serve.py",
-)
+sys.path.insert(0, str(REPO / "scripts"))
 
+from xlint.rules.docstrings import (  # noqa: E402  (path bootstrap first)
+    CHECKED, default_targets, missing_docstrings)
 
-def _is_public(name: str) -> bool:
-    return not name.startswith("_")
-
-
-def missing_docstrings(path: Path) -> list[str]:
-    """[f"{path}:{line} <qualname>"] for every undocumented public def."""
-    tree = ast.parse(path.read_text(), filename=str(path))
-    offenders: list[str] = []
-    try:
-        rel = path.relative_to(REPO)
-    except ValueError:                      # explicit path outside the repo
-        rel = path
-
-    if ast.get_docstring(tree) is None:
-        offenders.append(f"{rel}:1 <module>")
-
-    def visit(node, prefix: str) -> None:
-        for child in ast.iter_child_nodes(node):
-            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                if _is_public(child.name):
-                    if ast.get_docstring(child) is None:
-                        offenders.append(
-                            f"{rel}:{child.lineno} {prefix}{child.name}")
-            elif isinstance(child, ast.ClassDef):
-                if _is_public(child.name):
-                    if ast.get_docstring(child) is None:
-                        offenders.append(
-                            f"{rel}:{child.lineno} {prefix}{child.name}")
-                    visit(child, prefix=f"{prefix}{child.name}.")
-    visit(tree, prefix="")
-    return offenders
+__all__ = ["CHECKED", "missing_docstrings", "main"]
 
 
 def main(argv: list[str]) -> int:
     """Check the serving-surface modules (or explicit paths in argv)."""
-    paths = [Path(a) for a in argv] or [REPO / p for p in CHECKED]
+    paths = [Path(a) for a in argv] or default_targets(REPO)
     offenders: list[str] = []
     for p in paths:
-        offenders += missing_docstrings(p)
+        try:
+            rel = p.resolve().relative_to(REPO)
+        except ValueError:              # explicit path outside the repo
+            rel = p
+        offenders += [f"{rel}:{line} {qual}"
+                      for line, qual in missing_docstrings(p, REPO)]
     if offenders:
         print("public definitions missing docstrings:")
         for o in offenders:

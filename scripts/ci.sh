@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Single CI entry point (DESIGN.md §8 test lanes):
-#   scripts/ci.sh          — hygiene + docs gate + fast lane + bench smoke
-#                            snapshot (default; target < 2 min)
+#   scripts/ci.sh          — hygiene + xlint gate (incl. the docs gate,
+#                            DESIGN.md §12) + fast lane (incl. the runtime
+#                            transfer-guard lane) + bench smoke snapshot
+#                            (default; target < 2 min)
 #   scripts/ci.sh full     — same, but tier-1 full suite (includes slow)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -22,8 +24,10 @@ if [ -n "$big" ]; then
 fi
 echo "hygiene OK"
 
-echo "== docs-check =="
-python scripts/check_docstrings.py
+# xlint folds the old standalone docs gate in as its docstring-gate rule;
+# it runs BEFORE the test lanes so invariant violations fail in seconds
+echo "== xlint (static analysis, DESIGN.md §12) =="
+python scripts/xlint
 
 echo "== pytest (${1:-fast} lane) =="
 if [ "${1:-fast}" = "full" ]; then

@@ -1,0 +1,33 @@
+"""xlint — the repo-native static-analysis suite (DESIGN.md §12).
+
+PRs 1–5 built a device-resident join pipeline whose correctness rests on
+conventions: every mesh is constructed through `launch/mesh.py::make_mesh`
+(§7), the streamed hot path performs exactly two per-batch host transfers
+(§11), and every compiled-program `lru_cache` in `core/` is evictable by
+`engine.clear_program_cache()` (§4/§12).  xlint turns those conventions
+into machine-checked rules: each rule is a small AST-walking plugin in
+`xlint/rules/`, registered in `xlint.registry.RULES` and mapped to the
+DESIGN.md section it enforces.
+
+Run it as `python scripts/xlint` (the `make lint` target and the first
+gate in `scripts/ci.sh`); `tests/test_lint.py` proves every rule fires on
+a fixture violation and that the repo itself lints clean.  The companion
+RUNTIME layer — `jax.transfer_guard` around the streamed hot path — lives
+in `core/engine.py::_allowed_transfer` + `tests/test_guards.py`.
+
+Deliberate deviations are annotated in-line, never in a suppression file:
+
+    # xlint: allow-<rule-id>(<reason>)          suppress on this/next line
+    # xlint: allow-host-sync(<kind>: <reason>)  host-sync needs a declared
+                                                _note_host_sync kind
+    # xlint: scope(<rule-id>)                   opt a file into a rule
+                                                (test fixtures)
+
+Stale or malformed annotations are themselves violations (the
+annotation-hygiene rule), so suppressions cannot rot.
+"""
+from xlint.core import Annotation, LintFile, Rule, Violation, lint_paths
+from xlint.registry import RULES, rules_for
+
+__all__ = ["Annotation", "LintFile", "Rule", "Violation", "lint_paths",
+           "RULES", "rules_for"]

@@ -1,0 +1,17 @@
+"""Entry point so `python scripts/xlint` and `python -m xlint` both work.
+
+Running the package as a *directory* (`python scripts/xlint`) puts the
+package dir itself — not its parent — on `sys.path`, so the absolute
+`xlint.*` imports used throughout the package would fail; prepending the
+parent fixes both invocation styles.
+"""
+import sys
+from pathlib import Path
+
+_parent = str(Path(__file__).resolve().parent.parent)
+if _parent not in sys.path:
+    sys.path.insert(0, _parent)
+
+from xlint.cli import main  # noqa: E402  (path bootstrap must run first)
+
+sys.exit(main())

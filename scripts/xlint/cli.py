@@ -1,0 +1,61 @@
+"""xlint command line: `python scripts/xlint [paths...] [--rule ID]`.
+
+With no paths, lints the whole repository (every `.py` outside
+`EXCLUDED_DIRS`).  Exit status 0 = clean, 1 = violations (one
+`path:line: [rule-id] message` line each).  `--rule` narrows to a
+subset of rules (`make docs-check` is `--rule docstring-gate`);
+`--list-rules` prints the registry table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from xlint.core import iter_py_files, lint_paths
+from xlint.registry import RULES, rules_for
+
+#: scripts/xlint/cli.py -> the repository root
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+def main(argv=None) -> int:
+    """Parse arguments, run the selected rules, print findings."""
+    parser = argparse.ArgumentParser(
+        prog="xlint",
+        description="repo-native static analysis for the DESIGN.md "
+                    "invariants")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files/directories to lint (default: the "
+                             "whole repository)")
+    parser.add_argument("--rule", action="append", dest="rule_ids",
+                        metavar="ID", choices=sorted(RULES),
+                        help="run only this rule (repeatable)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.id:20s} {rule.design_ref:5s} {rule.description}")
+        return 0
+
+    rules = rules_for(args.rule_ids)
+    if args.paths:
+        files = []
+        for p in args.paths:
+            files.extend(iter_py_files(p) if p.is_dir() else [p])
+    else:
+        files = iter_py_files(REPO_ROOT)
+
+    violations = lint_paths(files, rules, root=REPO_ROOT)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"xlint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""xlint framework core: file model, annotation grammar, rule runner.
+
+A `LintFile` is one parsed source file (AST + lines + `# xlint:`
+annotations, extracted from real COMMENT tokens only, so grammar examples
+inside docstrings never parse as live annotations).  A `Rule` is a plugin
+that selects files and emits `Violation`s; the runner applies generic
+`allow-<rule-id>` suppression and tracks which annotations earned their
+keep — the annotation-hygiene rule flags the rest as stale.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+#: `# xlint: <directive>(<arg>)` — the whole annotation on ONE comment
+#: line.  directive is `allow-<rule-id>` or `scope`; arg is the reason
+#: (allow) or the rule id (scope).
+ANNOTATION_RE = re.compile(
+    r"#\s*xlint:\s*(?P<directive>[A-Za-z][\w-]*)\s*"
+    r"(?:\(\s*(?P<arg>[^)]*?)\s*\))?")
+
+#: Directory names never walked by the default repo lint (fixtures are
+#: linted explicitly by tests/test_lint.py, one rule at a time).
+EXCLUDED_DIRS = {".git", ".cache", "__pycache__", "fixtures",
+                 "experiments", "node_modules", ".claude"}
+
+
+@dataclass(frozen=True)
+class Annotation:
+    """One parsed `# xlint:` comment: line number, directive, argument."""
+    line: int
+    directive: str
+    arg: str
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One rule finding, pointing at `rel`:`line` with a rule id.
+
+    `suppressible=False` marks findings about the annotations themselves
+    (bad kind, stale suppression) that an `allow-` comment must not be
+    able to silence."""
+    rel: str
+    line: int
+    rule: str
+    message: str
+    suppressible: bool = True
+
+    def render(self) -> str:
+        """`path:line: [rule-id] message` — the CLI output line."""
+        return f"{self.rel}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class LintFile:
+    """One source file prepared for linting."""
+    path: Path
+    rel: str
+    source: str
+    lines: list[str]
+    tree: Optional[ast.AST]
+    annotations: dict[int, Annotation]
+    scoped_rules: set[str] = field(default_factory=set)
+    used_annotations: set[int] = field(default_factory=set)
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "LintFile":
+        """Read + parse one file; a syntax error leaves `tree=None` (the
+        runner reports it as an unsuppressible parse-error finding)."""
+        source = path.read_text(encoding="utf-8", errors="replace")
+        try:
+            rel = str(path.resolve().relative_to(root.resolve()))
+        except ValueError:
+            rel = str(path)
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError:
+            tree = None
+        annotations = _parse_annotations(source)
+        scoped = {a.arg for a in annotations.values()
+                  if a.directive == "scope" and a.arg}
+        return cls(path=path, rel=rel, source=source,
+                   lines=source.splitlines(), tree=tree,
+                   annotations=annotations, scoped_rules=scoped)
+
+    def allow_at(self, line: int, rule_id: str) -> Optional[Annotation]:
+        """The `allow-<rule_id>` annotation governing `line`: on the line
+        itself or on the comment line immediately above."""
+        for ln in (line, line - 1):
+            a = self.annotations.get(ln)
+            if a is not None and a.directive == f"allow-{rule_id}":
+                return a
+        return None
+
+    def mark_used(self, annotation: Annotation) -> None:
+        """Record that `annotation` suppressed or legitimized a finding
+        (anything still unused afterwards is a stale suppression)."""
+        self.used_annotations.add(annotation.line)
+
+
+def _parse_annotations(source: str) -> dict[int, Annotation]:
+    """{line: Annotation} for every `# xlint:` COMMENT token. Tokenizing
+    (instead of regex over raw lines) keeps annotation examples inside
+    docstrings and string literals inert."""
+    out: dict[int, Annotation] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = ANNOTATION_RE.search(tok.string)
+            if m and "xlint" in tok.string:
+                out[tok.start[0]] = Annotation(
+                    line=tok.start[0], directive=m.group("directive"),
+                    arg=(m.group("arg") or "").strip())
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass                    # unparseable file: reported via tree=None
+    return out
+
+
+class Rule:
+    """Base class for xlint rules.
+
+    Subclasses set `id` (the annotation/CLI name), `design_ref` (the
+    DESIGN.md section the rule enforces), `description`, and implement
+    `check(lf)`. `select(lf)` defaults to path-suffix targeting via
+    `targets` plus `# xlint: scope(<id>)` opt-in; `targets = None` means
+    repo-wide."""
+
+    id: str = ""
+    design_ref: str = ""
+    description: str = ""
+    #: repo-relative path suffixes the rule applies to (None = all files)
+    targets: Optional[tuple[str, ...]] = None
+
+    def select(self, lf: LintFile) -> bool:
+        """Whether this rule applies to `lf` (targets or scope opt-in)."""
+        if self.id in lf.scoped_rules:
+            return True
+        if self.targets is None:
+            return True
+        rel = lf.rel.replace("\\", "/")
+        return any(rel.endswith(t) for t in self.targets)
+
+    def check(self, lf: LintFile) -> list[Violation]:
+        """Return this rule's findings for one file."""
+        raise NotImplementedError
+
+    def violation(self, lf: LintFile, line: int, message: str, *,
+                  suppressible: bool = True) -> Violation:
+        """Build a `Violation` carrying this rule's id."""
+        return Violation(rel=lf.rel, line=line, rule=self.id,
+                         message=f"{message} (DESIGN.md {self.design_ref})",
+                         suppressible=suppressible)
+
+
+def iter_py_files(root: Path) -> list[Path]:
+    """Every lintable `.py` under `root`, skipping `EXCLUDED_DIRS`."""
+    out = []
+    for p in sorted(root.rglob("*.py")):
+        if any(part in EXCLUDED_DIRS for part in p.relative_to(root).parts):
+            continue
+        out.append(p)
+    return out
+
+
+def lint_paths(paths: Iterable[Path], rules: list[Rule], *,
+               root: Path) -> list[Violation]:
+    """Run `rules` over `paths` and return surviving violations.
+
+    Per file: every selecting rule runs, then generic suppression drops
+    findings covered by an `allow-<rule-id>` annotation on the same or
+    previous line (marking the annotation used).  Rules whose findings
+    concern annotations themselves emit `suppressible=False` and are
+    exempt.  The annotation-hygiene rule (id "annotation-hygiene") is
+    always run LAST so it sees which annotations went unused."""
+    hygiene = [r for r in rules if r.id == "annotation-hygiene"]
+    ordered = [r for r in rules if r.id != "annotation-hygiene"] + hygiene
+    out: list[Violation] = []
+    for path in paths:
+        lf = LintFile.load(path, root)
+        if lf.tree is None:
+            out.append(Violation(rel=lf.rel, line=1, rule="parse-error",
+                                 message="file does not parse",
+                                 suppressible=False))
+            continue
+        for rule in ordered:
+            if not rule.select(lf):
+                continue
+            for v in rule.check(lf):
+                if v.suppressible:
+                    a = lf.allow_at(v.line, v.rule)
+                    if a is not None:
+                        lf.mark_used(a)
+                        continue
+                out.append(v)
+    return out

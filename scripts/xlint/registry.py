@@ -1,0 +1,41 @@
+"""xlint rule registry: the rule table (DESIGN.md §12).
+
+Every rule plugin is instantiated exactly once here; `RULES` maps rule
+id → instance and is the single source of truth for the CLI
+(`--list-rules`, `--rule`), the annotation-hygiene rule (known ids),
+and the DESIGN.md §12 rule table.  To add a rule: drop a module in
+`xlint/rules/`, subclass `xlint.core.Rule`, and register it below —
+`tests/test_lint.py::test_rule_fires_on_fixture` will demand a fixture
+proving it fires.
+"""
+from __future__ import annotations
+
+from xlint.rules.annotations import AnnotationHygieneRule
+from xlint.rules.cache_registry import CacheRegistryRule
+from xlint.rules.docstrings import DocstringRule
+from xlint.rules.host_sync import HostSyncRule
+from xlint.rules.jit_cache_key import JitCacheKeyRule
+from xlint.rules.mesh_policy import MeshPolicyRule
+
+_CORE_RULES = (
+    MeshPolicyRule(),
+    HostSyncRule(),
+    CacheRegistryRule(),
+    JitCacheKeyRule(),
+    DocstringRule(),
+)
+
+#: rule id -> rule instance; annotation-hygiene is built last so it can
+#: validate directives against every other registered id
+RULES = {r.id: r for r in _CORE_RULES}
+RULES["annotation-hygiene"] = AnnotationHygieneRule(set(RULES))
+
+
+def rules_for(ids=None):
+    """The rule instances for `ids` (all registered rules when None)."""
+    if ids is None:
+        return list(RULES.values())
+    unknown = [i for i in ids if i not in RULES]
+    if unknown:
+        raise KeyError(f"unknown rule id(s): {', '.join(unknown)}")
+    return [RULES[i] for i in ids]

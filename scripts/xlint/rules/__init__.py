@@ -1,0 +1,9 @@
+"""xlint rule plugins — one module per enforced DESIGN.md invariant.
+
+mesh_policy    §7   all mesh construction via launch/mesh.py::make_mesh
+host_sync      §11  annotated, instrumented host syncs only in hot paths
+cache_registry §12  every core/ lru_cache program builder is registered
+jit_cache_key  §12  program-builder cache keys stay hashable/static
+docstrings     §8   the docs gate (public serving surface + xlint itself)
+annotations    §12  xlint annotations are well-formed and never stale
+"""

@@ -1,0 +1,76 @@
+"""annotation-hygiene rule (DESIGN.md §12): suppressions cannot rot.
+
+In-line `# xlint:` annotations are the ONLY suppression mechanism (no
+suppression file), so they must stay trustworthy.  This rule runs LAST
+— after every other rule has had the chance to `mark_used` the
+annotations that legitimized a real finding — and flags
+
+  * unknown directives (must be `allow-<known-rule-id>` or
+    `scope(<known-rule-id>)`)
+  * `scope(...)` naming a rule id that does not exist
+  * `allow-*` annotations with an empty reason
+  * STALE `allow-*` annotations: ones that no rule consumed, i.e. the
+    code they excused no longer triggers the rule
+
+Every finding is `suppressible=False`: an annotation cannot excuse
+another annotation.
+"""
+from __future__ import annotations
+
+from xlint.core import LintFile, Rule, Violation
+
+
+class AnnotationHygieneRule(Rule):
+    """Flag unknown, malformed, and stale `# xlint:` annotations."""
+
+    id = "annotation-hygiene"
+    design_ref = "§12"
+    description = ("xlint annotations must name a real rule, carry a "
+                   "reason, and still excuse a live finding — stale "
+                   "suppressions are violations")
+    targets = None              # repo-wide; must run after all other rules
+
+    def __init__(self, known_rule_ids: set[str]):
+        """`known_rule_ids`: every registered rule id (from the registry),
+        used to validate `allow-<id>` / `scope(<id>)` directives."""
+        self.known_rule_ids = set(known_rule_ids) | {self.id}
+
+    def check(self, lf: LintFile) -> list[Violation]:
+        """Validate every annotation in the file against the registry and
+        the set of annotations other rules marked used."""
+        out: list[Violation] = []
+        for ann in lf.annotations.values():
+            if ann.directive == "scope":
+                if ann.arg not in self.known_rule_ids:
+                    out.append(self.violation(
+                        lf, ann.line,
+                        f"scope({ann.arg!r}) names no registered rule",
+                        suppressible=False))
+                continue
+            if not ann.directive.startswith("allow-"):
+                out.append(self.violation(
+                    lf, ann.line,
+                    f"unknown xlint directive {ann.directive!r} — use "
+                    "allow-<rule-id>(<reason>) or scope(<rule-id>)",
+                    suppressible=False))
+                continue
+            rule_id = ann.directive[len("allow-"):]
+            if rule_id not in self.known_rule_ids:
+                out.append(self.violation(
+                    lf, ann.line,
+                    f"allow-{rule_id} names no registered rule",
+                    suppressible=False))
+                continue
+            if not ann.arg:
+                out.append(self.violation(
+                    lf, ann.line,
+                    f"allow-{rule_id} carries no reason — write "
+                    f"allow-{rule_id}(<reason>)", suppressible=False))
+                continue
+            if ann.line not in lf.used_annotations:
+                out.append(self.violation(
+                    lf, ann.line,
+                    f"stale allow-{rule_id} — no finding on this or the "
+                    "next line needed it; delete the annotation",
+                    suppressible=False))
+        return out

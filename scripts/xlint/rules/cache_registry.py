@@ -1,0 +1,77 @@
+"""cache-registry rule (DESIGN.md §12): no unevictable program caches.
+
+`engine.clear_program_cache()` iterates the `_PROGRAM_CACHES` registry;
+a module-level `functools.lru_cache` program builder in `core/` that
+never registers would pin XLA executables (and their device buffers)
+past mesh teardown and silently survive eviction — the forgotten-cache
+failure mode this rule removes.  Every `@functools.lru_cache` decorated
+module-level function in `src/repro/core/` must also carry the
+`@register_program_cache` decorator (stacked above the cache, engine.py)
+or be explicitly waived with `# xlint: allow-cache-registry(<reason>)`.
+"""
+from __future__ import annotations
+
+import ast
+
+from xlint.core import LintFile, Rule, Violation
+
+
+def _decorator_names(fn: ast.FunctionDef) -> list[str]:
+    """Dotted name of each decorator (Call decorators unwrapped)."""
+    names = []
+    for dec in fn.decorator_list:
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        if parts:
+            names.append(".".join(reversed(parts)))
+    return names
+
+
+def _has(fn: ast.FunctionDef, suffix: str) -> bool:
+    return any(n == suffix or n.endswith(f".{suffix}")
+               for n in _decorator_names(fn))
+
+
+def lru_cached_module_functions(tree: ast.AST) -> list[ast.FunctionDef]:
+    """Module-level `@functools.lru_cache` functions (program builders)."""
+    out = []
+    for node in ast.iter_child_nodes(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and _has(node, "lru_cache")):
+            out.append(node)
+    return out
+
+
+class CacheRegistryRule(Rule):
+    """Require `register_program_cache` on every core/ lru_cache."""
+
+    id = "cache-registry"
+    design_ref = "§12"
+    description = ("every module-level functools.lru_cache program "
+                   "builder in core/ must be registered in "
+                   "engine._PROGRAM_CACHES via @register_program_cache")
+    targets = None              # selection is path-prefix based below
+
+    def select(self, lf: LintFile) -> bool:
+        """Only `src/repro/core/**` (or scope-annotated fixtures)."""
+        if self.id in lf.scoped_rules:
+            return True
+        return "src/repro/core/" in lf.rel.replace("\\", "/")
+
+    def check(self, lf: LintFile) -> list[Violation]:
+        """Flag lru_cache'd builders missing @register_program_cache."""
+        out: list[Violation] = []
+        for fn in lru_cached_module_functions(lf.tree):
+            if not _has(fn, "register_program_cache"):
+                out.append(self.violation(
+                    lf, fn.lineno,
+                    f"lru_cache'd program builder {fn.name!r} is not "
+                    "registered in engine._PROGRAM_CACHES — "
+                    "clear_program_cache() would silently miss it; stack "
+                    "@register_program_cache above the lru_cache"))
+        return out

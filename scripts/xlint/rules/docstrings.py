@@ -1,0 +1,111 @@
+"""docstring-gate rule (DESIGN.md §8): the docs gate as an xlint rule.
+
+Migrated from the standalone `scripts/check_docstrings.py` (which now
+delegates here so `make docs-check` and tests keep their entry point):
+every public function/class/method in the serving-surface modules — and
+in the xlint framework itself — must carry a docstring.  "Public" =
+module-level defs, classes, and methods of public classes whose names
+don't start with an underscore; dunders other than `__init__` are
+exempt, and `__init__` is exempt when the owning class documents
+construction in its own docstring.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from xlint.core import LintFile, Rule, Violation
+
+#: repo-relative serving-surface modules under the gate, plus the xlint
+#: package itself (globbed at runtime so new rules are auto-covered)
+CHECKED = (
+    "src/repro/core/api.py",
+    "src/repro/core/engine.py",
+    "src/repro/core/probe.py",
+    "src/repro/core/topology.py",
+    "src/repro/core/xjoin.py",
+    "src/repro/launch/serve.py",
+)
+
+
+def default_targets(repo: Path) -> list[Path]:
+    """The gated module paths: the serving surface + `scripts/xlint/`."""
+    paths = [repo / p for p in CHECKED]
+    paths += sorted((repo / "scripts" / "xlint").rglob("*.py"))
+    return paths
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def missing_docstrings(path: Path, repo: Path) -> list[tuple[int, str]]:
+    """[(line, qualname)] for every undocumented public def in `path`."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    offenders: list[tuple[int, str]] = []
+    if ast.get_docstring(tree) is None:
+        offenders.append((1, "<module>"))
+
+    def visit(node, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if _is_public(child.name) and \
+                        ast.get_docstring(child) is None:
+                    offenders.append((child.lineno, f"{prefix}{child.name}"))
+            elif isinstance(child, ast.ClassDef):
+                if _is_public(child.name):
+                    if ast.get_docstring(child) is None:
+                        offenders.append(
+                            (child.lineno, f"{prefix}{child.name}"))
+                    visit(child, prefix=f"{prefix}{child.name}.")
+
+    visit(tree, prefix="")
+    return offenders
+
+
+class DocstringRule(Rule):
+    """Flag undocumented public defs on the gated modules (§8)."""
+
+    id = "docstring-gate"
+    design_ref = "§8"
+    description = ("public defs in the serving-surface modules and "
+                   "scripts/xlint/ must carry docstrings (the docs gate, "
+                   "make docs-check)")
+    targets = CHECKED + ("scripts/xlint",)
+
+    def select(self, lf: LintFile) -> bool:
+        """Gated modules, the xlint package, or scoped fixtures."""
+        if self.id in lf.scoped_rules:
+            return True
+        rel = lf.rel.replace("\\", "/")
+        return (any(rel.endswith(t) for t in CHECKED)
+                or "scripts/xlint/" in rel)
+
+    def check(self, lf: LintFile) -> list[Violation]:
+        """Report one violation per undocumented public definition."""
+        out: list[Violation] = []
+        if ast.get_docstring(lf.tree) is None:
+            out.append(self.violation(
+                lf, 1, "module is missing a docstring"))
+
+        def visit(node, prefix: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    if _is_public(child.name) and \
+                            ast.get_docstring(child) is None:
+                        out.append(self.violation(
+                            lf, child.lineno,
+                            f"public def {prefix}{child.name!s} is missing "
+                            "a docstring"))
+                elif isinstance(child, ast.ClassDef):
+                    if _is_public(child.name):
+                        if ast.get_docstring(child) is None:
+                            out.append(self.violation(
+                                lf, child.lineno,
+                                f"public class {prefix}{child.name!s} is "
+                                "missing a docstring"))
+                        visit(child, prefix=f"{prefix}{child.name}.")
+
+        visit(lf.tree, prefix="")
+        return out

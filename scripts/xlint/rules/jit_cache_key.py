@@ -1,0 +1,83 @@
+"""jit-cache-key rule (DESIGN.md §12): program-cache keys stay static.
+
+The `lru_cache` program builders key compiled XLA executables on their
+arguments, so every parameter must be hashable, static geometry (mesh,
+axis names, block sizes, frozen topology dataclasses).  An array-typed
+or dict/list parameter either raises `unhashable type` at first call or
+— worse, via a fresh default object per call — defeats the cache and
+recompiles every batch.  This rule rejects, on any module-level
+`lru_cache` function in `src/repro/core/`:
+
+  * parameters annotated with an unhashable/array type
+    (dict/list/set/ndarray/Array/DeviceArray)
+  * mutable or call-expression default values (`{}`, `[]`, `set()`,
+    `make_thing()` — a fresh object per definition breaks key equality)
+"""
+from __future__ import annotations
+
+import ast
+
+from xlint.core import LintFile, Rule, Violation
+from xlint.rules.cache_registry import lru_cached_module_functions
+
+#: annotation identifiers that cannot be lru_cache keys
+UNHASHABLE = {"dict", "Dict", "list", "List", "set", "Set", "ndarray",
+              "Array", "ArrayLike", "DeviceArray"}
+
+
+def _annotation_ids(node: ast.AST) -> set[str]:
+    """All bare identifiers appearing in an annotation expression."""
+    ids = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            ids.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            ids.add(sub.attr)
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            ids.update(p for p in sub.value.replace("[", " ").split()
+                       if p.isidentifier())    # string annotations
+    return ids
+
+
+class JitCacheKeyRule(Rule):
+    """Reject unhashable params on lru_cache'd program builders."""
+
+    id = "jit-cache-key"
+    design_ref = "§12"
+    description = ("lru_cache'd program builders may only take hashable "
+                   "static args — array/dict params break or defeat the "
+                   "program cache")
+    targets = None
+
+    def select(self, lf: LintFile) -> bool:
+        """Only `src/repro/core/**` (or scope-annotated fixtures)."""
+        if self.id in lf.scoped_rules:
+            return True
+        return "src/repro/core/" in lf.rel.replace("\\", "/")
+
+    def check(self, lf: LintFile) -> list[Violation]:
+        """Flag unhashable annotations and mutable/call defaults."""
+        out: list[Violation] = []
+        for fn in lru_cached_module_functions(lf.tree):
+            a = fn.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+                if arg.annotation is not None:
+                    bad = _annotation_ids(arg.annotation) & UNHASHABLE
+                    if bad:
+                        out.append(self.violation(
+                            lf, arg.lineno,
+                            f"cache key param {arg.arg!r} of {fn.name!r} "
+                            f"annotated {sorted(bad)[0]!r} — program-cache "
+                            "keys must be hashable static geometry"))
+            defaults = a.defaults + [d for d in a.kw_defaults
+                                     if d is not None]
+            for default in defaults:
+                if isinstance(default, (ast.Dict, ast.List, ast.Set,
+                                        ast.ListComp, ast.DictComp,
+                                        ast.SetComp, ast.Call)):
+                    out.append(self.violation(
+                        lf, default.lineno,
+                        f"mutable/call default in {fn.name!r}'s cache key "
+                        "— a fresh object per definition breaks lru_cache "
+                        "key equality"))
+        return out

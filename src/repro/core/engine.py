@@ -48,6 +48,7 @@ unblocked oracle ("ref" — no padding, used as the bit-for-bit reference).
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
 import time
 from dataclasses import dataclass
@@ -89,6 +90,30 @@ def _pad_rows_np(x: np.ndarray, n: int) -> np.ndarray:
     return np.concatenate([x, pad])
 
 
+#: Registry of every module-level compiled-program `lru_cache` in
+#: `core/` (DESIGN.md §12).  The caches key on the mesh (among others)
+#: and thereby pin XLA executables — and through them device buffers —
+#: alive for meshes a long-lived process has already discarded, so each
+#: one MUST be evictable by `clear_program_cache()`.  Registration is by
+#: the `register_program_cache` decorator; xlint's cache-registry rule
+#: rejects any `functools.lru_cache` program builder in `core/` that is
+#: not registered, so a new cache can never silently escape eviction.
+_PROGRAM_CACHES: list = []
+
+
+def register_program_cache(cache):
+    """Register a module-level `functools.lru_cache` program builder in
+    `_PROGRAM_CACHES` so `clear_program_cache()` evicts it.
+
+    Stack it ABOVE `@functools.lru_cache` (it returns its argument, so
+    the bound name keeps `cache_clear`/`cache_info`).  Mandatory for
+    every program cache in `core/` — enforced statically by xlint's
+    cache-registry rule (DESIGN.md §12)."""
+    _PROGRAM_CACHES.append(cache)
+    return cache
+
+
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _hist_program(mesh, data_axis, backend, metric, block_q, block_r,
                   eps_chunk, nr_valid, topology):
@@ -99,6 +124,7 @@ def _hist_program(mesh, data_axis, backend, metric, block_q, block_r,
                                  block_r, eps_chunk, nr_valid)
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
                      nr_valid, topology):
@@ -112,20 +138,16 @@ def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
 
 
 def clear_program_cache() -> None:
-    """Evict every module-level compiled-program cache.
+    """Evict every registered module-level compiled-program cache.
 
-    The `_hist_program` / `_compact_program` `lru_cache`s key on the mesh
-    (among others) and thereby pin XLA executables — and through them
-    device buffers — alive for meshes a long-lived serve process or a
-    test suite has already discarded. Call this after tearing down a mesh
-    (tests do) to release them; programs rebuild transparently on the
-    next engine call."""
-    _hist_program.cache_clear()
-    _compact_program.cache_clear()
-    from repro.core.joins.common import _sharded_verify_program
-    _sharded_verify_program.cache_clear()
-    from repro.core.probe import clear_probe_program_cache
-    clear_probe_program_cache()
+    Iterates the `_PROGRAM_CACHES` registry, so it can never silently
+    miss a cache: every `functools.lru_cache` program builder in `core/`
+    registers itself via `register_program_cache` at import time (the
+    xlint cache-registry rule enforces this, DESIGN.md §12).  Call this
+    after tearing down a mesh (tests do) to release the executables it
+    pins; programs rebuild transparently on the next engine call."""
+    for cache in list(_PROGRAM_CACHES):
+        cache.cache_clear()
 
 
 @dataclass
@@ -161,14 +183,77 @@ VerifySpec = "str | object"
 PROBE_MODES = ("auto", "device", "host")
 
 
+#: active `host_sync_guard` scopes — a stack of frozensets of allowed
+#: sync kinds consulted by `_note_host_sync`
+_SYNC_GUARDS: list = []
+
+
+class HostSyncError(RuntimeError):
+    """An UNDECLARED per-batch host sync fired inside a
+    `host_sync_guard` scope (DESIGN.md §12)."""
+
+
 def _note_host_sync(kind: str) -> None:
-    """Test-instrumentation hook invoked at every per-batch host
+    """Instrumentation hook invoked at every per-batch host
     synchronization point: "n_pos" (the positive-count read), "verdicts"
     (device->host verdict readback for host probing), "probe" (the host
     index probe itself), "result" (final counts materialization). A
     no-op in production; tests monkeypatch it to assert the device-probe
     route performs no per-batch host transfers beyond the count read and
-    the result readback (the ISSUE 5 acceptance invariant)."""
+    the result readback (the ISSUE 5 acceptance invariant). Under an
+    active `host_sync_guard`, a kind outside the allowed set raises
+    `HostSyncError` — the hook doubles as the runtime guard's tripwire
+    on backends whose zero-copy array transfers are invisible to
+    `jax.transfer_guard` (the CPU backend)."""
+    if _SYNC_GUARDS and kind not in _SYNC_GUARDS[-1]:
+        raise HostSyncError(
+            f"disallowed host sync {kind!r} inside host_sync_guard scope "
+            f"(allowed kinds: {sorted(_SYNC_GUARDS[-1])}) — DESIGN.md §12")
+
+
+@contextlib.contextmanager
+def host_sync_guard(*allowed: str):
+    """Runtime guard scope (DESIGN.md §12): every per-batch host sync in
+    the scope must be one of `allowed` or `HostSyncError` is raised.
+
+    Two enforcement layers compose here.  The hook layer
+    (`_note_host_sync`) catches any instrumented sync with an undeclared
+    kind — it works on every backend, including CPU, where JAX's
+    zero-copy transfers never reach the XLA transfer guard.  The XLA
+    layer (`jax.transfer_guard_device_to_host("disallow")`, entered for
+    the whole scope) additionally catches UNinstrumented device→host
+    transfers on accelerator backends; the declared sync points open
+    their own `"allow"` windows via `_allowed_transfer`, which is why
+    `allowed` should normally be exactly `("n_pos", "result")` — the two
+    syncs the exact and device-probe streamed routes are specified to
+    perform (§11).  tests/test_guards.py runs the parity lanes inside
+    this scope."""
+    _SYNC_GUARDS.append(frozenset(allowed))
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    finally:
+        _SYNC_GUARDS.pop()
+
+
+@contextlib.contextmanager
+def _allowed_transfer(kind: str):
+    """Scope of one DECLARED per-batch device→host sync (DESIGN.md §12).
+
+    The exact and device-probe routes declare exactly two such points —
+    the positive-count read ("n_pos") and the final result readback
+    ("result").  Entering the scope notes the sync for the test
+    instrumentation (`_note_host_sync`) and opens a
+    `jax.transfer_guard_device_to_host("allow")` window, so the
+    transfer-guard test lane (tests/test_guards.py) can run the whole
+    stream under `"disallow"` and any UNdeclared transfer raises — the
+    §11 "only two host transfers per batch" claim as an enforced runtime
+    property, not just instrumentation.  Host-probe syncs ("verdicts" /
+    "probe") deliberately do NOT open an allow window: under the guard
+    the host route fails, which is what proves the guard is live."""
+    _note_host_sync(kind)
+    with jax.transfer_guard_device_to_host("allow"):
+        yield
 
 
 def _check_verify(verify) -> str:
@@ -195,11 +280,17 @@ def _check_verify(verify) -> str:
 
 def _start_host_copy(arr) -> None:
     """Kick off a non-blocking device→host transfer so the later
-    `np.asarray` materialization finds the bytes already resident."""
-    try:
-        arr.copy_to_host_async()
-    except AttributeError:
-        pass                                # backend without async copies
+    `np.asarray` materialization finds the bytes already resident.
+
+    This is the asynchronous START of the declared "result" readback
+    (the blocking half lives in `PendingJoin.result` under
+    `_allowed_transfer("result")`), so it runs inside an explicit
+    device→host allow window of its own — one readback, two phases."""
+    with jax.transfer_guard_device_to_host("allow"):
+        try:
+            arr.copy_to_host_async()
+        except AttributeError:
+            pass                            # backend without async copies
 
 
 class _StagedBatch:
@@ -236,9 +327,9 @@ class PendingJoin:
     def result(self) -> EngineJoinResult:
         """Materialize (blocking if the device is still busy)."""
         if self._res is None:
-            _note_host_sync("result")
             t0 = time.perf_counter()
-            counts = self._finalize()
+            with _allowed_transfer("result"):
+                counts = self._finalize()
             self._res = EngineJoinResult(
                 counts, self._n_searched, self._t_filter,
                 self._t_dispatch + (time.perf_counter() - t0), self._verify,
@@ -574,8 +665,9 @@ class JoinEngine:
         read here; the probing itself stays in `_commit_verify`."""
         t0 = time.perf_counter()
         if st.n_pos is None:
-            _note_host_sync("n_pos")
-            st.n_pos = int(st.n_pos_dev)
+            with _allowed_transfer("n_pos"):
+                # xlint: allow-host-sync(n_pos: per-batch count read)
+                st.n_pos = int(st.n_pos_dev)
         if placed is not None:
             st.probe = placed               # the route, even if this batch
             if st.n_pos > 0:                # stages nothing (all-negative)
@@ -614,8 +706,9 @@ class JoinEngine:
         label = _check_verify(verify)       # fail fast, not data-dependently
         t0 = time.perf_counter()
         if st.n_pos is None:                # direct callers skipped stage 2
-            _note_host_sync("n_pos")
-            st.n_pos = int(st.n_pos_dev)
+            with _allowed_transfer("n_pos"):
+                # xlint: allow-host-sync(n_pos: per-batch count read)
+                st.n_pos = int(st.n_pos_dev)
         t_filter = st.t_stage + (time.perf_counter() - t0)
         n, n_pos = st.n, st.n_pos
         probe_label = None if verify == "exact" else \
@@ -636,6 +729,7 @@ class JoinEngine:
             counts_dev = cprog(st.qdev, st.pos_dev, st.n_pos_dev, self._Rdev,
                                st.eps_dev, self._nrv_dev, capacity=capacity)
             _start_host_copy(counts_dev)
+            # xlint: allow-host-sync(result: readback in PendingJoin.result)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
         elif st.probe is not None:
             # device-probe route (§11): candidates were produced on device
@@ -645,6 +739,7 @@ class JoinEngine:
                 st.qpos_dev, st.cand_dev, st.idx_dev, st.n_pos_dev,
                 st.eps_dev, out_rows=st.qdev.shape[0])
             _start_host_copy(counts_dev)
+            # xlint: allow-host-sync(result: readback in PendingJoin.result)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
         else:
             from repro.core.joins.common import (dispatch_verify_candidates,
@@ -652,8 +747,11 @@ class JoinEngine:
             searcher = self.verifier(verify) if isinstance(verify, str) \
                 else verify
             # host probing needs the verdicts; the filter program is already
-            # complete (n_pos was just read), so this transfer is cheap
+            # complete (n_pos was just read), so this transfer is cheap.
+            # NOT an _allowed_transfer: host-probe routes are expected to
+            # trip the transfer-guard lane (DESIGN.md §12)
             _note_host_sync("verdicts")
+            # xlint: allow-host-sync(verdicts: host probe needs the verdicts)
             pos_host = np.asarray(st.pos_dev)[:n]
             idx = np.nonzero(pos_host)[0]
             qpos = st.Q[idx]

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import register_program_cache
+
 
 def searcher_candidates(searcher, Q: np.ndarray, eps: float) -> np.ndarray:
     """Probe a Searcher for candidate ids, passing `eps` only when the
@@ -148,6 +150,7 @@ def localized_shard_verify(r_axis, shard_rows, metric, block, backend):
     return shard_fn
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=64)
 def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
                             block, backend):

@@ -42,9 +42,10 @@ Three layers:
 
 Compiled programs live in module-level `lru_cache`s keyed ONLY on static
 geometry (mesh, metric, probe shape) — table arrays are runtime
-arguments — so engines sharing a geometry share executables, and
-`engine.clear_program_cache()` evicts them via
-`clear_probe_program_cache`.
+arguments — so engines sharing a geometry share executables.  Every one
+is registered in `engine._PROGRAM_CACHES` via `register_program_cache`
+(enforced by xlint's cache-registry rule, DESIGN.md §12), so
+`engine.clear_program_cache()` can never silently miss one.
 """
 from __future__ import annotations
 
@@ -58,6 +59,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.engine import register_program_cache
 from repro.core.joins.common import (_verify_block_impl, _verify_blocks,
                                      localized_shard_verify)
 from repro.core.topology import _data_size, _shard_mapped
@@ -227,6 +229,7 @@ def ivfpq_candidates(Q, centroids, lists, codes, codebooks, *, n_probe: int,
 
 
 # ============================================= compiled device programs
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _gather_program(mesh, data_axis):
     """Compiled positive-compaction gather `(q, pos, *, capacity) ->
@@ -246,6 +249,7 @@ def _gather_program(mesh, data_axis):
     return jax.jit(run, static_argnames=("capacity",))
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _lsh_probe_program(metric, W, n_probes, n_buckets):
     """Compiled replicated LSH probe `(qpos, proj, bias, salt, tables) ->
@@ -261,6 +265,7 @@ def _lsh_probe_program(metric, W, n_probes, n_buckets):
     return jax.jit(run)
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets):
     """Compiled ring LSH probe: each device probes its OWN per-shard
@@ -281,6 +286,7 @@ def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets):
     return jax.jit(mapped)
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _probe_verify_program(mesh, data_axis, metric, block, backend):
     """Compiled candidate-verify + scatter program for replicated R:
@@ -309,6 +315,7 @@ def _probe_verify_program(mesh, data_axis, metric, block, backend):
     return jax.jit(run, static_argnames=("out_rows",))
 
 
+@register_program_cache
 @functools.lru_cache(maxsize=128)
 def _ring_probe_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
                                block, backend, cand_sharded):
@@ -337,10 +344,12 @@ def _ring_probe_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
 
 
 def clear_probe_program_cache() -> None:
-    """Evict every module-level compiled probe-program cache (the caches
+    """Evict this module's compiled probe-program caches only (the caches
     key on the mesh and would otherwise pin executables for meshes a
-    long-lived serve process has discarded). Called by
-    `engine.clear_program_cache`; programs rebuild transparently."""
+    long-lived serve process has discarded).  Kept as a targeted hook;
+    `engine.clear_program_cache()` now evicts these through the
+    `_PROGRAM_CACHES` registry instead of calling here. Programs rebuild
+    transparently."""
     for cache in (_gather_program, _lsh_probe_program,
                   _lsh_ring_probe_program, _probe_verify_program,
                   _ring_probe_verify_program):

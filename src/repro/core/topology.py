@@ -42,8 +42,10 @@ using the traced per-shard valid count (`nr_valid_shards`).  Counts stay
 bit-identical to the unpadded oracle.
 
 Topologies are tiny frozen dataclasses: hashable, so they key the
-engine's module-level `lru_cache` of compiled programs, and stateless, so
-one instance can serve any number of engines.
+engine's module-level `lru_cache` of compiled programs (every one
+registered in `engine._PROGRAM_CACHES` — xlint's jit-cache-key rule
+rejects unhashable program-builder params, DESIGN.md §12), and
+stateless, so one instance can serve any number of engines.
 """
 from __future__ import annotations
 

@@ -5,6 +5,9 @@ engine's data mesh, tests) is built through `make_mesh` here.  JAX moved the
 `axis_types=` kwarg / `jax.sharding.AxisType` enum in post-0.4.x releases;
 `make_mesh` feature-detects them and falls back cleanly, so no module may
 touch `jax.sharding.AxisType` or pass `axis_types=` directly (DESIGN.md §7).
+The policy is enforced mechanically: xlint's mesh-policy rule (DESIGN.md
+§12, `make lint`) rejects raw `jax.sharding.Mesh(...)` / `jax.make_mesh`
+calls, `AxisType` access, and `axis_types=` kwargs everywhere but here.
 
 Functions, not module constants — importing this module never touches jax
 device state.

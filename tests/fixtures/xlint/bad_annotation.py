@@ -1,0 +1,6 @@
+"""Fixture: malformed + stale annotations — annotation-hygiene fires on
+lines 4 (unknown directive), 5 (stale allow), and 6 (empty reason)."""
+
+# xlint: frobnicate(whatever)
+X = 1  # xlint: allow-mesh-policy(there is no raw mesh here)
+Y = 2  # xlint: allow-host-sync()

@@ -1,0 +1,9 @@
+"""Fixture: unregistered program cache — cache-registry fires on line 7."""
+# xlint: scope(cache-registry)
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def build_program(n):
+    """A program builder that clear_program_cache() would miss."""
+    return n

@@ -1,0 +1,9 @@
+"""Fixture: unhashable cache-key params — jit-cache-key fires on line 7."""
+# xlint: scope(jit-cache-key)
+import functools
+
+
+@functools.lru_cache
+def build_program(shape: dict, opts=[]):
+    """Builder keyed on a dict and a fresh list — defeats the cache."""
+    return shape

@@ -1,0 +1,6 @@
+"""Fixture: naked public def — docstring-gate fires on line 5."""
+# xlint: scope(docstring-gate)
+
+
+def naked():
+    pass

@@ -1,0 +1,7 @@
+"""Fixture: unannotated hot-path host sync — host-sync fires on line 7."""
+# xlint: scope(host-sync)
+
+
+def drain(counts_dev):
+    """Read a device counter without declaring the sync."""
+    return int(counts_dev)

@@ -1,0 +1,7 @@
+"""Fixture: raw mesh construction — mesh-policy must fire on line 7."""
+import jax
+
+
+def build(devs):
+    """Build a mesh the forbidden way (bypassing make_mesh)."""
+    return jax.sharding.Mesh(devs, ("x",))

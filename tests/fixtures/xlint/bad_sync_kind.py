@@ -1,0 +1,9 @@
+"""Fixture: allow-host-sync naming an UNDECLARED kind — host-sync fires
+(unsuppressibly) on line 9: no `_note_host_sync("bogus")` exists here."""
+# xlint: scope(host-sync)
+
+
+def drain(counts_dev):
+    """Annotated, but with a kind no instrumentation declares."""
+    # xlint: allow-host-sync(bogus: not a declared kind)
+    return int(counts_dev)
