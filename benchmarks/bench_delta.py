@@ -1,0 +1,72 @@
+"""Dynamic-R delta-occupancy rows (DESIGN.md §13): query cost vs the
+fraction of the logical set living in the un-merged delta shard.
+
+The §13 design bet is that queries degrade GRACEFULLY before
+compaction: the delta is swept exactly by a small dense program
+appended to `_commit_verify`, so cost grows with |delta| only — no
+index rebuilds, no candidate-table churn. These rows measure a full
+exact-sweep join at 0% / 12.5% / 50% delta occupancy plus a
+post-compact row (delta folded into the pinned R), at a fixed smoke n
+regardless of REPRO_BENCH_SCALE (the ratio, not the scale, is the
+point).
+
+Rows: ``delta/occ-<pct>`` -> us/query; the derived column carries the
+slowdown vs the 0%-delta baseline — the BENCH_<n> acceptance number.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+
+N, DIM, NQ = 6000, 32, 256
+EPS = 0.5
+WARM, REPS = 2, 5
+FRACS = (0.0, 0.125, 0.5)
+
+
+def _unit(rng, n):
+    x = rng.normal(size=(n, DIM)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def run() -> list:
+    from repro.core.engine import JoinEngine
+
+    rng = np.random.default_rng(0)
+    eng = JoinEngine(_unit(rng, N), "cosine", backend="jnp")
+    Q = _unit(rng, NQ)
+
+    def med_us_per_query() -> float:
+        def one():
+            t0 = time.perf_counter()
+            eng.filtered_join(Q, EPS)
+            return time.perf_counter() - t0
+        for _ in range(WARM):
+            one()
+        return float(np.median([one() for _ in range(REPS)])) / NQ * 1e6
+
+    rows, base = [], None
+    for frac in FRACS:
+        need = int(N * frac) - eng.n_delta
+        if need > 0:
+            eng.insert(_unit(rng, need))
+        us = med_us_per_query()
+        base = us if base is None else base
+        name = f"delta/occ-{100 * frac:g}%"
+        emit(name, us, f"slowdown_vs_0%={us / base:.2f}x")
+        rows.append({"name": name, "us_per_query": us,
+                     "slowdown_vs_0": us / base,
+                     "n_r": eng.nr, "n_delta": eng.n_delta})
+
+    stats = eng.compact()
+    us = med_us_per_query()
+    emit("delta/post-compact", us,
+         f"slowdown_vs_0%={us / base:.2f}x n_r={stats['n_r']}")
+    rows.append({"name": "delta/post-compact", "us_per_query": us,
+                 "slowdown_vs_0": us / base,
+                 "n_r": eng.nr, "n_delta": eng.n_delta})
+    save_json("delta_occupancy", rows)
+    return rows

@@ -67,7 +67,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,"
-                         "kernels,perf,xjoin")
+                         "kernels,perf,xjoin,delta")
     ap.add_argument("--snapshot", action="store_true",
                     help="write suite->us_per_call to the next free "
                          "top-level BENCH_<n>.json (perf trajectory "
@@ -78,10 +78,11 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only != "all" else None
     snapshot = args.snapshot or args.snapshot_out is not None
 
-    from benchmarks import (bench_atcs, bench_e2e, bench_filter,
-                            bench_generalization, bench_kernels,
-                            bench_negative_portion, bench_perf_xjoin,
-                            bench_probe, bench_tradeoff, bench_xdt)
+    from benchmarks import (bench_atcs, bench_delta, bench_e2e,
+                            bench_filter, bench_generalization,
+                            bench_kernels, bench_negative_portion,
+                            bench_perf_xjoin, bench_probe,
+                            bench_tradeoff, bench_xdt)
     from benchmarks.common import SCALE
     suites = [
         ("tab3", "Table III negative-query portions", bench_negative_portion.run),
@@ -95,6 +96,8 @@ def main() -> None:
         ("perf", "Perf: XJoin paper-faithful vs optimized", bench_perf_xjoin.run),
         ("xjoin", "XJoin probe placement: host vs device, per topology",
          bench_probe.run),
+        ("delta", "Dynamic R: query cost vs delta occupancy",
+         bench_delta.run),
     ]
     print("name,us_per_call,derived")
     captured: dict[str, dict[str, float]] = {}

@@ -36,6 +36,21 @@ else
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow"
 fi
 
+# property-lane non-vacuity gate: the lane once silently skipped
+# wholesale when `hypothesis` was missing; hypo_compat now substitutes a
+# seeded-rng driver, and this gate fails CI if the lane ever reports
+# zero passes again (skip-only = vacuous = red)
+echo "== property lane non-vacuity =="
+prop_out=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q tests/test_property.py | tail -n 2)
+echo "$prop_out"
+if ! echo "$prop_out" | grep -Eq '[1-9][0-9]* passed'; then
+    echo "FAIL: tests/test_property.py reported no passing tests — the" >&2
+    echo "property lane is vacuous (hypothesis missing AND hypo_compat" >&2
+    echo "fallback broken?)" >&2
+    exit 1
+fi
+
 # device-probe smoke (DESIGN.md §11): single-device parity of the
 # probe="device" route with host probing, under the jnp backend AND the
 # pallas backend (interpret mode off-TPU) — the new layer cannot regress

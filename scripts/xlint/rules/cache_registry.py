@@ -8,6 +8,13 @@ failure mode this rule removes.  Every `@functools.lru_cache` decorated
 module-level function in `src/repro/core/` must also carry the
 `@register_program_cache` decorator (stacked above the cache, engine.py)
 or be explicitly waived with `# xlint: allow-cache-registry(<reason>)`.
+
+The naming convention is enforced in BOTH directions: a module-level
+function whose name ends in `_program` (the program-builder convention —
+the dynamic-R delta/tombstone builders included, DESIGN.md §13) must be
+lru_cache'd AND registered even if the author forgot the cache
+decorator entirely, so a new builder cannot dodge the registry by
+skipping memoization.
 """
 from __future__ import annotations
 
@@ -66,12 +73,31 @@ class CacheRegistryRule(Rule):
     def check(self, lf: LintFile) -> list[Violation]:
         """Flag lru_cache'd builders missing @register_program_cache."""
         out: list[Violation] = []
+        flagged: set[int] = set()
         for fn in lru_cached_module_functions(lf.tree):
             if not _has(fn, "register_program_cache"):
+                flagged.add(fn.lineno)
                 out.append(self.violation(
                     lf, fn.lineno,
                     f"lru_cache'd program builder {fn.name!r} is not "
                     "registered in engine._PROGRAM_CACHES — "
                     "clear_program_cache() would silently miss it; stack "
                     "@register_program_cache above the lru_cache"))
+        # the `_program` naming convention: builders must opt INTO the
+        # cache + registry stack, not dodge it by omitting lru_cache
+        for node in ast.iter_child_nodes(lf.tree):
+            if not (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name.endswith("_program")):
+                continue
+            if node.lineno in flagged:
+                continue            # already reported by the loop above
+            if not (_has(node, "lru_cache")
+                    and _has(node, "register_program_cache")):
+                out.append(self.violation(
+                    lf, node.lineno,
+                    f"program builder {node.name!r} (by the *_program "
+                    "naming convention) must stack @register_program_cache "
+                    "over @functools.lru_cache — an unmemoized or "
+                    "unregistered builder either recompiles per call or "
+                    "survives clear_program_cache()"))
         return out

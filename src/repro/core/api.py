@@ -313,6 +313,9 @@ class JoinPlan:
                             "probe": "auto"}
         self._built: Optional[_BuiltPlan] = None
         self._device_filter_cache: dict = {}
+        self._mutable = False
+        self._auto_compact_at: Optional[float] = None
+        self._seen_compactions = 0
 
     # ------------------------------------------------------------ builders
     def filter(self, filt="xling", **opts) -> "JoinPlan":
@@ -374,6 +377,29 @@ class JoinPlan:
             raise ValueError(f"on(): unknown option(s) {sorted(unknown)}; "
                              f"expected {list(self._ON_KEYS)}")
         self._exec.update(opts)
+        self._built = None
+        return self
+
+    def mutable(self, auto_compact_at: Optional[float] = 0.5) -> "JoinPlan":
+        """Opt this plan into dynamic R (DESIGN.md §13): unlock
+        `insert` / `delete` / `compact` on the plan and set the engine's
+        auto-compaction policy — the delta is merged into the pinned R
+        (and any verifier indices are rebuilt) once
+        (|delta| + |tombstones|) / |R| reaches `auto_compact_at`; pass
+        None to compact only on explicit `compact()` calls.
+
+        Mutable plans require `search("naive")` and a by-name verify
+        spec (`"auto"`, `"exact"`, `"lsh"`, `"ivfpq"`): instance
+        searchers hold their own host-side copy of R that the engine
+        cannot patch, so mutations would silently diverge — build()
+        rejects the combination with an actionable error instead."""
+        if auto_compact_at is not None and not auto_compact_at > 0.0:
+            raise ValueError(
+                f"mutable(auto_compact_at={auto_compact_at}): expected a "
+                "positive delta fraction, or None to disable auto-compaction")
+        self._mutable = True
+        self._auto_compact_at = (None if auto_compact_at is None
+                                 else float(auto_compact_at))
         self._built = None
         return self
 
@@ -503,7 +529,13 @@ class JoinPlan:
                 # it); without params the NAME stays the route, so a later
                 # `engine.verifier(name, **params)` retune takes effect
                 v = engine.verifier(spec, **params)
-                return (v if params else spec), spec
+                # mutable plans keep the NAME as the route: compact()
+                # rebuilds the engine-cached index over the merged R, and
+                # the by-name lookup resolves to the rebuilt instance —
+                # a pinned instance would keep probing the pre-merge
+                # tables (engine.py rebuilds from _verifier_params)
+                return (spec if self._mutable else
+                        (v if params else spec)), spec
             if spec in JOINS and hasattr(JOINS[spec], "candidates"):
                 return make_join(spec, self._R, self.metric, **params), spec
             raise ValueError(
@@ -537,6 +569,25 @@ class JoinPlan:
         if self.metric not in ("cosine", "l2"):
             raise ValueError(f"metric={self.metric!r}: expected 'cosine' or "
                              "'l2'")
+        if self._mutable:
+            sspec = self._search_spec[0]
+            if sspec != "naive":
+                raise ValueError(
+                    f"mutable() with search({_spec_name(sspec)!r}): mutable "
+                    "plans require search('naive') — an instance or "
+                    "registry base indexes its own host copy of R, which "
+                    "insert/delete cannot patch; route approximate "
+                    "verification through verify('lsh'/'ivfpq') instead "
+                    "(engine-cached, rebuilt on compact)")
+            vspec = self._verify_spec[0]
+            if not (isinstance(vspec, str)
+                    and vspec in ("auto",) + VERIFY_BACKENDS):
+                raise ValueError(
+                    f"mutable() with verify({_spec_name(vspec)!r}): mutable "
+                    "plans need a by-name verify spec "
+                    f"({('auto',) + VERIFY_BACKENDS}) so compact() can "
+                    "rebuild the index over the merged R — a pinned "
+                    "instance would keep probing the pre-merge tables")
         topo_spec = self._exec["topology"]
         r_shards = self._exec["r_shards"]
         # resolve early: an unknown topology name fails here, not mid-build
@@ -624,6 +675,9 @@ class JoinPlan:
                                     backend=self._exec["backend"],
                                     block=self._exec["block"],
                                     topology=topology or "replicated")
+        if self._mutable:
+            engine.auto_compact_at = self._auto_compact_at
+            self._seen_compactions = engine.n_compactions
         base = self._build_base(engine)
         filt = self._build_filter(engine)
         verify_route, verify_label = self._build_verify(engine, base)
@@ -735,6 +789,61 @@ class JoinPlan:
             yield from _emit(sess.submit(Q, verdicts=verdicts))
         yield from _emit(sess.flush())
 
+    # ------------------------------------------------------------ mutation
+    def _require_mutable(self, op: str) -> JoinEngine:
+        if not self._mutable:
+            raise RuntimeError(
+                f"{op}: this plan is frozen — call .mutable() before "
+                "insert/delete/compact (DESIGN.md §13)")
+        return self.build()._built.engine
+
+    def _sync_after_mutation(self) -> None:
+        """Re-sync plan-side state after a mutation that may have
+        compacted (explicitly or via the auto_compact_at policy):
+        compaction re-uploads R and rebuilds the verifier indices, so the
+        plan's host R reference and the resolved probe placement (which
+        pins the pre-compact tables) must be refreshed."""
+        eng = self._built.engine
+        if eng.n_compactions == self._seen_compactions:
+            return
+        self._seen_compactions = eng.n_compactions
+        self._R = eng._R_host
+        self._built.placed_probe = eng.device_probe_for(
+            self._built.verify_route, self._exec["probe"])
+
+    def insert(self, rows) -> np.ndarray:
+        """Insert rows into the logical index set: int64 ids [k] assigned
+        to the new rows. They land in the device-resident delta shard and
+        participate in every subsequent run/stream batch exactly
+        (DESIGN.md §13); `compact()` — or the auto_compact_at policy —
+        merges them into the pinned R."""
+        eng = self._require_mutable("insert()")
+        ids = eng.insert(rows)
+        self._sync_after_mutation()
+        return ids
+
+    def delete(self, ids) -> None:
+        """Delete rows by id (ids from `insert()`, or 0..|R|-1 for the
+        original rows). Main-set rows become tombstones — zeroed on
+        device and masked out of every verify backend; delta rows are
+        dropped in place. Unknown or already-deleted ids raise KeyError
+        before any mutation is applied."""
+        eng = self._require_mutable("delete()")
+        eng.delete(ids)
+        self._sync_after_mutation()
+
+    def compact(self) -> dict:
+        """Merge the delta into the pinned R and drop tombstones: clears
+        the engine's program caches, re-uploads the merged R under the
+        plan's topology, rebuilds engine-cached verifier indices, and
+        re-resolves the probe placement. Results are unchanged (the
+        logical set is the same); per-query cost returns to the pinned
+        baseline. Returns the engine's compaction stats."""
+        eng = self._require_mutable("compact()")
+        stats = eng.compact()
+        self._sync_after_mutation()
+        return stats
+
     # ---------------------------------------------------------- inspection
     def describe(self) -> dict:
         """Serializable plan summary (spec + resolved execution state),
@@ -809,6 +918,14 @@ class JoinPlan:
                          "cand_width": (
                              None if st.placed_probe is None else
                              int(st.placed_probe.cand_width))}},
+            # dynamic-R state (DESIGN.md §13): None for frozen plans
+            "mutable": (None if not self._mutable else {
+                "auto_compact_at": self._auto_compact_at,
+                "n_delta": int(st.engine.n_delta),
+                "delta_capacity": int(st.engine.delta_capacity),
+                "delta_frac": float(st.engine.delta_frac),
+                "n_tombstones": int(st.engine.n_tombstones),
+                "compactions": int(st.engine.n_compactions)}),
         }
 
     @property

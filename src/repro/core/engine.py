@@ -40,6 +40,18 @@ This module is the execution layer that makes that true:
     transfer back via non-blocking host copies; a bounded in-flight queue
     caps memory and `flush()` is the shutdown barrier. Compiled programs
     are reused across batches because every shape is bucketed.
+  * Dynamic R (DESIGN.md §13): `insert` / `delete` mutate the logical
+    index set with NO index rebuild — inserts accumulate in a small
+    replicated device-resident delta shard (power-of-two bucketed,
+    probed exactly and added into every count); deletes zero the
+    tombstoned rows inside the pinned R (their closed-form zero-row
+    contribution is subtracted, the same mechanism as ring pad-row
+    masking) and mask them in candidate verification via an int32
+    tombstone mask. `compact()` folds the delta into the pinned R,
+    rebuilds the approximate indices, and evicts the compiled programs
+    through `clear_program_cache()` — counts stay bit-identical to a
+    fresh `ref` oracle over the logical (R ∪ delta − tombstones) set at
+    every point in a mutation sequence.
 
 Backend matrix (DESIGN.md §2): per-shard compute is the Pallas kernel on
 TPU ("pallas"), the blocked-jnp path elsewhere ("jnp"/"auto"), or the
@@ -51,6 +63,7 @@ import collections
 import contextlib
 import functools
 import time
+import weakref
 from dataclasses import dataclass
 from typing import Callable, Iterable, Iterator, Optional
 
@@ -59,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro.core.topology import Topology, _data_size, resolve_topology
+from repro.core.topology import (Topology, _data_size, _zero_row_distance,
+                                 resolve_topology)
 from repro.kernels import ops
 
 
@@ -135,6 +149,75 @@ def _compact_program(mesh, data_axis, backend, metric, block_q, block_r,
     `_hist_program`; evict with `clear_program_cache`."""
     return topology.compact_program(mesh, data_axis, backend, metric,
                                     block_q, block_r, nr_valid)
+
+
+@register_program_cache
+@functools.lru_cache(maxsize=32)
+def _delete_program(mesh, r_spec):
+    """Compiled tombstone apply `(R, tomb, rows) -> (R', tomb')`: zero the
+    deleted rows in the pinned R and set their tombstone flags, keeping
+    the topology's R sharding.  Deliberately NOT donating: staged stream
+    batches snapshot the pre-delete buffers (`_WorldView`), so the update
+    must be purely functional — old snapshots stay valid until their
+    batch commits.  `rows` is bucketed (repeat-padded with rows[0], an
+    idempotent re-delete) so one executable serves every delete size."""
+    def run(R, tomb, rows):
+        R2 = R.at[rows].set(0.0)
+        t2 = tomb.at[rows].set(1)
+        if mesh is not None:
+            s = NamedSharding(mesh, r_spec)
+            R2 = jax.lax.with_sharding_constraint(R2, s)
+            t2 = jax.lax.with_sharding_constraint(t2, s)
+        return R2, t2
+    return jax.jit(run)
+
+
+@register_program_cache
+@functools.lru_cache(maxsize=64)
+def _delta_count_program(mesh, metric):
+    """Compiled per-batch mutation adjustment for single-eps counts
+    (DESIGN.md §13): sweep the queries against the replicated delta shard
+    with the oracle's own distance math (`ref.pair_distances`, so delta
+    verdicts are bit-identical to a fresh oracle over the live rows) and,
+    on exact-sweep routes, subtract the tombstoned rows' closed-form
+    zero-row contribution (`n_tomb` traced; None on candidate routes,
+    where the tombstone mask already removed them in verification).
+    `counts=None` returns the bare adjustment (host-probe routes add it
+    after their own scatter).  None-ness of counts/n_tomb keys retraces,
+    not recompiles per batch — both are fixed per route."""
+    from repro.kernels import ref
+
+    def run(counts, q, pos, delta, dvalid, eps, n_tomb):
+        d = ref.pair_distances(q, delta, metric)
+        dcnt = jnp.sum((d <= eps) & (dvalid[None, :] == 1),
+                       axis=1, dtype=jnp.int32)
+        if n_tomb is not None:
+            hit = (_zero_row_distance(metric) <= eps).astype(jnp.int32)
+            dcnt = dcnt - n_tomb * hit
+        adj = jnp.where(pos, dcnt, 0).astype(jnp.int32)
+        return adj if counts is None else counts + adj
+    return jax.jit(run)
+
+
+@register_program_cache
+@functools.lru_cache(maxsize=64)
+def _delta_hist_program(mesh, metric):
+    """Compiled mutation adjustment for the eps-grid histogram sweep:
+    adds the live delta rows' counts and subtracts the tombstoned rows'
+    closed-form zero-row contribution per eps bin — the histogram twin of
+    `_delta_count_program`, applied by `device_range_count_hist` so the
+    ground-truth tables also see the logical (R ∪ delta − tombstones)
+    set."""
+    from repro.kernels import ref
+
+    def run(counts, q, delta, dvalid, eps_grid, n_tomb):
+        d = ref.pair_distances(q, delta, metric)
+        dcnt = jnp.sum((d[:, :, None] <= eps_grid[None, None, :])
+                       & (dvalid[None, :, None] == 1),
+                       axis=1, dtype=jnp.int32)
+        zhit = (_zero_row_distance(metric) <= eps_grid).astype(jnp.int32)
+        return counts + dcnt - n_tomb * zhit[None, :]
+    return jax.jit(run)
 
 
 def clear_program_cache() -> None:
@@ -293,15 +376,31 @@ def _start_host_copy(arr) -> None:
             pass                            # backend without async copies
 
 
+class _WorldView:
+    """Immutable snapshot of the engine's logical index state, pinned on
+    a `_StagedBatch` at stage time (DESIGN.md §13).
+
+    Mutations (`insert` / `delete`) are purely functional — they swap the
+    engine's references to fresh device buffers, never write into the old
+    ones — so a batch staged BEFORE a mutation keeps sweeping the exact
+    logical set that existed at its submit time, even though its
+    verification commits later.  That is the streamed snapshot-consistency
+    contract: batch k's counts always equal a fresh oracle over the
+    logical set as of batch k's submission."""
+    __slots__ = ("Rdev", "nrv", "delta", "dvalid", "tomb", "n_tomb",
+                 "n_tomb_dev", "mutated")
+
+
 class _StagedBatch:
     """Stage-1/2 handle: queries resident, filter program dispatched,
     nothing synced. `n_pos` is None until `JoinEngine._stage_probe` (or
     `_commit_verify` as a fallback) reads it; on a device-probe route
     `_stage_probe` additionally fills `qpos_dev` / `idx_dev` / `cand_dev`
-    and sets `probe` to the placed probe that produced them."""
+    and sets `probe` to the placed probe that produced them. `world` is
+    the submit-time `_WorldView` snapshot (DESIGN.md §13)."""
     __slots__ = ("Q", "n", "eps", "qdev", "eps_dev", "pos_dev", "n_pos_dev",
                  "n_pos", "t_stage", "probe", "qpos_dev", "idx_dev",
-                 "cand_dev", "capacity")
+                 "cand_dev", "capacity", "world")
 
 
 class PendingJoin:
@@ -375,6 +474,7 @@ class StreamSession:
         # resolve the probe route up front: probe="device" without a
         # device-capable searcher fails here, never mid-stream
         self._placed = engine.device_probe_for(verify, probe, eps=eps)
+        self._probe_mode = probe
         self.engine = engine
         self.eps = float(eps)
         self.predict, self.threshold = predict, threshold
@@ -382,6 +482,10 @@ class StreamSession:
         self._staged: Optional[_StagedBatch] = None
         self._probed: Optional[_StagedBatch] = None
         self._inflight: collections.deque[PendingJoin] = collections.deque()
+        # results forced out by a mid-stream compact() drain (§13): they
+        # are re-emitted FIRST by the next submit/flush, preserving FIFO
+        self._ready: list[EngineJoinResult] = []
+        engine._sessions.add(self)
 
     def _commit_probed(self) -> None:
         if self._probed is not None:
@@ -406,7 +510,7 @@ class StreamSession:
         self._commit_probed()               # batch k-1 enters verify
         self._advance_staged()              # batch k probes (count read)
         self._staged = st
-        out = []
+        out, self._ready = self._ready, []  # compact-drained results first
         while len(self._inflight) > self.depth:
             out.append(self._inflight.popleft().result())
         return out
@@ -418,10 +522,27 @@ class StreamSession:
         self._commit_probed()
         self._advance_staged()
         self._commit_probed()
-        out = []
+        out, self._ready = self._ready, []  # compact-drained results first
         while self._inflight:
             out.append(self._inflight.popleft().result())
         return out
+
+    # -------------------------------------- dynamic-R compaction hooks
+    def _drain_for_compact(self) -> None:
+        """Flush every in-flight batch into the session's ready buffer so
+        `JoinEngine.compact()` can swap geometry with nothing staged
+        (DESIGN.md §13).  The results are re-emitted in FIFO order by the
+        next `submit`/`flush`, so callers observe the same sequence as an
+        uninterrupted stream."""
+        drained = self.flush()      # flush() rebinds _ready — extend AFTER
+        self._ready.extend(drained)
+
+    def _rebind_after_compact(self) -> None:
+        """Re-resolve the placed probe: compaction rebuilt the verify
+        indices over the merged R, so the pre-compact probe tables are
+        stale."""
+        self._placed = self.engine.device_probe_for(
+            self.verify, self._probe_mode, eps=self.eps)
 
 
 class JoinEngine:
@@ -448,14 +569,42 @@ class JoinEngine:
         self.topology = resolve_topology(topology)
         self.topology.validate(mesh, data_axis)
         R = np.asarray(R, np.float32)
-        self.nr, self.dim = R.shape
-        # host-side R backs lazy approximate-verifier construction (§5);
-        # np.asarray above is a no-copy view for float32 input
-        self._R_host = R
+        self.dim = R.shape[1]
         self._verifiers: dict = {}
         self._probes: dict = {}     # searcher -> PlacedProbe | None (§11)
         self.ndata = _data_size(mesh, data_axis)
         self.r_shards = self.topology.r_shards(mesh)
+        self._q_sharding = None if mesh is None else NamedSharding(
+            mesh, self.topology.q_spec(data_axis))
+        self._upload_R(R)
+        self._filter_progs: dict = {}
+        # ---- dynamic-R state (DESIGN.md §13) ----------------------------
+        #: compact automatically once delta_frac reaches this fraction of
+        #: |R| (None = manual compaction only; JoinPlan.mutable sets it)
+        self.auto_compact_at: float | None = None
+        self.n_compactions = 0
+        self._next_id = self.nr             # monotone logical row ids
+        self._main_ids = np.arange(self.nr, dtype=np.int64)
+        self._delta_rows = np.empty((0, self.dim), np.float32)
+        self._delta_ids = np.empty((0,), np.int64)
+        self._delta_live = np.empty((0,), bool)
+        self._tomb_rows: set[int] = set()   # physical rows tombstoned in R
+        self._id_index: dict | None = None  # lazy id -> location map
+        self._delta_dev = None              # padded delta rows on device
+        self._delta_valid_dev = None        # int32 live mask over the pad
+        self._tomb_dev = None               # int32 [nr_padded] tombstones
+        self._n_tomb_dev = None             # int32 scalar tombstone count
+        self._sessions: weakref.WeakSet = weakref.WeakSet()
+        self._verifier_params: dict = {}    # name -> params for rebuilds
+
+    def _upload_R(self, R: np.ndarray) -> None:
+        """Pad R to the topology's row quantum and pin it on the mesh —
+        shared by `__init__` and `compact()` (which re-uploads the merged
+        logical set after evicting the compiled programs)."""
+        self.nr = len(R)
+        # host-side R backs lazy approximate-verifier construction (§5);
+        # np.asarray is a no-copy view for float32 input
+        self._R_host = R
         # "ref" on the replicated topology sweeps the raw R (the oracle
         # handles any shape); everything else sees an R padded to the
         # topology's row quantum (equal block-aligned shards) and masks —
@@ -464,22 +613,19 @@ class JoinEngine:
         if self.backend == "ref" and self.r_shards == 1:
             Rp = R
         else:
-            quantum = self.topology.r_row_quantum(block_r, mesh)
+            quantum = self.topology.r_row_quantum(self.block_r, self.mesh)
             Rp = _pad_rows_np(R, -(-self.nr // quantum) * quantum)
         self.nr_padded = len(Rp)
-        nrv = self.topology.nr_valid_shards(self.nr, self.nr_padded, mesh)
-        if mesh is not None:
-            self._q_sharding = NamedSharding(
-                mesh, self.topology.q_spec(data_axis))
-            self._Rdev = jax.device_put(
-                Rp, NamedSharding(mesh, self.topology.r_spec()))
+        nrv = self.topology.nr_valid_shards(self.nr, self.nr_padded,
+                                            self.mesh)
+        if self.mesh is not None:
+            r_sharding = NamedSharding(self.mesh, self.topology.r_spec())
+            self._Rdev = jax.device_put(Rp, r_sharding)
             self._nrv_dev = None if nrv is None else jax.device_put(
-                nrv, NamedSharding(mesh, self.topology.r_spec()))
+                nrv, r_sharding)
         else:
-            self._q_sharding = None
             self._Rdev = jnp.asarray(Rp)
             self._nrv_dev = None if nrv is None else jnp.asarray(nrv)
-        self._filter_progs: dict = {}
 
     @property
     def per_device_r_bytes(self) -> int:
@@ -487,6 +633,210 @@ class JoinEngine:
         topology choice moves; reported by `JoinPlan.describe()`."""
         return self.topology.per_device_r_bytes(self.nr_padded, self.dim,
                                                 self.mesh)
+
+    # ------------------------------------------- dynamic R (DESIGN.md §13)
+    @property
+    def n_delta(self) -> int:
+        """Live (non-deleted) rows currently in the delta shard."""
+        return int(self._delta_live.sum())
+
+    @property
+    def n_tombstones(self) -> int:
+        """Main-R rows deleted but not yet compacted away."""
+        return len(self._tomb_rows)
+
+    @property
+    def delta_capacity(self) -> int:
+        """Bucketed device rows the delta shard currently occupies."""
+        return 0 if self._delta_dev is None else int(self._delta_dev.shape[0])
+
+    @property
+    def delta_frac(self) -> float:
+        """Pending mutations as a fraction of |R| — the auto-compaction
+        trigger metric (`describe()` reports it)."""
+        return (len(self._delta_rows) + len(self._tomb_rows)) / max(self.nr, 1)
+
+    def _world(self) -> _WorldView:
+        """Snapshot the logical index state for one staged batch."""
+        w = _WorldView()
+        w.Rdev, w.nrv = self._Rdev, self._nrv_dev
+        w.delta, w.dvalid = self._delta_dev, self._delta_valid_dev
+        w.tomb = self._tomb_dev
+        w.n_tomb, w.n_tomb_dev = len(self._tomb_rows), self._n_tomb_dev
+        w.mutated = self._delta_dev is not None
+        return w
+
+    def _stable_index(self) -> dict:
+        """id -> ("main", physical row) | ("delta", slot); rebuilt lazily
+        after compaction invalidates the physical positions."""
+        if self._id_index is None:
+            self._id_index = {int(i): ("main", r)
+                              for r, i in enumerate(self._main_ids)}
+            self._id_index.update(
+                {int(i): ("delta", s)
+                 for s, i in enumerate(self._delta_ids)})
+        return self._id_index
+
+    def _put_replicated(self, x: np.ndarray) -> jax.Array:
+        if self.mesh is not None:
+            return jax.device_put(
+                x, NamedSharding(self.mesh, self.topology.delta_spec()))
+        return jnp.asarray(x)
+
+    def _upload_delta(self) -> None:
+        """Re-pin the delta shard: rows padded to a 64-row power-of-two
+        bucket (matching the probe capacity quantum) with an int32 live
+        mask, replicated per `topology.delta_spec()` so the ring sweep
+        schedule is untouched.  A fresh buffer every time — staged
+        batches keep their snapshot of the old one."""
+        cap = _bucket_size(max(len(self._delta_rows), 1), 64)
+        self._delta_dev = self._put_replicated(
+            _pad_rows_np(self._delta_rows, cap))
+        valid = np.zeros((cap,), np.int32)
+        valid[: len(self._delta_live)] = self._delta_live
+        self._delta_valid_dev = self._put_replicated(valid)
+        if self._n_tomb_dev is None:
+            self._n_tomb_dev = jnp.asarray(0, jnp.int32)
+
+    def _ensure_tomb(self) -> jax.Array:
+        """The int32 [nr_padded] tombstone mask, materialized on first
+        delete (sharded like R so candidate verification indexes it
+        locally on every placement)."""
+        if self._tomb_dev is None:
+            tomb = np.zeros((self.nr_padded,), np.int32)
+            if self.mesh is not None:
+                self._tomb_dev = jax.device_put(
+                    tomb, NamedSharding(self.mesh, self.topology.r_spec()))
+            else:
+                self._tomb_dev = jnp.asarray(tomb)
+        return self._tomb_dev
+
+    def insert(self, rows) -> np.ndarray:
+        """Insert rows into the logical index set; returns their int64 ids.
+
+        The rows land in the device-resident delta shard — probed exactly
+        and merged into every subsequent count (`_delta_count_program`) —
+        with NO rebuild of R, the learned filter, or the approximate
+        verify indices.  `compact()` (or the `auto_compact_at` policy)
+        later folds them into the pinned R."""
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        if rows.ndim != 2 or rows.shape[1] != self.dim:
+            raise ValueError(
+                f"insert: rows have shape {rows.shape}; expected (k, "
+                f"{self.dim}) matching the engine's R")
+        ids = np.arange(self._next_id, self._next_id + len(rows),
+                        dtype=np.int64)
+        self._next_id += len(rows)
+        base = len(self._delta_rows)
+        self._delta_rows = np.concatenate([self._delta_rows, rows])
+        self._delta_ids = np.concatenate([self._delta_ids, ids])
+        self._delta_live = np.concatenate(
+            [self._delta_live, np.ones((len(rows),), bool)])
+        if self._id_index is not None:
+            for s, i in enumerate(ids):
+                self._id_index[int(i)] = ("delta", base + s)
+        self._upload_delta()
+        self._maybe_auto_compact()
+        return ids
+
+    def delete(self, ids) -> None:
+        """Delete rows by id. Main-R rows become tombstones — zeroed in
+        the pinned R (their closed-form zero-row contribution is
+        subtracted from exact sweeps, the ring pad-row mechanism) and
+        masked out of candidate verification; delta rows just drop their
+        live flag.  Unknown or already-deleted ids raise KeyError BEFORE
+        any state changes, so a failed delete mutates nothing."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        index = self._stable_index()
+        seen: set[int] = set()
+        resolved = []
+        for i in ids:
+            i = int(i)
+            loc = index.get(i)
+            dead = (loc is None or i in seen
+                    or (loc[0] == "main" and loc[1] in self._tomb_rows)
+                    or (loc[0] == "delta" and not self._delta_live[loc[1]]))
+            if dead:
+                raise KeyError(
+                    f"delete: id {i} is unknown or already deleted")
+            seen.add(i)
+            resolved.append(loc)
+        main = [r for kind, r in resolved if kind == "main"]
+        slots = [s for kind, s in resolved if kind == "delta"]
+        if slots:
+            self._delta_live[slots] = False
+            self._upload_delta()
+        if main:
+            self._tomb_rows.update(main)
+            rows = np.asarray(main, np.int32)
+            # bucket the row list (repeat rows[0]: an idempotent pad) so
+            # one compiled delete program serves every delete size
+            rp = np.full((_bucket_size(len(rows), 64),), rows[0], np.int32)
+            rp[: len(rows)] = rows
+            prog = _delete_program(self.mesh, self.topology.r_spec())
+            self._Rdev, self._tomb_dev = prog(
+                self._Rdev, self._ensure_tomb(), jnp.asarray(rp))
+            self._n_tomb_dev = jnp.asarray(len(self._tomb_rows), jnp.int32)
+            if self._delta_dev is None:     # mutated: adjust must run even
+                self._upload_delta()        # with an empty delta
+        self._maybe_auto_compact()
+
+    def compact(self) -> dict:
+        """Fold the delta into the pinned R and drop the tombstones.
+
+        Drains every live stream session (their in-flight results are
+        re-emitted FIFO), evicts all compiled programs through
+        `clear_program_cache()` (geometry changes: nr/nr_padded key the
+        caches), re-uploads the merged (R ∪ delta − tombstones) set, and
+        rebuilds the cached approximate verifiers with their recorded
+        params so post-compact counts are what a fresh engine over the
+        merged set would produce.  Returns a stats dict; a no-op (nothing
+        pending) returns `{"compacted": False, ...}` without touching the
+        program caches."""
+        merged = len(self._tomb_rows) + len(self._delta_rows)
+        if merged == 0:
+            return {"compacted": False, "n_r": self.nr, "n_merged": 0,
+                    "n_dropped": 0}
+        for sess in list(self._sessions):
+            sess._drain_for_compact()
+        keep = np.ones((self.nr,), bool)
+        keep[list(self._tomb_rows)] = False
+        live = self._delta_live
+        newR = np.concatenate([self._R_host[keep],
+                               self._delta_rows[live]])
+        if len(newR) == 0:
+            raise ValueError(
+                "compact: the logical index set is empty (every row "
+                "deleted) — insert rows before compacting")
+        n_merged = int(live.sum())
+        n_dropped = len(self._tomb_rows) + int((~live).sum())
+        clear_program_cache()
+        self._upload_R(newR)
+        self._main_ids = np.concatenate(
+            [self._main_ids[keep], self._delta_ids[live]])
+        self._id_index = None
+        self._tomb_rows = set()
+        self._delta_rows = np.empty((0, self.dim), np.float32)
+        self._delta_ids = np.empty((0,), np.int64)
+        self._delta_live = np.empty((0,), bool)
+        self._delta_dev = self._delta_valid_dev = None
+        self._tomb_dev = self._n_tomb_dev = None
+        # rebuild approximate verify indices over the merged set with the
+        # params their last build recorded (drop instances + placed probes)
+        self._verifiers.clear()
+        self._probes.clear()
+        for name, params in self._verifier_params.items():
+            self.verifier(name, **params)
+        self.n_compactions += 1
+        for sess in list(self._sessions):
+            sess._rebind_after_compact()
+        return {"compacted": True, "n_r": self.nr, "n_merged": n_merged,
+                "n_dropped": n_dropped}
+
+    def _maybe_auto_compact(self) -> None:
+        if (self.auto_compact_at is not None
+                and self.delta_frac >= self.auto_compact_at):
+            self.compact()
 
     # ------------------------------------------------------------- plumbing
     def _pad_q(self, Q) -> np.ndarray:
@@ -522,8 +872,16 @@ class JoinEngine:
         prog = _hist_program(self.mesh, self.data_axis, self.backend,
                              self.metric, self.block_q, self.block_r,
                              self.eps_chunk, self.nr, self.topology)
-        return prog(self._put_q(qp), self._Rdev, jnp.asarray(ep),
-                    self._nrv_dev)
+        qdev, ep_dev = self._put_q(qp), jnp.asarray(ep)
+        out = prog(qdev, self._Rdev, ep_dev, self._nrv_dev)
+        w = self._world()
+        if w.mutated:
+            # logical-set adjustment (§13): add the live delta rows,
+            # subtract the tombstones' closed-form contribution (padded
+            # query rows / inf eps pad columns are sliced off by callers)
+            out = _delta_hist_program(self.mesh, self.metric)(
+                out, qdev, w.delta, w.dvalid, ep_dev, w.n_tomb_dev)
+        return out
 
     def range_count_hist(self, Q, eps_grid) -> np.ndarray:
         """counts[i, j] = #-neighbors of Q[i] in R within eps_grid[j]."""
@@ -598,6 +956,7 @@ class JoinEngine:
                 jnp.asarray(st.n, jnp.int32))
             st.n_pos = None                 # read at commit time
         st.probe = None                     # set by _stage_probe (§11)
+        st.world = self._world()            # submit-time snapshot (§13)
         st.t_stage = time.perf_counter() - t0
         return st
 
@@ -711,6 +1070,7 @@ class JoinEngine:
                 st.n_pos = int(st.n_pos_dev)
         t_filter = st.t_stage + (time.perf_counter() - t0)
         n, n_pos = st.n, st.n_pos
+        w = st.world                        # submit-time logical set (§13)
         probe_label = None if verify == "exact" else \
             ("device" if st.probe is not None else "host")
 
@@ -726,8 +1086,14 @@ class JoinEngine:
             cprog = _compact_program(self.mesh, self.data_axis, self.backend,
                                      self.metric, self.block_q, self.block_r,
                                      self.nr, self.topology)
-            counts_dev = cprog(st.qdev, st.pos_dev, st.n_pos_dev, self._Rdev,
-                               st.eps_dev, self._nrv_dev, capacity=capacity)
+            counts_dev = cprog(st.qdev, st.pos_dev, st.n_pos_dev, w.Rdev,
+                               st.eps_dev, w.nrv, capacity=capacity)
+            if w.mutated:
+                # exact sweep counted tombstones (zeroed rows): subtract
+                # their closed-form contribution and add the delta rows
+                counts_dev = _delta_count_program(self.mesh, self.metric)(
+                    counts_dev, st.qdev, st.pos_dev, w.delta, w.dvalid,
+                    st.eps_dev, w.n_tomb_dev)
             _start_host_copy(counts_dev)
             # xlint: allow-host-sync(result: readback in PendingJoin.result)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
@@ -737,7 +1103,14 @@ class JoinEngine:
             # no host transfer of verdicts or candidates at all
             counts_dev = st.probe.verify(
                 st.qpos_dev, st.cand_dev, st.idx_dev, st.n_pos_dev,
-                st.eps_dev, out_rows=st.qdev.shape[0])
+                st.eps_dev, out_rows=st.qdev.shape[0], Rdev=w.Rdev,
+                tomb=w.tomb)
+            if w.mutated:
+                # tombstones were masked in verification (a deleted row
+                # may not even be a candidate), so only the delta is added
+                counts_dev = _delta_count_program(self.mesh, self.metric)(
+                    counts_dev, st.qdev, st.pos_dev, w.delta, w.dvalid,
+                    st.eps_dev, None)
             _start_host_copy(counts_dev)
             # xlint: allow-host-sync(result: readback in PendingJoin.result)
             finalize = lambda: np.asarray(counts_dev)[:n]   # noqa: E731
@@ -755,6 +1128,15 @@ class JoinEngine:
             pos_host = np.asarray(st.pos_dev)[:n]
             idx = np.nonzero(pos_host)[0]
             qpos = st.Q[idx]
+            # under mutations the delta adjustment runs through the SAME
+            # device program as the device routes (not host numpy), so
+            # host-vs-device probe count parity is preserved bit-for-bit
+            adj_dev = None
+            if w.mutated:
+                adj_dev = _delta_count_program(self.mesh, self.metric)(
+                    None, st.qdev, st.pos_dev, w.delta, w.dvalid,
+                    st.eps_dev, None)
+                _start_host_copy(adj_dev)
             if hasattr(searcher, "candidates"):
                 _note_host_sync("probe")
                 cand = searcher_candidates(searcher, qpos, st.eps)
@@ -765,17 +1147,28 @@ class JoinEngine:
                     data_axis=self.data_axis,
                     shard_rows=self.nr_padded // self.r_shards)
                 pend = dispatch_verify_candidates(
-                    self._Rdev, qpos, cand, st.eps, self.metric,
-                    backend=self.backend, **shard)
+                    w.Rdev, qpos, cand, st.eps, self.metric,
+                    backend=self.backend, tomb=w.tomb, **shard)
 
                 def finalize():
                     counts = np.zeros((n,), np.int32)
                     counts[idx] = pend.result()
+                    if adj_dev is not None:
+                        # xlint: allow-host-sync(result: readback in PendingJoin.result)
+                        counts = counts + np.asarray(adj_dev)[:n]
                     return counts
             else:
                 # candidate-less plug-in: the searcher verifies the
                 # compacted positives itself (synchronous host hop — the
-                # generic "any loop-based method" fallback)
+                # generic "any loop-based method" fallback). It sweeps its
+                # own copy of R, which cannot honor tombstones — refuse
+                # rather than return silently wrong counts
+                if w.n_tomb > 0:
+                    raise RuntimeError(
+                        f"verify={label!r}: query_counts-only plug-in "
+                        "searchers cannot honor tombstoned deletes — "
+                        "compact() first, or use a candidates() searcher "
+                        "(DESIGN.md §13)")
                 _note_host_sync("probe")
                 found = np.asarray(searcher.query_counts(qpos, st.eps),
                                    np.int32)
@@ -783,6 +1176,9 @@ class JoinEngine:
                 def finalize():
                     counts = np.zeros((n,), np.int32)
                     counts[idx] = found
+                    if adj_dev is not None:
+                        # xlint: allow-host-sync(result: readback in PendingJoin.result)
+                        counts = counts + np.asarray(adj_dev)[:n]
                     return counts
         t_dispatch = time.perf_counter() - t1
         return PendingJoin(finalize, verify=label, n_searched=n_pos,
@@ -820,6 +1216,9 @@ class JoinEngine:
             if not hasattr(v, "candidates"):
                 raise TypeError(f"join {name!r} exposes no candidates()")
             self._verifiers[name] = v
+            # compact() rebuilds the index over the merged R with the
+            # exact params of its last build (DESIGN.md §13)
+            self._verifier_params[name] = dict(params)
         return v
 
     # --------------------------------------------------- one-shot join call

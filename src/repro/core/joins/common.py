@@ -89,13 +89,17 @@ def build_capacity_table(assignments: np.ndarray, n_buckets: int,
     return table
 
 
-def _verify_block_impl(R, q, cand, eps, *, metric):
+def _verify_block_impl(R, q, cand, eps, *, metric, tomb=None):
     """counts of unique candidates within eps. q [bq,d], cand [bq,C] (-1 pad).
-    Traceable — composes under the blocked scan below."""
+    Traceable — composes under the blocked scan below. `tomb` is the
+    optional int32 tombstone mask over R's rows (DESIGN.md §13): a
+    candidate whose row is tombstoned never counts, on every backend."""
     cand_sorted = jnp.sort(cand, axis=1)
     dup = jnp.concatenate([jnp.zeros((cand.shape[0], 1), bool),
                            cand_sorted[:, 1:] == cand_sorted[:, :-1]], axis=1)
     valid = (cand_sorted >= 0) & ~dup
+    if tomb is not None:
+        valid &= tomb[jnp.maximum(cand_sorted, 0)] == 0
     x = R[jnp.maximum(cand_sorted, 0)]                   # [bq, C, d]
     dots = jnp.einsum("qcd,qd->qc", x.astype(jnp.float32), q.astype(jnp.float32))
     if metric == "cosine":
@@ -106,45 +110,50 @@ def _verify_block_impl(R, q, cand, eps, *, metric):
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "block"))
-def _verify_blocks(R, q, cand, eps, *, metric, block):
+def _verify_blocks(R, q, cand, eps, tomb=None, *, metric, block):
     """lax.map over q blocks — ONE device program for the whole candidate
     set (q rows % block == 0), peak memory still O(block * C * d)."""
     nb = q.shape[0] // block
     qb = q.reshape(nb, block, q.shape[1])
     cb = cand.reshape(nb, block, cand.shape[1])
     out = jax.lax.map(
-        lambda xc: _verify_block_impl(R, xc[0], xc[1], eps, metric=metric),
+        lambda xc: _verify_block_impl(R, xc[0], xc[1], eps, metric=metric,
+                                      tomb=tomb),
         (qb, cb))
     return out.reshape(-1)
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
-def _verify_ref(R, q, cand, eps, *, metric):
+def _verify_ref(R, q, cand, eps, tomb=None, *, metric):
     """Unblocked oracle form — no padding, one program per chunk shape
     (mirrors the "ref" row of the DESIGN.md §2 matrix)."""
-    return _verify_block_impl(R, q, cand, eps, metric=metric)
+    return _verify_block_impl(R, q, cand, eps, metric=metric, tomb=tomb)
 
 
 def localized_shard_verify(r_axis, shard_rows, metric, block, backend):
     """Per-shard candidate verification against an R row-sharded over
-    `r_axis`: `shard_fn(rs, qb, cb, e)` localizes the global candidate
-    ids to this device's row range ([me*shard_rows, (me+1)*shard_rows)
-    -> masked to -1 outside), verifies them against the resident shard,
-    and `psum`s the counts over `r_axis`. A candidate id maps to exactly
-    one shard, so the per-shard sort/dedup of `_verify_block_impl` stays
-    correct and R's padding rows (never referenced by valid ids) stay
-    inert. The SINGLE implementation behind `_sharded_verify_program`
-    (host probing) and `probe.py`'s ring verify programs (device
-    probing, DESIGN.md §11) — the two routes cannot diverge."""
-    def shard_fn(rs, qb, cb, e):
+    `r_axis`: `shard_fn(rs, qb, cb, e, tb=None)` localizes the global
+    candidate ids to this device's row range ([me*shard_rows,
+    (me+1)*shard_rows) -> masked to -1 outside), verifies them against
+    the resident shard, and `psum`s the counts over `r_axis`. A candidate
+    id maps to exactly one shard, so the per-shard sort/dedup of
+    `_verify_block_impl` stays correct and R's padding rows (never
+    referenced by valid ids) stay inert. `tb` is the local slice of the
+    tombstone mask (sharded exactly like R, so the localized ids index
+    it directly — DESIGN.md §13). The SINGLE implementation behind
+    `_sharded_verify_program` (host probing) and `probe.py`'s ring
+    verify programs (device probing, DESIGN.md §11) — the two routes
+    cannot diverge."""
+    def shard_fn(rs, qb, cb, e, tb=None):
         lo = jax.lax.axis_index(r_axis) * shard_rows
         local = cb - lo
         keep = (cb >= 0) & (local >= 0) & (local < shard_rows)
         cl = jnp.where(keep, local, -1).astype(jnp.int32)
         if backend == "ref" or qb.shape[0] % block != 0:
-            cnt = _verify_block_impl(rs, qb, cl, e, metric=metric)
+            cnt = _verify_block_impl(rs, qb, cl, e, metric=metric, tomb=tb)
         else:
-            cnt = _verify_blocks(rs, qb, cl, e, metric=metric, block=block)
+            cnt = _verify_blocks(rs, qb, cl, e, tb, metric=metric,
+                                 block=block)
         return jax.lax.psum(cnt, r_axis)
 
     return shard_fn
@@ -153,13 +162,15 @@ def localized_shard_verify(r_axis, shard_rows, metric, block, backend):
 @register_program_cache
 @functools.lru_cache(maxsize=64)
 def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
-                            block, backend):
+                            block, backend, has_tomb=False):
     """Candidate verification against an R row-sharded over `r_axis`
     (the ring topology, DESIGN.md §10): `localized_shard_verify` mapped
     over the mesh. The query/candidate chunk additionally shards over
     `data_axis` whenever its (block-bucketed) row count divides evenly —
-    the data columns split the work instead of repeating it. Cached per
-    (mesh, geometry); evicted by `engine.clear_program_cache`."""
+    the data columns split the work instead of repeating it. `has_tomb`
+    keys the program on whether a tombstone mask rides along (shard_map
+    in_specs are fixed-arity — DESIGN.md §13). Cached per (mesh,
+    geometry); evicted by `engine.clear_program_cache`."""
     from repro.core.topology import _data_size, _shard_mapped
     from jax.sharding import PartitionSpec as P
 
@@ -167,15 +178,20 @@ def _sharded_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
     shard_fn = localized_shard_verify(r_axis, shard_rows, metric, block,
                                       backend)
 
-    def run(rs, qb, cb, e):
+    def run(rs, qb, cb, e, tb=None):
         # rows are static at trace time, so the placement choice is too;
         # jit caches one executable per chunk-shape bucket either way
         qspec = P(data_axis) if (ndata > 1 and qb.shape[0] % ndata == 0
                                  and (backend == "ref"
                                       or (qb.shape[0] // ndata) % block == 0)
                                  ) else P()
-        mapped = _shard_mapped(shard_fn, mesh,
-                               in_specs=(P(r_axis), qspec, qspec, P()),
+        in_specs = (P(r_axis), qspec, qspec, P())
+        if has_tomb:
+            in_specs += (P(r_axis),)        # tomb shards exactly like R
+            mapped = _shard_mapped(shard_fn, mesh, in_specs=in_specs,
+                                   out_specs=qspec)
+            return mapped(rs, qb, cb, e, tb)
+        mapped = _shard_mapped(shard_fn, mesh, in_specs=in_specs,
                                out_specs=qspec)
         return mapped(rs, qb, cb, e)
 
@@ -203,12 +219,14 @@ def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                                chunk: int = 8192, backend: str = "auto",
                                mesh=None, r_axis: str | None = None,
                                data_axis: str = "data",
-                               shard_rows: int = 0) -> PendingCounts:
+                               shard_rows: int = 0, tomb=None) -> PendingCounts:
     """Non-blocking form of `verify_candidates`: dispatches every chunk's
     device program, kicks off async device→host copies, and returns a
     `PendingCounts` handle. `R` may be a host array or an already
     device-resident replica (e.g. `JoinEngine`'s padded R — candidate ids
-    never reference padding rows, so the extra rows are inert).
+    never reference padding rows, so the extra rows are inert). `tomb`
+    optionally masks tombstoned R rows out of the counts (DESIGN.md §13;
+    sharded like R on ring placements).
 
     When `R` is row-sharded over a mesh axis (the ring topology), pass
     `mesh`, `r_axis`, and `shard_rows` (rows per shard): each device then
@@ -223,7 +241,7 @@ def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
     if sharded:
         prog = _sharded_verify_program(mesh, r_axis, data_axis,
                                        int(shard_rows), metric, block,
-                                       backend)
+                                       backend, tomb is not None)
     parts = []
     for i in range(0, n, chunk):
         j = min(i + chunk, n)
@@ -238,12 +256,13 @@ def dispatch_verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
             ch[:j - i] = cand_ids[i:j]
             qb, cb = jnp.asarray(qh), jnp.asarray(ch)
         if sharded:
-            cnt = prog(Rj, qb, cb, jnp.float32(eps))
+            cnt = prog(Rj, qb, cb, jnp.float32(eps), tomb)
         elif backend == "ref":
-            cnt = _verify_ref(Rj, qb, cb, jnp.float32(eps), metric=metric)
+            cnt = _verify_ref(Rj, qb, cb, jnp.float32(eps), tomb,
+                              metric=metric)
         else:
-            cnt = _verify_blocks(Rj, qb, cb, jnp.float32(eps), metric=metric,
-                                 block=block)
+            cnt = _verify_blocks(Rj, qb, cb, jnp.float32(eps), tomb,
+                                 metric=metric, block=block)
         _start_host_copy(cnt)
         parts.append((cnt, i, j))
     return PendingCounts(parts, n)
@@ -254,7 +273,7 @@ def verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                       chunk: int = 8192, backend: str = "auto",
                       mesh=None, r_axis: str | None = None,
                       data_axis: str = "data",
-                      shard_rows: int = 0) -> np.ndarray:
+                      shard_rows: int = 0, tomb=None) -> np.ndarray:
     """Exact verification of candidate lists. cand_ids [q, C] int32 (-1 pad).
     Returns int32 [q] counts of unique true neighbors among candidates.
     Queries are padded to a bucketed multiple of `block` (bounded
@@ -269,4 +288,5 @@ def verify_candidates(R, Q: np.ndarray, cand_ids: np.ndarray,
                                       block=block, chunk=chunk,
                                       backend=backend, mesh=mesh,
                                       r_axis=r_axis, data_axis=data_axis,
-                                      shard_rows=shard_rows).result()
+                                      shard_rows=shard_rows,
+                                      tomb=tomb).result()

@@ -290,11 +290,13 @@ def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets):
 @functools.lru_cache(maxsize=128)
 def _probe_verify_program(mesh, data_axis, metric, block, backend):
     """Compiled candidate-verify + scatter program for replicated R:
-    `(R, qpos, cand, idx, n_pos, eps, *, out_rows) -> int32 [out_rows]`.
-    The work shards over `data` when the capacity divides evenly."""
+    `(R, qpos, cand, idx, n_pos, eps, tomb, *, out_rows) -> int32
+    [out_rows]`. The work shards over `data` when the capacity divides
+    evenly. `tomb` (None when R is unmutated) masks tombstoned rows out
+    of the counts (DESIGN.md §13)."""
     ndata = _data_size(mesh, data_axis)
 
-    def run(R, qpos, cand, idx, n_pos, eps, *, out_rows: int):
+    def run(R, qpos, cand, idx, n_pos, eps, tomb=None, *, out_rows: int):
         cap = qpos.shape[0]
         qp, cb = qpos, cand
         if (mesh is not None and ndata > 1 and cap % ndata == 0
@@ -305,9 +307,11 @@ def _probe_verify_program(mesh, data_axis, metric, block, backend):
         if backend == "ref" or cap % block != 0:
             # unblocked fallback also covers small-block_q engines whose
             # capacity is below one verify tile
-            cnt = _verify_block_impl(R, qp, cb, eps, metric=metric)
+            cnt = _verify_block_impl(R, qp, cb, eps, metric=metric,
+                                     tomb=tomb)
         else:
-            cnt = _verify_blocks(R, qp, cb, eps, metric=metric, block=block)
+            cnt = _verify_blocks(R, qp, cb, eps, tomb, metric=metric,
+                                 block=block)
         contrib = jnp.where(jnp.arange(cap) < n_pos, cnt, 0) \
                      .astype(jnp.int32)
         return jnp.zeros((out_rows,), jnp.int32).at[idx].add(contrib)
@@ -318,7 +322,8 @@ def _probe_verify_program(mesh, data_axis, metric, block, backend):
 @register_program_cache
 @functools.lru_cache(maxsize=128)
 def _ring_probe_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
-                               block, backend, cand_sharded):
+                               block, backend, cand_sharded,
+                               has_tomb=False):
     """Compiled candidate-verify + scatter for ring-sharded R: each
     device verifies the candidate ids that land in its own shard's row
     range against its resident R shard and the counts are `psum`'d over
@@ -326,16 +331,23 @@ def _ring_probe_verify_program(mesh, r_axis, data_axis, shard_rows, metric,
     as the host-probe route). With `cand_sharded` (per-shard probe
     tables) each device sees only its own candidate slice; otherwise the
     replicated candidate list is localized per shard (ids outside the
-    range mask to -1)."""
+    range mask to -1). `has_tomb` keys on whether the tombstone mask
+    (sharded like R) rides along — shard_map in_specs are fixed-arity
+    (DESIGN.md §13)."""
     cspec = P(None, r_axis) if cand_sharded else P()
     shard_fn = localized_shard_verify(r_axis, shard_rows, metric, block,
                                       backend)
-    mapped = _shard_mapped(shard_fn, mesh,
-                           in_specs=(P(r_axis), P(), cspec, P()),
+    in_specs = (P(r_axis), P(), cspec, P())
+    if has_tomb:
+        in_specs += (P(r_axis),)
+    mapped = _shard_mapped(shard_fn, mesh, in_specs=in_specs,
                            out_specs=P())
 
-    def run(R, qpos, cand, idx, n_pos, eps, *, out_rows: int):
-        cnt = mapped(R, qpos, cand, eps)
+    def run(R, qpos, cand, idx, n_pos, eps, tomb=None, *, out_rows: int):
+        if has_tomb:
+            cnt = mapped(R, qpos, cand, eps, tomb)
+        else:
+            cnt = mapped(R, qpos, cand, eps)
         contrib = jnp.where(jnp.arange(qpos.shape[0]) < n_pos, cnt, 0) \
                      .astype(jnp.int32)
         return jnp.zeros((out_rows,), jnp.int32).at[idx].add(contrib)
@@ -411,20 +423,24 @@ class PlacedProbe:
         return self._probe_fn(qpos, *self._state)
 
     def verify(self, qpos, cand, idx, n_pos, eps, *, out_rows: int,
-               block: int = 32) -> jax.Array:
+               block: int = 32, Rdev=None, tomb=None) -> jax.Array:
         """Dispatch candidate verification + scatter against the
         engine's resident R; returns the per-query counts [out_rows]
-        (device array — the caller starts the async host copy)."""
+        (device array — the caller starts the async host copy). `Rdev` /
+        `tomb` override the engine's live buffers with a staged batch's
+        snapshot of R and its tombstone mask (DESIGN.md §13) so streamed
+        batches verify against their submit-time logical set."""
         eng = self.engine
+        R = eng._Rdev if Rdev is None else Rdev
         if eng.r_shards > 1:
             prog = _ring_probe_verify_program(
                 eng.mesh, eng.topology.r_axis, eng.data_axis,
                 eng.nr_padded // eng.r_shards, eng.metric, block,
-                eng.backend, self.cand_sharded)
+                eng.backend, self.cand_sharded, tomb is not None)
         else:
             prog = _probe_verify_program(eng.mesh, eng.data_axis,
                                          eng.metric, block, eng.backend)
-        return prog(eng._Rdev, qpos, cand, idx, n_pos, eps,
+        return prog(R, qpos, cand, idx, n_pos, eps, tomb,
                     out_rows=out_rows)
 
 

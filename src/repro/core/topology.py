@@ -183,6 +183,15 @@ class Topology:
         meaningful when `probe_shards` > 1)."""
         return P()
 
+    def delta_spec(self) -> P:
+        """PartitionSpec of the dynamic-R delta shard (DESIGN.md §13):
+        replicated under EVERY placement.  The delta is small by policy
+        (auto-compaction bounds it at a fraction of |R|), so replicating
+        it keeps the ring sweep schedule untouched — no extra ppermute
+        steps; the delta adjustment is a purely local dense op on each
+        device, psum-free under both topologies."""
+        return P()
+
     def per_device_r_bytes(self, nr_padded: int, dim: int, mesh) -> int:
         """Bytes of R resident on EACH device under this placement."""
         raise NotImplementedError

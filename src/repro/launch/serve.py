@@ -32,12 +32,15 @@ from repro.core import JoinPlan
 from repro.data import load_dataset
 
 
-def batch_stats(b: int, res, true_counts: np.ndarray) -> dict:
+def batch_stats(b: int, res, true_counts: np.ndarray,
+                delta_frac: float | None = None) -> dict:
     """One report line for a served batch: filter skip rate, verification
     recall vs the exact oracle, probe placement + the verify index's
     build-time candidate-loss budget (LSH bucket-capacity overflow,
-    DESIGN.md §11), and the filter/search timing split."""
-    return {
+    DESIGN.md §11), the delta occupancy at submit time when a mutation
+    trace is being replayed (DESIGN.md §13), and the filter/search
+    timing split."""
+    out = {
         "batch": b,
         "queries": int(res.n_queries),
         "searched": int(res.n_searched),
@@ -49,6 +52,9 @@ def batch_stats(b: int, res, true_counts: np.ndarray) -> dict:
         "t_filter_ms": res.t_filter * 1e3,
         "t_search_ms": res.t_search * 1e3,
     }
+    if delta_frac is not None:
+        out["delta_frac"] = float(delta_frac)
+    return out
 
 
 def summarize(stats: list[dict], build_s: float) -> dict:
@@ -69,6 +75,49 @@ def summarize(stats: list[dict], build_s: float) -> dict:
     }
 
 
+def load_trace(path: str) -> dict[int, list[dict]]:
+    """Parse a JSONL mutation trace into {batch index: [ops]}: each line is
+    `{"before_batch": k, "op": "insert"|"delete"|"compact", "n": ...,
+    "seed": ...}` — the ops run right before batch k is submitted."""
+    by_batch: dict[int, list[dict]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            op = json.loads(line)
+            by_batch.setdefault(int(op.get("before_batch", 0)), []).append(op)
+    return by_batch
+
+
+def apply_ops(plan: JoinPlan, ops, live: dict, dim: int) -> None:
+    """Replay trace ops against a mutable plan, mirroring them into `live`
+    (id -> row), the host shadow of the logical set that the recall
+    oracle is computed from. Inserts draw seeded unit rows; deletes draw
+    seeded ids from the live set (never the last row)."""
+    for op in ops:
+        kind = op["op"]
+        rng = np.random.default_rng(int(op.get("seed", 0)))
+        if kind == "insert":
+            rows = rng.normal(size=(int(op["n"]), dim)).astype(np.float32)
+            rows /= np.maximum(
+                np.linalg.norm(rows, axis=1, keepdims=True), 1e-12)
+            ids = plan.insert(rows)
+            live.update(zip(map(int, ids), rows))
+        elif kind == "delete":
+            pool = np.fromiter(live, dtype=np.int64)
+            ids = rng.choice(pool, size=min(int(op["n"]), len(pool) - 1),
+                             replace=False)
+            plan.delete(ids)
+            for i in ids:
+                live.pop(int(i))
+        elif kind == "compact":
+            plan.compact()
+        else:
+            raise ValueError(f"mutate-trace: unknown op {kind!r}; expected "
+                             "'insert', 'delete', or 'compact'")
+
+
 def build_plan(args, R, metric: str) -> JoinPlan:
     """Compile the CLI flags into a built `JoinPlan` (filter fit + engine +
     verifier index + probe tables all constructed here, so their one-time
@@ -77,15 +126,17 @@ def build_plan(args, R, metric: str) -> JoinPlan:
     device` pins the verify index's probe tables on the mesh too
     (DESIGN.md §11) — the resolved placement, including per-device R and
     probe-table bytes, lands in the printed plan line."""
-    return (JoinPlan(R, metric)
+    plan = (JoinPlan(R, metric)
             .filter("xling", tau=args.tau, xdt="fpr",
                     estimator=args.estimator, epochs=args.epochs)
             .search("naive")
             .verify(args.verify)
             .on(backend="jnp", cache_key=(args.dataset, args.n),
                 topology=args.topology, r_shards=args.r_shards,
-                probe=args.probe)
-            .build())
+                probe=args.probe))
+    if args.mutate_trace:
+        plan = plan.mutable()   # unlock insert/delete/compact (§13)
+    return plan.build()
 
 
 def main():
@@ -119,6 +170,13 @@ def main():
                     help="where the approximate verify route's index "
                          "probe runs (DESIGN.md §11): auto = on device "
                          "whenever the searcher supports it")
+    ap.add_argument("--mutate-trace", default=None, metavar="PATH",
+                    help="JSONL mutation trace replayed against the "
+                         "stream (DESIGN.md §13): each line "
+                         "{'before_batch': k, 'op': 'insert'|'delete'|"
+                         "'compact', 'n': ..., 'seed': ...}; makes the "
+                         "plan mutable and computes each batch's recall "
+                         "oracle against the logical set at submit time")
     args = ap.parse_args()
 
     R, S, spec = load_dataset(args.dataset, n=args.n)
@@ -130,17 +188,39 @@ def main():
 
     batches = [q for b in range(args.batches)
                if len(q := S[b * args.batch_size:(b + 1) * args.batch_size])]
-    # exact-oracle counts for the recall column, computed BEFORE streaming
-    # so the measurement doesn't interleave device programs with the
-    # pipeline and pollute the reported p50/p95 latencies
-    truths = [naive.query_counts(q, args.eps) for q in batches]
     stats = []
+    if args.mutate_trace is None:
+        # exact-oracle counts for the recall column, computed BEFORE
+        # streaming so the measurement doesn't interleave device programs
+        # with the pipeline and pollute the reported p50/p95 latencies
+        truths = [naive.query_counts(q, args.eps) for q in batches]
+        dfracs: list[float | None] = [None] * len(batches)
+        feed = iter(batches)
+    else:
+        # under a mutation trace the oracle is per-batch: ops run right
+        # before a batch is submitted, and its truth is the brute-force
+        # count over the logical set AT THAT MOMENT (the engine snapshots
+        # the same world per batch — DESIGN.md §13)
+        from repro.kernels import ref
+        trace = load_trace(args.mutate_trace)
+        live = {i: R[i] for i in range(len(R))}
+        truths, dfracs = [], []
+
+        def mutating_feed():
+            for k, q in enumerate(batches):
+                apply_ops(plan, trace.get(k, ()), live, R.shape[1])
+                world = np.stack(list(live.values()))
+                truths.append(np.asarray(
+                    ref.range_count(q, world, args.eps, metric=spec.metric)))
+                dfracs.append(float(plan.engine.delta_frac))
+                yield q
+        feed = mutating_feed()
     # the async engine streaming path: R + estimator stay device-resident,
     # compiled programs are reused (bucketed shapes), and batch k+1
     # dispatches while batch k's verification results transfer back
-    for b, res in enumerate(plan.stream(batches, args.eps,
+    for b, res in enumerate(plan.stream(feed, args.eps,
                                         depth=args.depth)):
-        stats.append(batch_stats(b, res, truths[b]))
+        stats.append(batch_stats(b, res, truths[b], dfracs[b]))
         print(json.dumps(stats[-1]))
 
     print(json.dumps({"summary": summarize(stats, build_s)}))

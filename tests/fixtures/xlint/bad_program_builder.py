@@ -1,0 +1,8 @@
+"""Fixture: `_program`-named builder with no cache/registry stack —
+cache-registry fires on line 6 (the naming-convention direction)."""
+# xlint: scope(cache-registry)
+
+
+def _delta_count_program(mesh, metric):
+    """A delta builder that recompiles per call and dodges the registry."""
+    return mesh, metric

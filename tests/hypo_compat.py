@@ -1,0 +1,95 @@
+"""`hypothesis` when installed, a seeded-rng fallback otherwise.
+
+The property lane (`test_property.py`) and the mutation harness
+(`test_dynamic.py`) express invariants as `@given(...)` functions. With
+`hypothesis` available (requirements-dev.txt) they get real shrinking
+search; without it this module substitutes a deterministic seeded-rng
+driver over the same strategy surface, so THE LANE IS NEVER VACUOUS —
+every test still runs `max_examples` drawn cases instead of silently
+skipping (the failure mode scripts/ci.sh now also guards against).
+
+The fallback implements only the strategy subset the suite uses
+(`st.integers`, `st.floats`, `st.lists(..., unique=)`); each test's
+draw stream is seeded from its qualname, so failures reproduce exactly
+across runs without a shared global seed ordering hazard.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A draw rule: `example(rng)` produces one value."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _St:
+        """The `strategies` subset the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10, unique=False):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                out, seen, tries = [], set(), 0
+                while len(out) < n and tries < 100 * max(n, 1):
+                    v = elements.example(rng)
+                    tries += 1
+                    if unique:
+                        if v in seen:
+                            continue
+                        seen.add(v)
+                    out.append(v)
+                return out
+            return _Strategy(sample)
+
+    st = _St()
+
+    def settings(max_examples=20, deadline=None, **_):
+        """Record the example budget; `deadline` etc. are no-ops here."""
+        def deco(fn):
+            fn._hc_max_examples = int(max_examples)
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Run the test once per drawn example, rng seeded per-test."""
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                # the attr lands on `wrapper` when @settings is applied
+                # above @given (the usual order) and on `fn` otherwise
+                n = getattr(wrapper, "_hc_max_examples",
+                            getattr(fn, "_hc_max_examples", 20))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *(s.example(rng) for s in strategies),
+                       **kwargs)
+            # metadata copied by hand: functools.wraps would set
+            # __wrapped__, making pytest unwrap to fn's signature and
+            # demand its strategy params as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

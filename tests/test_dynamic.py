@@ -1,0 +1,515 @@
+"""Dynamic R (DESIGN.md §13): the oracle-driven mutation harness.
+
+The correctness contract under mutation is bit-identity: at EVERY point
+in an arbitrary insert/delete/query/compact sequence, the engine's
+counts must equal a brute-force `ref` oracle built fresh on the logical
+(R ∪ delta − tombstones) set. `ShadowOracle` is that oracle — a host
+dict of live rows mutated in lockstep with the engine — and
+`run_sequence` drives randomized sequences against it (hypothesis
+strategies when installed, the seeded-rng `hypo_compat` driver
+otherwise, so the lane is never vacuous).
+
+Covers: sequence parity on replicated and ring topologies, sync and
+streamed (each streamed batch vs the oracle at ITS submit time, not
+result time); ref/pallas backend parity under mutation; candidate
+routes (lsh / ivfpq) with host-vs-device probe count equality and
+tombstone masking; the recall floors on (R ∪ delta) before and after
+compact() under both probe placements; mid-stream compact() draining
+and re-binding live sessions; the JoinPlan.mutable() surface incl. the
+auto-compaction policy; every mutation error path; the host-sync guard
+lane with mutations inside the scope; and a forced-8-device subprocess
+replaying a sequence on a 4x2 ring mesh.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypo_compat import given, settings, st
+
+from repro.core.api import JoinPlan
+from repro.core.engine import JoinEngine, host_sync_guard
+from repro.kernels import ref
+
+EPS = 0.45       # cosine parity worlds
+EPS_L2 = 0.4     # the clustered l2 probe-layer world (test_probe.py)
+DIM = 16
+
+LSH_PARAMS = dict(k=10, l=8, n_probes=4, W=2.5)
+IVFPQ_PARAMS = dict(C=24, m=8, n_probe=8, n_candidates=600)
+
+
+def _unit(rng, n, d=DIM):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _cluster_world(seed, d=32):
+    """The probe-layer test world (test_probe.py): 6 tight SHARED
+    clusters so approximate indices have real recall to lose — every
+    `draw(per)` samples around the same centers."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(6, d))
+    c /= np.linalg.norm(c, axis=1, keepdims=True)
+
+    def draw(per):
+        p = (np.repeat(c, per, axis=0)
+             + rng.normal(size=(6 * per, d)) * 0.03)
+        return (p / np.linalg.norm(p, axis=1, keepdims=True)
+                ).astype(np.float32)
+    return draw
+
+
+class ShadowOracle:
+    """Brute-force shadow of the logical set: id -> row, counts via the
+    unpadded `ref` kernel — the same oracle `compact()` must preserve."""
+
+    def __init__(self, R, metric="cosine"):
+        self.metric = metric
+        self.live = {i: np.asarray(R[i], np.float32) for i in range(len(R))}
+
+    def insert(self, ids, rows):
+        self.live.update(zip(map(int, ids), np.asarray(rows, np.float32)))
+
+    def delete(self, ids):
+        for i in ids:
+            self.live.pop(int(i))
+
+    def world(self):
+        return np.stack(list(self.live.values()))
+
+    def counts(self, Q, eps):
+        return np.asarray(
+            ref.range_count(Q, self.world(), eps, metric=self.metric))
+
+
+def _mutate_once(eng, shadow, rng, op):
+    """Apply one op to engine + shadow in lockstep."""
+    if op == "insert":
+        rows = _unit(rng, int(rng.integers(1, 16)))
+        shadow.insert(eng.insert(rows), rows)
+    elif op == "delete":
+        pool = np.fromiter(shadow.live, np.int64)
+        if len(pool) > 8:       # never drain the logical set
+            k = int(rng.integers(1, 7))
+            ids = rng.choice(pool, size=k, replace=False)
+            eng.delete(ids)
+            shadow.delete(ids)
+    elif op == "compact":
+        eng.compact()
+
+
+def run_sequence(eng, shadow, rng, Q, eps, n_ops=12):
+    """Randomized mutation sequence with a bit-parity check after EVERY
+    op — the §13 contract is pointwise, not just final-state."""
+    ops = rng.choice(np.array(["insert", "delete", "compact"]),
+                     size=n_ops, p=[0.5, 0.35, 0.15])
+    for op in ops:
+        _mutate_once(eng, shadow, rng, op)
+        got = np.asarray(eng.filtered_join(Q, eps).counts)
+        np.testing.assert_array_equal(got, shadow.counts(Q, eps),
+                                      err_msg=f"after {op}")
+    return ops
+
+
+# ------------------------------------------------ sequence parity (sync)
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10**6))
+def test_mutation_sequence_parity_replicated(seed):
+    rng = np.random.default_rng(seed)
+    R = _unit(rng, 240)
+    eng = JoinEngine(R, "cosine", backend="jnp")
+    run_sequence(eng, ShadowOracle(R), rng, _unit(rng, 24), EPS)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 10**6))
+def test_mutation_sequence_parity_ring(seed):
+    from repro.launch.mesh import make_join_mesh
+    rng = np.random.default_rng(seed)
+    R = _unit(rng, 240)
+    eng = JoinEngine(R, "cosine", mesh=make_join_mesh(data=1, r=1),
+                     backend="jnp", topology="ring")
+    run_sequence(eng, ShadowOracle(R), rng, _unit(rng, 24), EPS)
+
+
+def test_mutation_parity_ref_backend(unit_rng):
+    """The ref backend (unpadded host oracle path) takes the same delta
+    and tombstone adjustments — parity is backend-independent."""
+    rng = np.random.default_rng(77)
+    R = _unit(rng, 150)
+    eng = JoinEngine(R, "cosine", backend="ref")
+    run_sequence(eng, ShadowOracle(R), rng, _unit(rng, 16), EPS, n_ops=8)
+
+
+@pytest.mark.slow
+def test_mutation_parity_pallas_backend():
+    """Interpret-mode Pallas exact sweep under mutation."""
+    rng = np.random.default_rng(78)
+    R = _unit(rng, 150)
+    eng = JoinEngine(R, "cosine", backend="pallas")
+    run_sequence(eng, ShadowOracle(R), rng, _unit(rng, 16), EPS, n_ops=6)
+
+
+def test_range_count_hist_under_mutation(unit_rng):
+    """The histogram program (ground-truth table builds) sees the delta
+    and tombstones too — monotone, bounded by the LIVE set size, and
+    bit-equal to the ref histogram on the logical set."""
+    rng = np.random.default_rng(9)
+    R = _unit(rng, 120)
+    eng = JoinEngine(R, "cosine", backend="jnp")
+    shadow = ShadowOracle(R)
+    rows = _unit(rng, 30)
+    shadow.insert(eng.insert(rows), rows)
+    eng.delete([0, 5, 9])
+    shadow.delete([0, 5, 9])
+    Q = _unit(rng, 10)
+    grid = np.asarray([0.2, 0.45, 0.8, 1.4], np.float32)
+    got = np.asarray(eng.range_count_hist(Q, grid))
+    want = np.asarray(ref.range_count_hist(Q, shadow.world(), grid,
+                                           metric="cosine"))
+    np.testing.assert_array_equal(got, want)
+    assert (np.diff(got, axis=1) >= 0).all()
+    assert (got <= len(shadow.live)).all()
+
+
+# --------------------------------------------------- streamed snapshots
+def test_stream_snapshot_consistency(unit_rng):
+    """Each streamed batch's counts reflect the logical set at ITS
+    submit time — a mutation between submits must not leak backward into
+    in-flight batches nor get lost for later ones."""
+    rng = np.random.default_rng(3)
+    R = _unit(rng, 200)
+    eng = JoinEngine(R, "cosine", backend="jnp")
+    shadow = ShadowOracle(R)
+    batches = [_unit(rng, 12) for _ in range(6)]
+    truths = []
+
+    def feed():
+        for k, q in enumerate(batches):
+            if k == 1:
+                rows = _unit(rng, 25)
+                shadow.insert(eng.insert(rows), rows)
+            if k == 3:
+                eng.delete([2, 11, 200])
+                shadow.delete([2, 11, 200])
+            truths.append(shadow.counts(q, EPS))
+            yield q
+
+    res = list(eng.stream(feed(), EPS, depth=2))
+    assert len(res) == len(batches)
+    for k, r in enumerate(res):
+        np.testing.assert_array_equal(np.asarray(r.counts), truths[k],
+                                      err_msg=f"batch {k}")
+
+
+def test_stream_compact_drains_and_rebinds(unit_rng):
+    """compact() mid-stream drains in-flight batches (their snapshot
+    worlds stay valid) and re-binds the session's device probe to the
+    rebuilt tables; FIFO order and per-batch parity survive."""
+    draw = _cluster_world(4)
+    R = draw(150)
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier("lsh", **LSH_PARAMS)
+    shadow = ShadowOracle(R, "l2")
+    batches = [draw(3) for _ in range(6)]
+    truths = []
+
+    def feed():
+        for k, q in enumerate(batches):
+            if k == 2:
+                rows = draw(6)
+                shadow.insert(eng.insert(rows), rows)
+            if k == 4:
+                stats = eng.compact()
+                assert stats["compacted"] and stats["n_merged"] == 36
+            truths.append(shadow.counts(q, EPS_L2))
+            yield q
+
+    res = list(eng.stream(feed(), EPS_L2, verify="lsh", probe="device",
+                          depth=2))
+    assert len(res) == len(batches)
+    for k, r in enumerate(res):
+        got = np.asarray(r.counts)
+        assert (got <= truths[k]).all(), f"batch {k}: tombstone/delta leak"
+        rec = got.sum() / max(truths[k].sum(), 1)
+        assert rec >= 0.9, f"batch {k}: recall {rec}"
+
+
+# ------------------------------------------- candidate routes + recall
+@pytest.mark.parametrize("name,params",
+                         [("lsh", LSH_PARAMS), ("ivfpq", IVFPQ_PARAMS)])
+def test_candidate_routes_under_mutation(name, params):
+    """Approximate verify routes under mutation: host and device probe
+    placements stay bit-identical to each other, never count a
+    tombstoned row, and see every delta row exactly."""
+    draw = _cluster_world(11)
+    R = draw(150)
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier(name, **params)
+    shadow = ShadowOracle(R, "l2")
+    rows = draw(8)
+    shadow.insert(eng.insert(rows), rows)
+    dead = [3, 17, 101, 900]
+    eng.delete(dead)
+    shadow.delete(dead)
+    Q = draw(4)
+    true = shadow.counts(Q, EPS_L2)
+    host = eng.filtered_join(Q, EPS_L2, verify=name, probe="host")
+    dev = eng.filtered_join(Q, EPS_L2, verify=name, probe="device")
+    np.testing.assert_array_equal(np.asarray(host.counts),
+                                  np.asarray(dev.counts))
+    assert (np.asarray(dev.counts) <= true).all()
+
+
+@pytest.mark.parametrize("name,params,floor",
+                         [("lsh", LSH_PARAMS, 0.90),
+                          ("ivfpq", IVFPQ_PARAMS, 0.95)])
+def test_recall_floors_under_mutation(name, params, floor):
+    """The §11 recall floors hold on (R ∪ delta − tombstones) BEFORE and
+    AFTER compact(), under both probe placements — the delta is probed
+    exactly, so recall can only dip through the pinned-R candidates, and
+    compact() folds the delta into rebuilt index tables."""
+    draw = _cluster_world(12)
+    rng = np.random.default_rng(12)
+    R = draw(150)
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier(name, **params)
+    shadow = ShadowOracle(R, "l2")
+    rows = draw(5)                      # 30 delta rows, in-distribution
+    shadow.insert(eng.insert(rows), rows)
+    dead = rng.choice(len(R), size=20, replace=False)
+    eng.delete(dead)
+    shadow.delete(dead)
+    Q = draw(4)
+    true = shadow.counts(Q, EPS_L2)
+    assert true.sum() > 1000            # non-vacuous floor
+    for phase in ("pre-compact", "post-compact"):
+        for probe in ("host", "device"):
+            res = eng.filtered_join(Q, EPS_L2, verify=name, probe=probe)
+            counts = np.asarray(res.counts)
+            assert (counts <= true).all(), (phase, probe)
+            recall = float(np.minimum(counts, true).sum() / true.sum())
+            assert recall >= floor, (phase, probe, recall)
+        if phase == "pre-compact":
+            assert eng.compact()["compacted"]
+            np.testing.assert_array_equal(shadow.counts(Q, EPS_L2), true)
+
+
+# ------------------------------------------------------ plan surface
+def test_mutable_plan_roundtrip(unit_rng):
+    rng = np.random.default_rng(21)
+    R = _unit(rng, 180)
+    Q = _unit(rng, 20)
+    shadow = ShadowOracle(R)
+    plan = JoinPlan(R, "cosine").mutable(auto_compact_at=None)
+    rows = _unit(rng, 30)
+    shadow.insert(plan.insert(rows), rows)
+    plan.delete([7, 40])
+    shadow.delete([7, 40])
+    np.testing.assert_array_equal(plan.run(Q, EPS).counts,
+                                  shadow.counts(Q, EPS))
+    d = plan.describe()["mutable"]
+    assert d["n_delta"] == 30 and d["n_tombstones"] == 2
+    assert d["delta_frac"] == pytest.approx(32 / 180)
+    stats = plan.compact()
+    assert stats["n_merged"] == 30 and stats["n_dropped"] == 2
+    np.testing.assert_array_equal(plan.run(Q, EPS).counts,
+                                  shadow.counts(Q, EPS))
+    d2 = plan.describe()
+    assert d2["n_index"] == 208 and d2["mutable"]["compactions"] == 1
+
+
+def test_mutable_plan_auto_compact(unit_rng):
+    rng = np.random.default_rng(22)
+    R = _unit(rng, 180)
+    plan = JoinPlan(R, "cosine").mutable(auto_compact_at=0.125)
+    plan.insert(_unit(rng, 10))     # 10/180 < 0.125: still delta
+    assert plan.describe()["mutable"]["compactions"] == 0
+    plan.insert(_unit(rng, 20))     # 30/180 >= 0.125: auto-compacts
+    d = plan.describe()["mutable"]
+    assert d["compactions"] == 1 and d["n_delta"] == 0
+    assert plan.describe()["n_index"] == 210
+
+
+def test_mutable_plan_rebinds_device_probe(unit_rng):
+    """A mutable plan with a device-placed by-name route keeps serving
+    from the REBUILT tables after compact() — the placed probe is
+    re-resolved, not left pinned to the pre-merge upload."""
+    draw = _cluster_world(23)
+    R = draw(150)
+    plan = (JoinPlan(R, "l2").verify("lsh", **LSH_PARAMS)
+            .on(probe="device").mutable(auto_compact_at=None))
+    shadow = ShadowOracle(R, "l2")
+    Q = draw(4)
+    rows = draw(6)
+    shadow.insert(plan.insert(rows), rows)
+    before = plan.describe()["exec"]["probe"]
+    assert before["resolved"] == "device"
+    plan.compact()
+    res = plan.run(Q, EPS_L2)
+    true = shadow.counts(Q, EPS_L2)
+    assert plan.describe()["exec"]["probe"]["resolved"] == "device"
+    assert (np.asarray(res.counts) <= true).all()
+    assert np.asarray(res.counts).sum() >= 0.9 * true.sum()
+
+
+# -------------------------------------------------------- error paths
+def test_frozen_plan_rejects_mutation(unit_rng):
+    plan = JoinPlan(_unit(np.random.default_rng(0), 50), "cosine")
+    for op in (lambda: plan.insert(np.zeros((1, DIM), np.float32)),
+               lambda: plan.delete([0]), lambda: plan.compact()):
+        with pytest.raises(RuntimeError, match="frozen"):
+            op()
+
+
+def test_mutable_rejects_non_naive_base(unit_rng):
+    R = _unit(np.random.default_rng(0), 50)
+    with pytest.raises(ValueError, match="search\\('naive'\\)"):
+        JoinPlan(R, "cosine").search("lsh", **LSH_PARAMS).mutable().build()
+    with pytest.raises(ValueError, match="by-name"):
+        class _V:
+            name, exact, metric = "v", False, "cosine"
+            def query_counts(self, Q, eps):
+                return np.zeros(len(Q), np.int32)
+        JoinPlan(R, "cosine").verify(_V()).mutable().build()
+    with pytest.raises(ValueError, match="positive"):
+        JoinPlan(R, "cosine").mutable(auto_compact_at=-0.5)
+
+
+def test_mutation_error_paths(unit_rng):
+    rng = np.random.default_rng(30)
+    R = _unit(rng, 60)
+    eng = JoinEngine(R, "cosine", backend="jnp")
+    with pytest.raises(ValueError):            # wrong insert shape
+        eng.insert(np.zeros((3, DIM + 1), np.float32))
+    with pytest.raises(KeyError):              # unknown id
+        eng.delete([10_000])
+    with pytest.raises(KeyError):              # duplicate in one call
+        eng.delete([5, 5])
+    eng.delete([5])
+    with pytest.raises(KeyError):              # double delete
+        eng.delete([5])
+    # KeyError resolution happens BEFORE any mutation is applied
+    before = eng.n_tombstones
+    with pytest.raises(KeyError):
+        eng.delete([6, 5])                     # 5 already dead
+    assert eng.n_tombstones == before
+    assert eng.compact()["compacted"]          # tombstones alone compact
+    assert eng.compact() == {"compacted": False, "n_r": 59,
+                             "n_merged": 0, "n_dropped": 0}
+    with pytest.raises(ValueError, match="empty"):
+        eng.delete(eng._main_ids.copy())       # the whole logical set
+        eng.compact()
+
+
+def test_counts_only_plugin_rejects_tombstones(unit_rng):
+    """A query_counts-only plug-in searcher computes counts over ITS OWN
+    host copy of R — it cannot honor tombstones, so the engine fails
+    loudly instead of over-counting."""
+    rng = np.random.default_rng(31)
+    R = _unit(rng, 60)
+    eng = JoinEngine(R, "cosine", backend="jnp")
+
+    class CountsOnly:
+        name, exact = "countsonly", True
+        def query_counts(self, Q, eps):
+            return np.asarray(ref.range_count(Q, R, eps, metric="cosine"))
+
+    Q = _unit(rng, 8)
+    shadow = ShadowOracle(R)
+    rows = _unit(rng, 10)
+    shadow.insert(eng.insert(rows), rows)
+    # inserts alone are fine: the delta adjustment is route-independent
+    np.testing.assert_array_equal(
+        np.asarray(eng.filtered_join(Q, EPS, verify=CountsOnly()).counts),
+        shadow.counts(Q, EPS))
+    eng.delete([0])
+    with pytest.raises(RuntimeError, match="tombstoned"):
+        eng.filtered_join(Q, EPS, verify=CountsOnly())
+    eng.compact()                              # folds the tombstone away
+    shadow.delete([0])
+    # note: post-compact the plug-in's captured R is stale by design —
+    # the guard exists exactly because the engine can't patch it
+
+
+# ---------------------------------------------------------- guard lane
+@pytest.mark.guard
+def test_mutation_paths_respect_host_sync_budget(unit_rng):
+    """Exact and device-probe joins under mutation keep the §12 transfer
+    budget: n_pos + result reads only, even with a delete inside the
+    guarded scope (mutation uploads are host->device, not syncs)."""
+    draw = _cluster_world(40)
+    R = draw(40)
+    eng = JoinEngine(R, "l2", backend="jnp")
+    eng.verifier("lsh", **LSH_PARAMS)
+    Q = draw(3)
+    eng.insert(draw(4))
+    with host_sync_guard("n_pos", "result"):
+        eng.filtered_join(Q, EPS_L2)
+        eng.filtered_join(Q, EPS_L2, verify="lsh", probe="device")
+        eng.delete([1, 2])
+        eng.filtered_join(Q, EPS_L2)
+        list(eng.stream([Q[:2], Q[2:]], EPS_L2, verify="lsh",
+                        probe="device", depth=2))
+
+
+# ------------------------------------------------- multi-device (mesh)
+@pytest.mark.slow
+def test_dynamic_subprocess_8dev():
+    """Forced 8-host-device subprocess: the full mutation-sequence
+    parity contract on a 4x2 ring mesh and a replicated data mesh —
+    the delta is replicated (topology.delta_spec) so the ring sweep
+    schedule is unchanged while shards mutate."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import numpy as np, jax\n"
+        "from repro.launch.mesh import make_data_mesh, make_join_mesh\n"
+        "from repro.core.engine import JoinEngine\n"
+        "from repro.kernels import ref\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(6)\n"
+        "def unit(n):\n"
+        "    x = rng.normal(size=(n, 16)).astype(np.float32)\n"
+        "    return x / np.linalg.norm(x, axis=1, keepdims=True)\n"
+        "R, Q = unit(300), unit(20)\n"
+        "for mesh, topo in ((make_data_mesh(), 'replicated'),\n"
+        "                   (make_join_mesh(data=4, r=2), 'ring')):\n"
+        "    eng = JoinEngine(R, 'cosine', mesh=mesh, backend='jnp',\n"
+        "                     topology=topo)\n"
+        "    live = {i: R[i] for i in range(len(R))}\n"
+        "    for t in range(8):\n"
+        "        op = ['insert', 'delete', 'insert', 'delete',\n"
+        "              'compact', 'insert', 'delete', 'compact'][t]\n"
+        "        if op == 'insert':\n"
+        "            rows = unit(int(rng.integers(1, 24)))\n"
+        "            live.update(zip(map(int, eng.insert(rows)), rows))\n"
+        "        elif op == 'delete':\n"
+        "            pool = np.fromiter(live, np.int64)\n"
+        "            ids = rng.choice(pool, size=5, replace=False)\n"
+        "            eng.delete(ids)\n"
+        "            [live.pop(int(i)) for i in ids]\n"
+        "        else:\n"
+        "            eng.compact()\n"
+        "        world = np.stack(list(live.values()))\n"
+        "        want = np.asarray(ref.range_count(Q, world, 0.45,\n"
+        "                                          metric='cosine'))\n"
+        "        got = np.asarray(eng.filtered_join(Q, 0.45).counts)\n"
+        "        np.testing.assert_array_equal(got, want, err_msg=\n"
+        "            f'{topo} step {t} ({op})')\n"
+        "        sres = list(eng.stream([Q[:7], Q[7:]], 0.45, depth=2))\n"
+        "        np.testing.assert_array_equal(\n"
+        "            np.concatenate([np.asarray(r.counts) for r in sres]),\n"
+        "            want)\n"
+        "print('DYNAMIC_RING_OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert "DYNAMIC_RING_OK" in out.stdout, out.stderr[-3000:]

@@ -6,7 +6,8 @@ synthetic fixture violation at the exact line with the exact rule id,
 and stays quiet on the clean fixture; (2) the CLI contract (`python
 scripts/xlint` exit codes, `--rule` filtering, `--list-rules`) and the
 acceptance gate that the repo itself lints clean; (3) the runtime side
-of the cache-registry rule — all eight program caches are registered in
+of the cache-registry rule — all eleven program caches (the dynamic-R
+delta/tombstone builders included) are registered in
 `engine._PROGRAM_CACHES` and `clear_program_cache()` evicts through the
 registry, not a hand-maintained list.
 """
@@ -38,6 +39,8 @@ EXPECTED = {
     # annotation goes unconsumed, so hygiene flags it stale too
     "bad_sync_kind.py": {("host-sync", 9), ("annotation-hygiene", 8)},
     "bad_cache.py": {("cache-registry", 7)},
+    # the *_program naming-convention direction: no lru_cache at all
+    "bad_program_builder.py": {("cache-registry", 6)},
     "bad_cache_key.py": {("jit-cache-key", 7)},
     "bad_docstring.py": {("docstring-gate", 5)},
     "bad_annotation.py": {("annotation-hygiene", 4),
@@ -132,6 +135,8 @@ def test_program_cache_registry_complete():
     from repro.core.joins import common
     expected = {
         engine._hist_program, engine._compact_program,
+        engine._delete_program, engine._delta_count_program,
+        engine._delta_hist_program,
         common._sharded_verify_program,
         probe._gather_program, probe._lsh_probe_program,
         probe._lsh_ring_probe_program, probe._probe_verify_program,
