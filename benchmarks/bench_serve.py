@@ -1,0 +1,106 @@
+"""Serving gateway rows (DESIGN.md §14): coalesced micro-batched
+throughput vs the single-stream serving baseline, at equal recall.
+
+The §14 design bet is that many small tenant requests cost the engine
+almost nothing extra when coalesced: every engine batch is padded to a
+power-of-two bucket, so 16-row requests served ONE AT A TIME each pay a
+full minimum-bucket sweep, while the gateway packs whole requests into
+one bucket and scatters the counts back per request — bit-identical to
+running each request alone, which is what makes the comparison
+equal-recall by construction (it is verified on every rep).
+
+Rows (fixed smoke n regardless of REPRO_BENCH_SCALE — the ratio is the
+point): ``serve/single-stream`` (one `plan.run` per request),
+``serve/gateway-coalesced`` (same requests, same route, coalesced),
+``serve/gateway-cache-hot`` (the whole workload resubmitted: every row
+answered from the eps-aware result cache). Derived columns carry the
+speedup vs single-stream — the BENCH_<n> acceptance number is
+coalesced >= 1x.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+
+N, DIM = 6000, 32
+N_REQ, REQ_ROWS = 24, 16     # 24 requests x 16 rows per measured rep
+EPS = 0.5
+WARM, REPS = 1, 3
+
+
+def _unit(rng, n):
+    x = rng.normal(size=(n, DIM)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def run() -> list:
+    from repro.core import JoinPlan
+    from repro.serve import Gateway, TenantClass
+
+    rng = np.random.default_rng(0)
+    R = _unit(rng, N)
+    # distinct request sets per rep so the gateway's cold pass is
+    # genuinely cold (no within-measurement cache hits)
+    reqsets = [[_unit(rng, REQ_ROWS) for _ in range(N_REQ)]
+               for _ in range(WARM + REPS)]
+    nq = N_REQ * REQ_ROWS
+
+    plan = (JoinPlan(R, "cosine").search("naive").verify("exact")
+            .on(backend="jnp").build())
+    gw = Gateway(R, [TenantClass("t", eps=EPS)], backend="jnp")
+
+    def time_single(reqs) -> float:
+        t0 = time.perf_counter()
+        out = [np.asarray(plan.run(q, EPS).counts) for q in reqs]
+        return time.perf_counter() - t0, out
+
+    def time_gateway(reqs) -> float:
+        t0 = time.perf_counter()
+        tickets = [gw.submit("t", q) for q in reqs]
+        gw.flush()
+        return time.perf_counter() - t0, [t.counts for t in tickets]
+
+    single_us, gw_us = [], []
+    for i, reqs in enumerate(reqsets):
+        t_s, want = time_single(reqs)
+        t_g, got = time_gateway(reqs)
+        for w, g in zip(want, got):       # equal recall, every rep
+            np.testing.assert_array_equal(g, w)
+        if i >= WARM:
+            single_us.append(t_s / nq * 1e6)
+            gw_us.append(t_g / nq * 1e6)
+
+    base = float(np.median(single_us))
+    coal = float(np.median(gw_us))
+    rep = gw.report()["tenants"]["t"]["metrics"]
+
+    # cache-hot: the last rep's workload verbatim — every row hits
+    t0 = time.perf_counter()
+    for q in reqsets[-1]:
+        gw.join("t", q)
+    hot = (time.perf_counter() - t0) / nq * 1e6
+    hits = gw.report()["tenants"]["t"]["metrics"]["cache_hit_queries"]
+
+    rows = []
+    emit("serve/single-stream", base, "speedup_vs_single=1.00x")
+    rows.append({"name": "serve/single-stream", "us_per_query": base,
+                 "speedup_vs_single": 1.0, "n_requests": N_REQ,
+                 "rows_per_request": REQ_ROWS})
+    emit("serve/gateway-coalesced", coal,
+         f"speedup_vs_single={base / coal:.2f}x "
+         f"coalesced_batches={rep['coalesced_batches']}")
+    rows.append({"name": "serve/gateway-coalesced", "us_per_query": coal,
+                 "speedup_vs_single": base / coal,
+                 "batches": rep["batches"],
+                 "coalesced_batches": rep["coalesced_batches"],
+                 "coalesced_requests": rep["coalesced_requests"]})
+    emit("serve/gateway-cache-hot", hot,
+         f"speedup_vs_single={base / hot:.2f}x cache_hit_queries={hits}")
+    rows.append({"name": "serve/gateway-cache-hot", "us_per_query": hot,
+                 "speedup_vs_single": base / hot,
+                 "cache_hit_queries": int(hits)})
+    save_json("serve_gateway", rows)
+    return rows

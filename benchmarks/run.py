@@ -67,7 +67,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,"
-                         "kernels,perf,xjoin,delta")
+                         "kernels,perf,xjoin,delta,serve")
     ap.add_argument("--snapshot", action="store_true",
                     help="write suite->us_per_call to the next free "
                          "top-level BENCH_<n>.json (perf trajectory "
@@ -81,7 +81,7 @@ def main() -> None:
     from benchmarks import (bench_atcs, bench_delta, bench_e2e,
                             bench_filter, bench_generalization,
                             bench_kernels, bench_negative_portion,
-                            bench_perf_xjoin, bench_probe,
+                            bench_perf_xjoin, bench_probe, bench_serve,
                             bench_tradeoff, bench_xdt)
     from benchmarks.common import SCALE
     suites = [
@@ -98,6 +98,8 @@ def main() -> None:
          bench_probe.run),
         ("delta", "Dynamic R: query cost vs delta occupancy",
          bench_delta.run),
+        ("serve", "Serving gateway: coalesced vs single-stream",
+         bench_serve.run),
     ]
     print("name,us_per_call,derived")
     captured: dict[str, dict[str, float]] = {}

@@ -84,6 +84,55 @@ for backend in ("jnp", "pallas"):
     print(f"device-probe smoke OK (backend={backend})")
 EOF
 
+# gateway smoke (DESIGN.md §14): two tenant classes with mixed radii
+# through one pinned engine — scatter-back parity per request, the
+# coalescing counters actually fire, a mutation invalidates the cache,
+# and the SLO report is well-formed (serializable, all counter keys)
+echo "== serving gateway smoke (two tenants, mixed eps) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+import numpy as np
+from repro.serve import Gateway, TenantClass
+
+rng = np.random.default_rng(0)
+def unit(n, d=16):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+R = unit(400)
+gw = Gateway(R, [TenantClass("gold", eps=0.45, verify="exact",
+                             slo_ms=10_000.0),
+                 TenantClass("bulk", eps=0.5, recall_target=0.9,
+                             verify="lsh",
+                             verify_params=dict(k=10, l=8, n_probes=4,
+                                                W=2.5))],
+             backend="jnp", mutable=True, auto_compact_at=None)
+reqs = [(("gold", "bulk")[i % 2], unit(9),
+         (0.45, 0.5)[i % 2]) for i in range(8)]
+tickets = [gw.submit(t, q, eps=e) for t, q, e in reqs]
+gw.flush()
+for (t, q, e), tk in zip(reqs, tickets):
+    np.testing.assert_array_equal(
+        tk.counts, np.asarray(gw.plan(t).run(q, e).counts))
+rep = gw.report()
+assert rep["tenants"]["gold"]["metrics"]["coalesced_batches"] >= 1
+assert rep["tenants"]["bulk"]["metrics"]["coalesced_requests"] >= 2
+assert gw.join("gold", reqs[0][1]).meta["cache_hits"] == 9  # replay hits
+gw.insert(unit(8))                                # bumps world_version
+assert gw.join("gold", reqs[0][1]).meta["cache_hits"] == 0  # none survive
+rep = json.loads(json.dumps(gw.report()))         # well-formed SLO report
+for name in ("gold", "bulk"):
+    m = rep["tenants"][name]["metrics"]
+    missing = {"admitted_requests", "served_requests", "slo_misses",
+               "coalesced_batches", "cache_hit_queries", "p50_ms",
+               "p95_ms"} - set(m)
+    assert not missing, missing
+    assert m["admitted_requests"] == m["served_requests"]
+assert rep["world_version"] == 1
+print(f"gateway smoke OK (world_version={rep['world_version']}, "
+      f"gold p50={rep['tenants']['gold']['metrics']['p50_ms']:.1f}ms)")
+EOF
+
 # smoke-scale perf snapshot: proves the BENCH_<n>.json trajectory pipeline
 # (benchmarks/run.py --snapshot) end-to-end without touching the tracked
 # top-level snapshots — the real per-PR snapshot is written deliberately

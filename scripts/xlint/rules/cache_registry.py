@@ -5,7 +5,9 @@ a module-level `functools.lru_cache` program builder in `core/` that
 never registers would pin XLA executables (and their device buffers)
 past mesh teardown and silently survive eviction — the forgotten-cache
 failure mode this rule removes.  Every `@functools.lru_cache` decorated
-module-level function in `src/repro/core/` must also carry the
+module-level function in `src/repro/core/` or the serving gateway
+package `src/repro/serve/` (whose sessions outlive individual batches,
+so a pinned program there survives compaction too) must also carry the
 `@register_program_cache` decorator (stacked above the cache, engine.py)
 or be explicitly waived with `# xlint: allow-cache-registry(<reason>)`.
 
@@ -60,15 +62,18 @@ class CacheRegistryRule(Rule):
     id = "cache-registry"
     design_ref = "§12"
     description = ("every module-level functools.lru_cache program "
-                   "builder in core/ must be registered in "
+                   "builder in core/ or serve/ must be registered in "
                    "engine._PROGRAM_CACHES via @register_program_cache")
     targets = None              # selection is path-prefix based below
 
     def select(self, lf: LintFile) -> bool:
-        """Only `src/repro/core/**` (or scope-annotated fixtures)."""
+        """`src/repro/core/**` and `src/repro/serve/**` (or
+        scope-annotated fixtures)."""
         if self.id in lf.scoped_rules:
             return True
-        return "src/repro/core/" in lf.rel.replace("\\", "/")
+        rel = lf.rel.replace("\\", "/")
+        return ("src/repro/core/" in rel
+                or "src/repro/serve/" in rel)
 
     def check(self, lf: LintFile) -> list[Violation]:
         """Flag lru_cache'd builders missing @register_program_cache."""

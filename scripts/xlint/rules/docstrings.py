@@ -17,7 +17,8 @@ from pathlib import Path
 from xlint.core import LintFile, Rule, Violation
 
 #: repo-relative serving-surface modules under the gate, plus the xlint
-#: package itself (globbed at runtime so new rules are auto-covered)
+#: package itself and the gateway package `src/repro/serve/` (both
+#: globbed at runtime so new modules are auto-covered)
 CHECKED = (
     "src/repro/core/api.py",
     "src/repro/core/engine.py",
@@ -29,8 +30,10 @@ CHECKED = (
 
 
 def default_targets(repo: Path) -> list[Path]:
-    """The gated module paths: the serving surface + `scripts/xlint/`."""
+    """The gated module paths: the serving surface, the gateway package
+    (`src/repro/serve/`), and `scripts/xlint/`."""
     paths = [repo / p for p in CHECKED]
+    paths += sorted((repo / "src" / "repro" / "serve").rglob("*.py"))
     paths += sorted((repo / "scripts" / "xlint").rglob("*.py"))
     return paths
 
@@ -71,14 +74,16 @@ class DocstringRule(Rule):
     description = ("public defs in the serving-surface modules and "
                    "scripts/xlint/ must carry docstrings (the docs gate, "
                    "make docs-check)")
-    targets = CHECKED + ("scripts/xlint",)
+    targets = CHECKED + ("src/repro/serve", "scripts/xlint")
 
     def select(self, lf: LintFile) -> bool:
-        """Gated modules, the xlint package, or scoped fixtures."""
+        """Gated modules, the gateway package, the xlint package, or
+        scoped fixtures."""
         if self.id in lf.scoped_rules:
             return True
         rel = lf.rel.replace("\\", "/")
         return (any(rel.endswith(t) for t in CHECKED)
+                or "src/repro/serve/" in rel
                 or "scripts/xlint/" in rel)
 
     def check(self, lf: LintFile) -> list[Violation]:

@@ -45,6 +45,15 @@ HOT_FUNCTIONS = {
     "src/repro/core/probe.py": {
         "PlacedProbe.probe", "PlacedProbe.verify",
     },
+    # the push-interface session (api.py) and the gateway's per-request
+    # path sit directly on the stream pipeline — same two-syncs budget
+    "src/repro/core/api.py": {
+        "PlanSession.submit", "PlanSession.flush",
+    },
+    "src/repro/serve/gateway.py": {
+        "Gateway.submit", "Gateway._pump", "Gateway._scatter",
+        "Gateway.flush",
+    },
 }
 
 

@@ -763,31 +763,55 @@ class JoinPlan:
         (DESIGN.md §5) — batch k+1's programs dispatch while batch k's
         results transfer back; `depth` bounds the in-flight queue
         (`depth=0` ~= synchronous). Bit-identical to per-batch `run`."""
-        self.build()
-        t0 = time.perf_counter()
-        predict, threshold = self._filter_state(eps)
-        t_host = time.perf_counter() - t0   # one-time XDT selection cost
-        sess = self._built.engine.stream_session(
-            eps, predict=predict, threshold=threshold,
-            verify=self._built.verify_route, depth=depth,
-            block=self._exec["block"], probe=self._exec["probe"])
-        pending: list[tuple[int, float]] = []   # FIFO of (n, host cost)
-
-        def _emit(results):
-            for res in results:
-                n, th = pending.pop(0)
-                yield self._wrap(res, n, eps, th)
-
+        sess = self.session(eps, depth=depth)
         for Q in batches:
-            Q = np.asarray(Q, np.float32)
-            t1 = time.perf_counter()
-            verdicts = (None if predict is not None
-                        else self._host_verdicts(Q, eps))
-            th = t_host + (time.perf_counter() - t1)
-            t_host = 0.0                    # charge XDT selection to batch 0
-            pending.append((len(Q), th))
-            yield from _emit(sess.submit(Q, verdicts=verdicts))
-        yield from _emit(sess.flush())
+            yield from sess.submit(Q)
+        yield from sess.flush()
+
+    def session(self, eps: float, *, depth: int = 2) -> "PlanSession":
+        """Open a push-interface serving session at a fixed radius: the
+        caller-driven form of `stream` (the serve gateway submits coalesced
+        batches as they form rather than pulling from one iterable,
+        DESIGN.md §14). Returns a `PlanSession` — `submit(Q)` /
+        `flush()` yield `JoinResult`s in FIFO order, bit-identical to
+        per-batch `run`; `set_depth()` retargets the in-flight bound
+        mid-stream."""
+        return PlanSession(self, eps, depth=depth)
+
+    # ------------------------------------------------------------ sharing
+    def fork(self) -> "JoinPlan":
+        """A new frozen plan sharing this plan's built engine — the
+        multi-tenant form of `on(engine=...)` (DESIGN.md §14): one pinned
+        device-resident R/estimator, many plans differing only in
+        verify/probe/filter knobs. The fork starts as a copy of this
+        plan's filter/search/verify specs and exec placement with
+        `engine=` set to the built engine (mesh/topology/r_shards are
+        carried BY the engine, so they are cleared on the fork); override
+        what differs with the normal builders, then `build()`.
+
+        A by-name `filter("xling", ...)` is carried over as the already-
+        FITTED `XlingFilter` instance, so per-tenant tau/xdt retunes
+        re-calibrate the threshold without re-fitting the estimator.
+        Mutability is NOT inherited: forks are frozen views — mutate
+        through the original plan (forks observe inserts/deletes/compacts
+        through the shared engine)."""
+        self.build()
+        clone = JoinPlan(self._R, self.metric)
+        fspec, fopts = self._filter_spec
+        if fspec == "xling":
+            knobs = {k: v for k, v in fopts.items()
+                     if k in ("tau", "xdt", "xdt_mode", "fpr_tolerance")}
+            clone._filter_spec = (self._built.filter.filt, knobs)
+        else:
+            clone._filter_spec = (fspec, dict(fopts))
+        clone._search_spec = (self._search_spec[0],
+                              dict(self._search_spec[1]))
+        clone._verify_spec = (self._verify_spec[0],
+                              dict(self._verify_spec[1]))
+        clone._exec = dict(self._exec)
+        clone._exec.update(engine=self._built.engine, mesh=None,
+                           topology=None, r_shards=None)
+        return clone
 
     # ------------------------------------------------------------ mutation
     def _require_mutable(self, op: str) -> JoinEngine:
@@ -939,3 +963,61 @@ class JoinPlan:
     def base(self):
         """The plan's base Searcher (builds the plan on first access)."""
         return self.build()._built.base
+
+
+class PlanSession:
+    """Caller-driven serving session over a built `JoinPlan` at one radius
+    (`JoinPlan.session`): the push form of `stream`, wrapping the engine's
+    `StreamSession` with the plan's filter (fused device form, or host
+    verdicts computed per submit) and verify route. `submit(Q)` returns
+    the (possibly empty) list of OLDER batches' `JoinResult`s released
+    under the depth bound; `flush()` is the drain barrier. Results are
+    FIFO and bit-identical to per-batch `JoinPlan.run` — the contract the
+    serve gateway's scatter-back relies on (DESIGN.md §14)."""
+
+    def __init__(self, plan: JoinPlan, eps: float, *, depth: int = 2):
+        plan.build()
+        self._plan = plan
+        self.eps = float(eps)
+        t0 = time.perf_counter()
+        self._predict, self._threshold = plan._filter_state(eps)
+        self._t_host = time.perf_counter() - t0  # one-time XDT selection
+        self._sess = plan._built.engine.stream_session(
+            eps, predict=self._predict, threshold=self._threshold,
+            verify=plan._built.verify_route, depth=depth,
+            block=plan._exec["block"], probe=plan._exec["probe"])
+        self._pending: list[tuple[int, float]] = []  # FIFO (n, host cost)
+
+    def _emit(self, results) -> list[JoinResult]:
+        out = []
+        for res in results:
+            n, th = self._pending.pop(0)
+            out.append(self._plan._wrap(res, n, self.eps, th))
+        return out
+
+    def submit(self, Q: np.ndarray) -> list[JoinResult]:
+        """Feed one query batch; returns older batches' results whose
+        readback completed under the depth bound (host filter verdicts are
+        computed here when the filter has no device form)."""
+        Q = np.asarray(Q, np.float32)
+        t1 = time.perf_counter()
+        verdicts = (None if self._predict is not None
+                    else self._plan._host_verdicts(Q, self.eps))
+        th = self._t_host + (time.perf_counter() - t1)
+        self._t_host = 0.0              # charge XDT selection to batch 0
+        self._pending.append((len(Q), th))
+        return self._emit(self._sess.submit(Q, verdicts=verdicts))
+
+    def flush(self) -> list[JoinResult]:
+        """Drain barrier: all remaining results, in submission order."""
+        return self._emit(self._sess.flush())
+
+    def set_depth(self, depth: int) -> None:
+        """Retarget the in-flight bound mid-stream (adaptive depth,
+        DESIGN.md §14); takes effect on the next submit."""
+        self._sess.set_depth(depth)
+
+    @property
+    def depth(self) -> int:
+        """The current in-flight bound."""
+        return self._sess.depth

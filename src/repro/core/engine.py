@@ -515,6 +515,14 @@ class StreamSession:
             out.append(self._inflight.popleft().result())
         return out
 
+    def set_depth(self, depth: int) -> None:
+        """Retarget the in-flight bound mid-stream (the serve gateway's
+        adaptive-depth hook, DESIGN.md §14). A smaller depth takes effect
+        on the NEXT submit — already-committed batches drain under the new
+        bound; nothing is cancelled, so results stay FIFO and
+        bit-identical."""
+        self.depth = max(int(depth), 0)
+
     def flush(self) -> list[EngineJoinResult]:
         """Barrier: drain the pipeline, returning all remaining results in
         submission order. Safe to call repeatedly; the session can keep
@@ -583,6 +591,12 @@ class JoinEngine:
         #: |R| (None = manual compaction only; JoinPlan.mutable sets it)
         self.auto_compact_at: float | None = None
         self.n_compactions = 0
+        #: monotone logical-set version: bumped by every insert/delete/
+        #: compact, never reset. Cache layers (the serve gateway's
+        #: eps-aware result cache, DESIGN.md §14) key entries on it so a
+        #: result computed against one world can never answer a query
+        #: against another.
+        self.world_version = 0
         self._next_id = self.nr             # monotone logical row ids
         self._main_ids = np.arange(self.nr, dtype=np.int64)
         self._delta_rows = np.empty((0, self.dim), np.float32)
@@ -736,6 +750,7 @@ class JoinEngine:
             for s, i in enumerate(ids):
                 self._id_index[int(i)] = ("delta", base + s)
         self._upload_delta()
+        self.world_version += 1
         self._maybe_auto_compact()
         return ids
 
@@ -779,6 +794,7 @@ class JoinEngine:
             self._n_tomb_dev = jnp.asarray(len(self._tomb_rows), jnp.int32)
             if self._delta_dev is None:     # mutated: adjust must run even
                 self._upload_delta()        # with an empty delta
+        self.world_version += 1
         self._maybe_auto_compact()
 
     def compact(self) -> dict:
@@ -828,6 +844,7 @@ class JoinEngine:
         for name, params in self._verifier_params.items():
             self.verifier(name, **params)
         self.n_compactions += 1
+        self.world_version += 1
         for sess in list(self._sessions):
             sess._rebind_after_compact()
         return {"compacted": True, "n_r": self.nr, "n_merged": n_merged,
@@ -839,6 +856,16 @@ class JoinEngine:
             self.compact()
 
     # ------------------------------------------------------------- plumbing
+    def padded_rows(self, n: int) -> int:
+        """Query rows a batch of `n` actually occupies after `_pad_q`'s
+        power-of-two bucketing — the batch-composition hook the serve
+        gateway's coalescer uses to pack requests up to a bucket boundary
+        instead of paying the same padded sweep for half-empty batches
+        (DESIGN.md §14)."""
+        quantum = self.topology.q_row_quantum(self.block_q, self.mesh,
+                                              self.data_axis)
+        return _bucket_size(max(int(n), 1), quantum)
+
     def _pad_q(self, Q) -> np.ndarray:
         """Bucket the query count to a power-of-two multiple of one full
         mesh sweep (block_q rows per device, over every axis the topology

@@ -11,6 +11,7 @@ counts keep every shape static for XLA.
 from repro.core.joins.grid import GridJoin
 from repro.core.joins.ivfpq import IVFPQJoin
 from repro.core.joins.kmeans_tree import KmeansTreeJoin
+from repro.core.joins.learned import LearnedJoin
 from repro.core.joins.lsbf import LSBF
 from repro.core.joins.lsh import LSHJoin
 from repro.core.joins.naive import NaiveJoin
@@ -21,6 +22,7 @@ JOINS = {
     "lsh": LSHJoin,
     "kmeanstree": KmeansTreeJoin,
     "ivfpq": IVFPQJoin,
+    "learned": LearnedJoin,
 }
 
 
@@ -29,4 +31,4 @@ def make_join(name: str, R, metric: str, **params):
 
 
 __all__ = ["JOINS", "make_join", "NaiveJoin", "GridJoin", "LSHJoin",
-           "KmeansTreeJoin", "IVFPQJoin", "LSBF"]
+           "KmeansTreeJoin", "IVFPQJoin", "LearnedJoin", "LSBF"]

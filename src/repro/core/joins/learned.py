@@ -1,0 +1,122 @@
+"""Learned-index join: an RMI over a pivot-distance projection of R.
+
+The style of "A Learned Index for Exact Similarity Search in Metric
+Spaces" (PAPERS.md): project every row of R onto a one-dimensional key —
+its L2 distance to a pivot (the data centroid) — sort R by key, and train
+the paper's `RMIEstimator` (models/rmi.py, otherwise dormant on the query
+path) to map key -> rank in the sorted order. A range query with radius
+eps can only match rows whose key falls in `[k(q) - r, k(q) + r]` (the
+triangle inequality makes the projection contractive), so the candidate
+set is one contiguous slice of the sorted order. Lookup is the classic
+learned-index two-step: the RMI predicts each endpoint's rank, and a
+LAST-MILE binary search pins the exact boundary — the model's measured
+worst-case rank error (`max_err`) sizes the slab that search must
+cover, and boundaries the slab fails to contain (the MLP is not
+monotone between training keys, so an off-sample boundary key falling
+in a key gap can be predicted far from its true rank) escalate to a
+full binary search and are counted in `fallback_frac`, the per-query
+quality metric of the learned bound. On this host numpy path both
+searches are the same vectorized `np.searchsorted`; the slab-vs-full
+distinction is the accounting that matters at serving scale, where the
+slab is what keeps the search in cache.
+
+Candidates are verified exactly (`common.verify_candidates`), so
+precision is always 1, and the boundary search makes the key-space
+window itself exact; what stays heuristic is the cosine -> key-radius
+conversion (`sqrt(2 * eps)` assumes unit-normalized rows), so
+`exact=False` and the recall floor is enforced in tests next to
+lsh/ivfpq.
+
+Host-probe only: `candidates(Q, eps)` / `query_counts(Q, eps)` — the
+probe is eps-aware (`joins.common.searcher_candidates` passes the radius
+through), and the engine's device verification consumes the candidate
+slab like every other probing searcher.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.joins.common import verify_candidates
+from repro.models.rmi import RMIEstimator
+
+
+class LearnedJoin:
+    name = "learned"
+    exact = False
+
+    def __init__(self, R: np.ndarray, metric: str, *, stage_sizes=(1, 2),
+                 widths=(64, 64), epochs: int = 24, lr: float = 1e-3,
+                 batch_size: int = 256, seed: int = 0, **_):
+        self.R = np.asarray(R, np.float32)
+        self.metric = metric
+        n = len(self.R)
+        # pivot-distance projection: key(x) = ||x - centroid||_2
+        self.pivot = self.R.mean(axis=0)
+        keys = np.linalg.norm(self.R - self.pivot[None, :], axis=1)
+        order = np.argsort(keys, kind="stable")
+        self.sorted_ids = order.astype(np.int32)
+        self.sorted_keys = keys[order].astype(np.float32)
+        # normalize keys AND ranks to [0, 1] for the MLP (ranks rescale
+        # back through self._n); raw 0..n ranks sit outside the net's
+        # useful output range and fit to a useless all-of-R error bound
+        self._klo = float(self.sorted_keys[0])
+        self._kspan = max(float(self.sorted_keys[-1]) - self._klo, 1e-9)
+        self._n = n
+        X = ((self.sorted_keys - self._klo) / self._kspan)[:, None]
+        ranks = np.arange(n, dtype=np.float32)
+        self.rmi = RMIEstimator(1, stage_sizes, widths, lr=lr, epochs=epochs,
+                                batch_size=batch_size, seed=seed,
+                                log_target=False)
+        self.rmi.fit(X, ranks / max(n - 1, 1))
+        #: worst-case |predicted rank - true rank| over the index keys —
+        #: the learned-index error bound that widens every query window
+        pred = self.rmi.predict(X) * max(n - 1, 1)
+        self.max_err = int(np.ceil(np.max(np.abs(pred - ranks)))) + 1
+        #: fraction of the last query's window boundaries the RMI slab
+        #: failed to contain (escalated to a full binary search)
+        self.fallback_frac = 0.0
+
+    def _key_radius(self, eps: float) -> float:
+        """The query radius mapped into key (L2 pivot-distance) space:
+        identity for l2; `sqrt(2 * eps)` for cosine distance on
+        unit-normalized rows (d_l2^2 = 2 * d_cos) — same convention as
+        the grid join."""
+        if self.metric == "cosine":
+            return float(np.sqrt(max(2.0 * eps, 0.0)))
+        return float(eps)
+
+    def _rank_of(self, keys: np.ndarray) -> np.ndarray:
+        """RMI-predicted (float) rank of each key in the sorted order."""
+        x = ((np.asarray(keys, np.float32) - self._klo) / self._kspan)[:, None]
+        return self.rmi.predict(x) * max(self._n - 1, 1)
+
+    def candidates(self, Q: np.ndarray, eps: float | None = None) -> np.ndarray:
+        """int32 [q, C] candidate ids (-1 padded): for each query, the
+        sorted-order slice whose keys can lie within `eps` of the query's
+        pivot distance — endpoint ranks predicted by the RMI, pinned
+        exactly by the last-mile binary search (see module docstring),
+        with slab misses accounted in `fallback_frac`. `eps=None`
+        degenerates to the point window (ids sharing the query's key)."""
+        Q = np.asarray(Q, np.float32)
+        n = len(self.sorted_ids)
+        kq = np.linalg.norm(Q - self.pivot[None, :], axis=1)
+        r = 0.0 if eps is None else self._key_radius(float(eps))
+        # last-mile boundary search (exact), then check the model slab
+        # would have contained each boundary
+        lo = np.searchsorted(self.sorted_keys, kq - r, side="left")
+        hi = np.searchsorted(self.sorted_keys, kq + r, side="right")
+        contained = ((np.abs(self._rank_of(kq - r) - lo) <= self.max_err)
+                     & (np.abs(self._rank_of(kq + r) - hi) <= self.max_err))
+        self.fallback_frac = (float(1.0 - contained.mean())
+                              if len(kq) else 0.0)
+        width = max(int((hi - lo).max()), 1)
+        idx = lo[:, None] + np.arange(width, dtype=np.int64)[None, :]
+        valid = idx < hi[:, None]
+        cand = np.where(valid, self.sorted_ids[np.minimum(idx, n - 1)],
+                        np.int32(-1))
+        return cand.astype(np.int32)
+
+    def query_counts(self, Q: np.ndarray, eps: float) -> np.ndarray:
+        """Exact eps-counts over the predicted slice (device verify)."""
+        cand = self.candidates(np.asarray(Q, np.float32), float(eps))
+        return verify_candidates(self.R, Q, cand, float(eps), self.metric)

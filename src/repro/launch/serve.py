@@ -1,24 +1,30 @@
-"""Serving driver: embedding model + Xling-filtered similarity join.
+"""Serving driver: the multi-tenant gateway CLI (DESIGN.md §14).
 
-This is the paper's production story end-to-end, on the declarative
-`JoinPlan` API (DESIGN.md §9): the CLI flags compile into one plan —
-filter("xling") -> search("naive") -> verify(--verify) — which is
-validated and built once (filter fit, engine construction, verifier
-index, probe-table placement) and then serves query batches through the
-engine's asynchronous pipelined stream (DESIGN.md §5, §11): batch k+1
-dispatches while batch k's results transfer back, with `--depth`
-bounding the in-flight queue, `--verify` picking the verification
-backend (exact sweep, or LSH / IVF-PQ candidate probing with on-device
-verification), and `--probe` picking where the index probe runs
-(`device` keeps the whole probe→verify path on the mesh).
+The paper's production story end-to-end: the CLI flags compile into a
+`repro.serve.Gateway` — one pinned device-resident R/estimator behind
+per-tenant `(eps, recall target, latency SLO)` classes — and the query
+stream is replayed as per-tenant REQUESTS through the gateway's
+admission path: eps-aware result cache, cross-request micro-batching
+into the engine's bucketed static shapes, asynchronous pipelined
+dispatch with SLO-driven adaptive depth, and per-request scatter-back.
 
-The first output line is the serialized plan (`plan.describe()`). Each
-batch line reports filter effectiveness (skip rate) and result quality
-(recall vs the exact oracle) alongside the timing split; the summary adds
-aggregate skip/recall plus p50/p95 per-batch latency.
+The base flags (--eps/--tau/--verify/--probe/--depth/--slo-ms) define
+the "default" tenant class; each repeatable `--tenant` flag adds
+another, e.g.
+
+  --tenant "name=gold,eps=0.4,verify=exact,slo_ms=50" \
+  --tenant "name=bulk,eps=0.5,verify=lsh,recall=0.9,tau=20"
+
+Requests round-robin over the classes within every input batch. The
+first output line is the gateway configuration; each request line
+reports result quality (recall vs the exact oracle over the logical
+set), cache hits, and latency; the summary aggregates them and the
+final line is the full `Gateway.report()` (admitted/coalesced/
+cache-hit/SLO-miss counters, p50/p95, per-group stream depths).
 
   PYTHONPATH=src python -m repro.launch.serve --dataset glove --n 4000 \
-      --eps 0.45 --tau 5 --batches 4 --batch-size 256 --verify lsh
+      --eps 0.45 --tau 5 --batches 4 --batch-size 256 --verify lsh \
+      --tenant "name=strict,eps=0.4,verify=exact,slo_ms=100"
 """
 from __future__ import annotations
 
@@ -28,16 +34,17 @@ import time
 
 import numpy as np
 
-from repro.core import JoinPlan
 from repro.data import load_dataset
+from repro.serve import Gateway, TenantClass
 
 
 def batch_stats(b: int, res, true_counts: np.ndarray,
                 delta_frac: float | None = None) -> dict:
-    """One report line for a served batch: filter skip rate, verification
-    recall vs the exact oracle, probe placement + the verify index's
-    build-time candidate-loss budget (LSH bucket-capacity overflow,
-    DESIGN.md §11), the delta occupancy at submit time when a mutation
+    """One report line for a `JoinResult`-shaped batch (the single-plan
+    serving form, kept for plan-level debugging and the probe tests):
+    filter skip rate, verification recall vs the exact oracle, probe
+    placement + the verify index's build-time candidate-loss budget
+    (DESIGN.md §11), the delta occupancy at submit time when a mutation
     trace is being replayed (DESIGN.md §13), and the filter/search
     timing split."""
     out = {
@@ -58,20 +65,23 @@ def batch_stats(b: int, res, true_counts: np.ndarray,
 
 
 def summarize(stats: list[dict], build_s: float) -> dict:
-    """Aggregate the per-batch lines: mean skip rate / recall, served-query
-    throughput proxy, and p50/p95 per-batch latency."""
+    """Aggregate the per-request lines: mean recall / cache-hit
+    fraction, p50/p95 request latency, and the SET of verify backends
+    seen across the run — a multi-tenant run mixes routes, so reporting
+    one request's backend would misdescribe every other tenant."""
     if not stats:
-        return {"build_s": build_s, "batches": 0}
-    lat = np.asarray([s["t_filter_ms"] + s["t_search_ms"] for s in stats])
+        return {"build_s": build_s, "requests": 0}
+    lat = np.asarray([s["latency_ms"] for s in stats])
     return {
         "build_s": build_s,
-        "batches": len(stats),
-        "mean_skipped": float(np.mean([s["skipped_frac"] for s in stats])),
+        "requests": len(stats),
         "mean_recall": float(np.mean([s["recall"] for s in stats])),
-        "mean_t_ms": float(lat.mean()),
-        "p50_t_ms": float(np.percentile(lat, 50)),
-        "p95_t_ms": float(np.percentile(lat, 95)),
-        "verify": stats[0]["verify"],
+        "mean_cache_hit_frac": float(np.mean(
+            [s["cache_hits"] / max(s["queries"], 1) for s in stats])),
+        "mean_latency_ms": float(lat.mean()),
+        "p50_latency_ms": float(np.percentile(lat, 50)),
+        "p95_latency_ms": float(np.percentile(lat, 95)),
+        "verify": sorted({s["verify"] for s in stats}),
     }
 
 
@@ -90,11 +100,13 @@ def load_trace(path: str) -> dict[int, list[dict]]:
     return by_batch
 
 
-def apply_ops(plan: JoinPlan, ops, live: dict, dim: int) -> None:
-    """Replay trace ops against a mutable plan, mirroring them into `live`
-    (id -> row), the host shadow of the logical set that the recall
-    oracle is computed from. Inserts draw seeded unit rows; deletes draw
-    seeded ids from the live set (never the last row)."""
+def apply_ops(target, ops, live: dict, dim: int) -> None:
+    """Replay trace ops against a mutable target (a `Gateway` or a
+    mutable `JoinPlan` — anything exposing insert/delete/compact),
+    mirroring them into `live` (id -> row), the host shadow of the
+    logical set that the recall oracle is computed from. Inserts draw
+    seeded unit rows; deletes draw seeded ids from the live set (never
+    the last row)."""
     for op in ops:
         kind = op["op"]
         rng = np.random.default_rng(int(op.get("seed", 0)))
@@ -102,47 +114,74 @@ def apply_ops(plan: JoinPlan, ops, live: dict, dim: int) -> None:
             rows = rng.normal(size=(int(op["n"]), dim)).astype(np.float32)
             rows /= np.maximum(
                 np.linalg.norm(rows, axis=1, keepdims=True), 1e-12)
-            ids = plan.insert(rows)
+            ids = target.insert(rows)
             live.update(zip(map(int, ids), rows))
         elif kind == "delete":
             pool = np.fromiter(live, dtype=np.int64)
             ids = rng.choice(pool, size=min(int(op["n"]), len(pool) - 1),
                              replace=False)
-            plan.delete(ids)
+            target.delete(ids)
             for i in ids:
                 live.pop(int(i))
         elif kind == "compact":
-            plan.compact()
+            target.compact()
         else:
             raise ValueError(f"mutate-trace: unknown op {kind!r}; expected "
                              "'insert', 'delete', or 'compact'")
 
 
-def build_plan(args, R, metric: str) -> JoinPlan:
-    """Compile the CLI flags into a built `JoinPlan` (filter fit + engine +
-    verifier index + probe tables all constructed here, so their one-time
-    cost lands in build_s, not in batch 0's reported latency). `--topology
-    ring` shards R over `--r-shards` devices (DESIGN.md §10); `--probe
-    device` pins the verify index's probe tables on the mesh too
-    (DESIGN.md §11) — the resolved placement, including per-device R and
-    probe-table bytes, lands in the printed plan line."""
-    plan = (JoinPlan(R, metric)
-            .filter("xling", tau=args.tau, xdt="fpr",
-                    estimator=args.estimator, epochs=args.epochs)
-            .search("naive")
-            .verify(args.verify)
-            .on(backend="jnp", cache_key=(args.dataset, args.n),
-                topology=args.topology, r_shards=args.r_shards,
-                probe=args.probe))
-    if args.mutate_trace:
-        plan = plan.mutable()   # unlock insert/delete/compact (§13)
-    return plan.build()
+#: --tenant spec fields -> parser (everything else is an error)
+_TENANT_FIELDS = {
+    "name": str, "eps": float, "recall": float, "slo_ms": float,
+    "verify": str, "probe": str, "tau": int, "depth": int, "max_depth": int,
+}
+
+
+def parse_tenant(spec: str) -> TenantClass:
+    """Compile one `--tenant "k=v,k=v,..."` spec into a `TenantClass`
+    (fields: name, eps, recall, slo_ms, verify, probe, tau, depth,
+    max_depth)."""
+    kw: dict = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, _, val = part.partition("=")
+        key = key.strip()
+        if key not in _TENANT_FIELDS:
+            raise ValueError(f"--tenant {spec!r}: unknown field {key!r}; "
+                             f"expected {sorted(_TENANT_FIELDS)}")
+        kw[key] = _TENANT_FIELDS[key](val.strip())
+    if "name" not in kw or "eps" not in kw:
+        raise ValueError(f"--tenant {spec!r}: name= and eps= are required")
+    if "recall" in kw:
+        kw["recall_target"] = kw.pop("recall")
+    return TenantClass(**kw)
+
+
+def build_gateway(args, R, metric: str) -> Gateway:
+    """Compile the CLI flags into a built `Gateway`: the base flags make
+    the "default" tenant class, each `--tenant` spec adds one, and the
+    shared Xling filter is fitted once at build (so its one-time cost
+    lands in build_s, not in request 0's reported latency)."""
+    classes = [TenantClass("default", eps=args.eps, verify=args.verify,
+                           probe=args.probe, slo_ms=args.slo_ms,
+                           depth=args.depth)]
+    classes += [parse_tenant(s) for s in args.tenant]
+    return Gateway(
+        R, classes, metric=metric, filter="xling",
+        filter_opts=dict(tau=args.tau, xdt="fpr", estimator=args.estimator,
+                         epochs=args.epochs),
+        backend="jnp", topology=args.topology, r_shards=args.r_shards,
+        cache_key=(args.dataset, args.n), eps_quantum=args.eps_quantum,
+        max_batch_rows=args.max_batch_rows,
+        mutable=args.mutate_trace is not None)
 
 
 def main():
-    """CLI entry point: compile the flags into a JoinPlan, stream query
-    batches through the async engine pipeline, and print the plan summary,
-    per-batch lines, and aggregate JSON."""
+    """CLI entry point: compile the flags into a Gateway, replay the
+    query stream as round-robin per-tenant requests, and print the
+    per-request lines, aggregate summary, and the gateway report."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="glove")
     ap.add_argument("--n", type=int, default=4000)
@@ -153,10 +192,26 @@ def main():
     ap.add_argument("--estimator", default="nn")
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--verify", default="exact",
-                    choices=("exact", "lsh", "ivfpq"),
-                    help="verification backend (DESIGN.md §5)")
+                    choices=("auto", "exact", "lsh", "ivfpq", "learned"),
+                    help="default tenant's verification backend "
+                         "(DESIGN.md §5; 'learned' is the RMI index)")
     ap.add_argument("--depth", type=int, default=2,
-                    help="async in-flight queue bound (0 ~= synchronous)")
+                    help="default tenant's initial async in-flight bound "
+                         "(0 ~= synchronous; adapts under --slo-ms)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="default tenant's per-request latency SLO — "
+                         "drives SLO-miss accounting and adaptive depth")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="SPEC",
+                    help="add a tenant class: 'name=gold,eps=0.4,"
+                         "verify=lsh,recall=0.9,slo_ms=50,tau=5' "
+                         "(repeatable; requests round-robin over classes)")
+    ap.add_argument("--eps-quantum", type=float, default=None,
+                    help="snap explicit request radii to this grid "
+                         "(coalescing/caching buckets, DESIGN.md §14)")
+    ap.add_argument("--max-batch-rows", type=int, default=None,
+                    help="coalescing budget per dispatched batch "
+                         "(default: the engine's minimum padded bucket)")
     ap.add_argument("--topology", default=None,
                     choices=("replicated", "ring"),
                     help="where R lives on the mesh (DESIGN.md §10): "
@@ -175,55 +230,57 @@ def main():
                          "stream (DESIGN.md §13): each line "
                          "{'before_batch': k, 'op': 'insert'|'delete'|"
                          "'compact', 'n': ..., 'seed': ...}; makes the "
-                         "plan mutable and computes each batch's recall "
-                         "oracle against the logical set at submit time")
+                         "gateway mutable and computes each request's "
+                         "recall oracle against the logical set at "
+                         "submit time")
     args = ap.parse_args()
 
     R, S, spec = load_dataset(args.dataset, n=args.n)
     t0 = time.time()
-    plan = build_plan(args, R, spec.metric)
+    gw = build_gateway(args, R, spec.metric)
     build_s = time.time() - t0
-    print(json.dumps({"plan": plan.describe()}, default=str))
-    naive = plan.base     # shares the plan engine's device-resident R
+    rep0 = gw.report()
+    print(json.dumps({"gateway": {k: rep0[k] for k in
+                                  ("mutable", "eps_quantum",
+                                   "max_batch_rows", "n_index", "tenants")}},
+                     default=str))
+    names = sorted(rep0["tenants"])
+    trace = load_trace(args.mutate_trace) if args.mutate_trace else {}
+    live = {i: R[i] for i in range(len(R))}
+
+    def oracle(q: np.ndarray, eps: float) -> np.ndarray:
+        # brute force over the logical set at submit time — under a
+        # mutation trace `live` tracks inserts/deletes, otherwise it is
+        # just R (DESIGN.md §13)
+        from repro.kernels import ref
+        world = np.stack(list(live.values()))
+        return np.asarray(ref.range_count(q, world, eps,
+                                          metric=spec.metric))
 
     batches = [q for b in range(args.batches)
                if len(q := S[b * args.batch_size:(b + 1) * args.batch_size])]
     stats = []
-    if args.mutate_trace is None:
-        # exact-oracle counts for the recall column, computed BEFORE
-        # streaming so the measurement doesn't interleave device programs
-        # with the pipeline and pollute the reported p50/p95 latencies
-        truths = [naive.query_counts(q, args.eps) for q in batches]
-        dfracs: list[float | None] = [None] * len(batches)
-        feed = iter(batches)
-    else:
-        # under a mutation trace the oracle is per-batch: ops run right
-        # before a batch is submitted, and its truth is the brute-force
-        # count over the logical set AT THAT MOMENT (the engine snapshots
-        # the same world per batch — DESIGN.md §13)
-        from repro.kernels import ref
-        trace = load_trace(args.mutate_trace)
-        live = {i: R[i] for i in range(len(R))}
-        truths, dfracs = [], []
-
-        def mutating_feed():
-            for k, q in enumerate(batches):
-                apply_ops(plan, trace.get(k, ()), live, R.shape[1])
-                world = np.stack(list(live.values()))
-                truths.append(np.asarray(
-                    ref.range_count(q, world, args.eps, metric=spec.metric)))
-                dfracs.append(float(plan.engine.delta_frac))
-                yield q
-        feed = mutating_feed()
-    # the async engine streaming path: R + estimator stay device-resident,
-    # compiled programs are reused (bucketed shapes), and batch k+1
-    # dispatches while batch k's verification results transfer back
-    for b, res in enumerate(plan.stream(feed, args.eps,
-                                        depth=args.depth)):
-        stats.append(batch_stats(b, res, truths[b], dfracs[b]))
-        print(json.dumps(stats[-1]))
+    for b, batch in enumerate(batches):
+        apply_ops(gw, trace.get(b, ()), live, R.shape[1])
+        # one request per tenant class per input batch (round-robin
+        # split); the gateway coalesces compatible ones back together
+        parts = [p for p in np.array_split(batch, len(names)) if len(p)]
+        tickets = [(name, q, gw.submit(name, q))
+                   for name, q in zip(names, parts)]
+        gw.flush()
+        for name, q, t in tickets:
+            stats.append({
+                "batch": b, "tenant": name, "queries": int(t.n),
+                "eps": t.eps, "cache_hits": int(t.meta["cache_hits"]),
+                "recall": float(np.minimum(t.counts, tr := oracle(q, t.eps))
+                                .sum() / max(tr.sum(), 1)),
+                "latency_ms": float(t.latency_ms),
+                "verify": rep0["tenants"][name]["verify"],
+            })
+            print(json.dumps(stats[-1]))
 
     print(json.dumps({"summary": summarize(stats, build_s)}))
+    print(json.dumps({"report": gw.report()}, default=str))
 
 
 if __name__ == "__main__":

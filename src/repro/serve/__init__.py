@@ -1,0 +1,23 @@
+"""Serving layer (DESIGN.md §14): the multi-tenant request gateway over
+one pinned `JoinEngine`.
+
+    gateway — `Gateway` / `Ticket`: request admission, cross-request
+              micro-batching, scatter-back, mutation flushing
+    tenants — `TenantClass`: the (eps, recall target, latency SLO)
+              contract compiled into a per-class `JoinPlan.fork`
+    cache   — `ResultCache`: eps-aware per-query result cache keyed on
+              (class, row fingerprint, eps bucket, world version)
+    batching — `Coalescer`: per-(class, eps) FIFO batch composition
+              into the engine's power-of-two buckets
+    metrics — `TenantMetrics` counters/percentiles + the AIMD
+              `DepthController` for SLO-driven stream depth
+"""
+from repro.serve.batching import Coalescer, PendingRows, Segment
+from repro.serve.cache import ResultCache, fingerprint_rows
+from repro.serve.gateway import Gateway, Ticket
+from repro.serve.metrics import DepthController, TenantMetrics
+from repro.serve.tenants import TenantClass
+
+__all__ = ["Gateway", "Ticket", "TenantClass", "ResultCache",
+           "fingerprint_rows", "Coalescer", "PendingRows", "Segment",
+           "TenantMetrics", "DepthController"]

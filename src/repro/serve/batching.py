@@ -1,0 +1,93 @@
+"""Cross-request micro-batching: the gateway's coalescer
+(DESIGN.md §14).
+
+Requests land here AFTER the cache pass, as `PendingRows` — the subset
+of a ticket's query rows that must actually run, remembering their
+positions inside the ticket for scatter-back. The coalescer queues them
+per compatibility group (one group = one tenant class at one eps
+bucket = one engine session and one compiled-program family) and
+`take()` drains whole requests FIFO into a single concatenated batch up
+to a row budget — the engine pads every batch to a power-of-two bucket
+(`JoinEngine.padded_rows`), so packing several small requests into one
+bucket is pure throughput (the padded sweep costs the same whether the
+bucket is one request or eight).
+
+A request is never split across batches: its rows stay contiguous in
+exactly one engine batch (one `Segment` per request), which keeps
+scatter-back a single slice copy and results bit-identical to running
+the request alone.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+
+@dataclass
+class PendingRows:
+    """One request's uncached remainder, queued for coalescing:
+    `rows` ([k, d], the query rows to run), `positions` (their row
+    indices inside the originating ticket), `hashes` (their cache
+    fingerprints, for storing the computed counts), `ticket` (the
+    handle to scatter results back into)."""
+    ticket: Any
+    rows: np.ndarray
+    positions: np.ndarray
+    hashes: list
+
+
+@dataclass
+class Segment:
+    """One request's slice of a composed batch: rows `[start, stop)` of
+    the batch belong to `ticket` at `positions`; `hashes` key the cache
+    stores for the computed counts."""
+    ticket: Any
+    positions: np.ndarray
+    hashes: list
+    start: int
+    stop: int
+
+
+class Coalescer:
+    """Per-group FIFO queues of `PendingRows` + batch composition."""
+
+    def __init__(self):
+        self._groups: dict[tuple, deque[PendingRows]] = {}
+
+    def add(self, group: tuple, pending: PendingRows) -> None:
+        """Queue one request's uncached rows under its compatibility
+        group (tenant class, eps bucket)."""
+        self._groups.setdefault(group, deque()).append(pending)
+
+    def pending_rows(self, group: tuple) -> int:
+        """Query rows currently queued under `group`."""
+        return sum(len(p.rows) for p in self._groups.get(group, ()))
+
+    def groups(self) -> list[tuple]:
+        """Groups with at least one queued request (flush iterates)."""
+        return [g for g, q in self._groups.items() if q]
+
+    def take(self, group: tuple, max_rows: int) -> tuple:
+        """Compose one batch from `group`: drain whole requests FIFO
+        until adding the next would exceed `max_rows` (the first request
+        is always taken, so an oversized request forms its own batch).
+        Returns `(Q [m, d], segments)` — or `(None, [])` when the group
+        is empty."""
+        queue = self._groups.get(group)
+        if not queue:
+            return None, []
+        parts, segments, row = [], [], 0
+        while queue:
+            nxt = len(queue[0].rows)
+            if parts and row + nxt > max_rows:
+                break
+            p = queue.popleft()
+            parts.append(p.rows)
+            segments.append(Segment(ticket=p.ticket, positions=p.positions,
+                                    hashes=p.hashes, start=row,
+                                    stop=row + nxt))
+            row += nxt
+        return np.concatenate(parts, axis=0), segments

@@ -1,0 +1,93 @@
+"""Eps-aware result cache for the serving gateway (DESIGN.md §14).
+
+Caches PER-QUERY results (the exact-at-candidates neighbor count), not
+per-request blobs, so a repeated query row hits regardless of how
+requests batch it. An entry is keyed on the full serving identity:
+
+    (plan signature, query fingerprint, eps bucket, world version)
+
+* plan signature — the tenant class name: two classes may run different
+  verify routes over the same engine, so their results never cross.
+* query fingerprint — blake2b over the query row's float32 bytes:
+  bit-identical rows hit, anything else misses (no tolerance radius —
+  a "near-duplicate" hits only through the eps bucket it shares).
+* eps bucket — the EXECUTED radius (the gateway snaps request eps to
+  its `eps_quantum` grid before both execution and lookup, so the
+  bucket is also the semantics — a cached count is exactly the count
+  the engine would recompute).
+* world version — `JoinEngine.world_version`, bumped by every
+  insert/delete/compact. Lookups always use the current version, so a
+  result computed against an older logical set can never answer a new
+  request; `note_world` additionally drops the stale generation
+  eagerly instead of waiting for LRU eviction.
+
+Bounded LRU (`capacity` entries); hit/miss counters feed the per-tenant
+metrics reports.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+
+def fingerprint_rows(Q: np.ndarray) -> list[bytes]:
+    """16-byte blake2b digest per query row (float32 bytes) — the query
+    half of the cache key."""
+    Q = np.ascontiguousarray(np.asarray(Q, np.float32))
+    return [hashlib.blake2b(row.tobytes(), digest_size=16).digest()
+            for row in Q]
+
+
+class ResultCache:
+    """Bounded-LRU per-query result cache (see module docstring)."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError(f"ResultCache(capacity={capacity}): must be "
+                             ">= 1")
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[tuple, int] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self._world: int | None = None
+
+    def __len__(self) -> int:
+        """Number of live entries."""
+        return len(self._entries)
+
+    def note_world(self, version: int) -> None:
+        """Observe the engine's current world version: on a bump, drop
+        every entry eagerly — they are unreachable anyway (the version
+        is part of the key) but holding a dead generation would evict
+        live entries first."""
+        if self._world != version:
+            self._world = version
+            self._entries.clear()
+
+    def get(self, key: tuple) -> int | None:
+        """The cached count for `key`, or None on a miss; hits refresh
+        LRU recency and both outcomes feed the counters."""
+        count = self._entries.get(key)
+        if count is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return count
+
+    def put(self, key: tuple, count: int) -> None:
+        """Store one per-query count, evicting the LRU entry past
+        capacity."""
+        self._entries[key] = int(count)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def report(self) -> dict:
+        """Serializable counters for the gateway report."""
+        total = self.hits + self.misses
+        return {"entries": len(self._entries), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0}

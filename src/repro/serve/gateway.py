@@ -1,0 +1,462 @@
+"""The request-level serving gateway over one pinned `JoinEngine`
+(DESIGN.md §14).
+
+`Gateway` turns the engine into a multi-tenant service: it accepts
+`(tenant, Q, eps)` requests from any number of concurrent feeds and
+returns a `Ticket` per request, then
+
+* answers bit-identical repeated rows from the eps-aware `ResultCache`
+  (keyed on tenant class, row fingerprint, executed eps, and the
+  engine's `world_version` — a mutation can never serve stale counts);
+* coalesces the remaining rows across requests into the engine's
+  power-of-two bucketed batches — compatibility group = (tenant class,
+  eps bucket), i.e. one compiled-program family — and scatters each
+  batch's counts back into the originating tickets per `Segment`
+  (results are bit-identical to running each request alone through the
+  tenant's own `JoinPlan.run`, because per-row counts are independent
+  of batch composition);
+* runs every tenant class as a frozen `JoinPlan.fork` of one base plan:
+  a single device-resident R/estimator serves every class, the classes
+  differing only in verify backend / probe placement / Xling tau;
+* adapts each group's async stream depth from observed batch latency
+  against the tenant's SLO (`DepthController`), and accounts
+  admitted / coalesced / cache-hit / SLO-miss counters with p50/p95
+  request latency per tenant (`report()`).
+
+Mutations (`insert`/`delete`/`compact`, gateways built `mutable=True`)
+flush every pending request first, then delegate to the mutable base
+plan — so a request's results always reflect the logical set at its
+dispatch, and the world-version bump makes the whole cache generation
+unreachable.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core import JoinPlan
+from repro.core.engine import VERIFY_BACKENDS
+from repro.core.xling import XlingFilter
+from repro.serve.batching import Coalescer, PendingRows
+from repro.serve.cache import ResultCache, fingerprint_rows
+from repro.serve.metrics import DepthController, TenantMetrics
+from repro.serve.tenants import TenantClass
+
+
+class Ticket:
+    """Handle for one admitted request: filled progressively (cache hits
+    immediately, batched rows at scatter-back) and `done` once every row
+    has its count. `counts` raises until then — call `Gateway.flush()`
+    (or `join()` instead of `submit()`) to force completion."""
+
+    def __init__(self, tenant: str, eps: float, n: int):
+        self.tenant = tenant
+        self.eps = float(eps)
+        self.n = int(n)
+        self.meta: dict = {"cache_hits": 0}
+        self._counts = np.zeros((n,), np.int32)
+        self._missing = int(n)
+        self._t0 = time.perf_counter()
+        self.latency_ms: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        """True once every row's count has been scattered back."""
+        return self._missing == 0
+
+    @property
+    def counts(self) -> np.ndarray:
+        """int32 [n] per-query neighbor counts (raises while pending)."""
+        if not self.done:
+            raise RuntimeError(
+                f"Ticket({self.tenant!r}): {self._missing}/{self.n} rows "
+                "still pending — call Gateway.flush() to force the "
+                "coalescer to dispatch")
+        return self._counts
+
+    def _fill(self, positions: np.ndarray, counts: np.ndarray) -> None:
+        if len(positions):
+            self._counts[positions] = counts
+            self._missing -= len(positions)
+
+    def _finish(self) -> float:
+        self.latency_ms = (time.perf_counter() - self._t0) * 1e3
+        self.meta["latency_ms"] = self.latency_ms
+        return self.latency_ms
+
+
+@dataclass
+class _BatchRecord:
+    """One dispatched engine batch awaiting scatter-back (FIFO per
+    group): its request segments, the world version and wall-clock at
+    dispatch, and its row count."""
+    segments: list
+    world_version: int
+    t_submit: float
+    n_rows: int
+
+
+@dataclass
+class _GroupState:
+    """Live state of one compatibility group (tenant class x eps
+    bucket): the plan session batches run through, the FIFO of
+    dispatched batch records, and the group's depth controller."""
+    cls: TenantClass
+    eps: float
+    session: object
+    controller: DepthController
+    records: deque = field(default_factory=deque)
+
+
+class Gateway:
+    """Multi-tenant serving gateway over one pinned engine (see module
+    docstring). Construct with the index set and the tenant classes;
+    `submit()` admits a request and returns its `Ticket`, `flush()`
+    drains, `join()` is the synchronous convenience, `report()` the
+    per-tenant metrics snapshot.
+
+    R, metric: the shared index set (one device upload for ALL tenants).
+    classes: the `TenantClass` contracts (unique names).
+    filter / filter_opts: optional shared gating filter ("xling" fits
+        once; per-class `tau` re-calibrates thresholds on the shared
+        estimator without refitting).
+    mesh / backend / block / topology / r_shards / cache_key: engine
+        placement, as `JoinPlan.on` (DESIGN.md §10).
+    eps_quantum: grid explicit request radii snap to (None = exact-eps
+        buckets only). Snapping changes the EXECUTED radius — the bucket
+        is the semantics, and the ticket's `eps` reports it.
+    max_batch_rows: coalescing budget per dispatched batch; default =
+        the engine's minimum padded bucket (`padded_rows(1)`), i.e.
+        "fill one bucket before dispatching early".
+    cache_capacity: LRU bound of the per-query result cache.
+    mutable / auto_compact_at: unlock `insert`/`delete`/`compact`
+        (DESIGN.md §13) on the shared set. Mutable gateways restrict
+        classes to engine-rebuildable verify backends (exact/lsh/ivfpq)
+        and require classes naming the same backend to agree on its
+        params (one engine-cached index per backend name).
+    """
+
+    def __init__(self, R, classes: Iterable[TenantClass], *,
+                 metric: str = "cosine", filter=None, filter_opts=None,
+                 mesh=None, backend: str = "auto", block: int = 512,
+                 topology=None, r_shards=None, cache_key=None,
+                 eps_quantum: Optional[float] = None,
+                 max_batch_rows: Optional[int] = None,
+                 cache_capacity: int = 65536, mutable: bool = False,
+                 auto_compact_at: Optional[float] = 0.5):
+        classes = list(classes)
+        if not classes:
+            raise ValueError("Gateway: at least one TenantClass is required")
+        names = [c.name for c in classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"Gateway: duplicate tenant class names in "
+                             f"{names}")
+        if eps_quantum is not None and not eps_quantum > 0.0:
+            raise ValueError(f"Gateway(eps_quantum={eps_quantum}): must be "
+                             "> 0 (or None for exact-eps buckets)")
+        self.mutable = bool(mutable)
+        self.eps_quantum = eps_quantum
+        self._classes = {c.name: c for c in classes}
+
+        base = JoinPlan(R, metric).search("naive").on(
+            mesh=mesh, backend=backend, block=block, topology=topology,
+            r_shards=r_shards, cache_key=cache_key)
+        if filter is not None:
+            base = base.filter(filter, **dict(filter_opts or {}))
+        if self.mutable:
+            base = base.mutable(auto_compact_at)
+        self._base = base.build()
+        self._engine = self._base.engine
+        self.max_batch_rows = (int(max_batch_rows) if max_batch_rows
+                               else self._engine.padded_rows(1))
+        if self.max_batch_rows < 1:
+            raise ValueError(f"Gateway(max_batch_rows={max_batch_rows}): "
+                             "must be >= 1")
+
+        self._plans: dict[str, JoinPlan] = {}
+        self._metrics = {c.name: TenantMetrics() for c in classes}
+        self._verify_name_params: dict[str, dict] = {}
+        for cls in classes:
+            self._plans[cls.name] = self._build_tenant_plan(cls)
+        self._cache = ResultCache(cache_capacity)
+        self._coalescer = Coalescer()
+        self._groups: dict[tuple, _GroupState] = {}
+
+    # -------------------------------------------------------- construction
+    def _build_tenant_plan(self, cls: TenantClass) -> JoinPlan:
+        """Fork the base plan for one tenant class: shared engine (and
+        fitted filter), per-class verify/probe/tau."""
+        plan = self._base.fork()
+        verify = cls.resolved_verify()
+        params = dict(cls.verify_params)
+        if self.mutable:
+            if verify not in VERIFY_BACKENDS:
+                raise ValueError(
+                    f"TenantClass({cls.name!r}): verify={verify!r} on a "
+                    "mutable gateway — compact() can only rebuild the "
+                    f"engine-cached backends {VERIFY_BACKENDS}; freeze the "
+                    "gateway (mutable=False) to serve instance-indexed "
+                    "backends like 'learned'")
+            if params and verify != "exact":
+                prev = self._verify_name_params.get(verify)
+                if prev is not None and prev != params:
+                    raise ValueError(
+                        f"TenantClass({cls.name!r}): verify={verify!r} "
+                        f"params {params} conflict with another class's "
+                        f"{prev} — a mutable gateway keeps ONE engine-"
+                        "cached index per backend name (rebuilt on "
+                        "compact), so classes naming the same backend "
+                        "must share its params")
+                self._verify_name_params[verify] = params
+                # build (and record for post-compact rebuild) the shared
+                # index now; the plan routes by NAME so the rebuilt index
+                # takes effect after every compaction
+                self._engine.verifier(verify, **params)
+                plan.verify(verify)
+            else:
+                plan.verify(verify, **params)
+        else:
+            plan.verify(verify, **params)
+        if cls.tau is not None:
+            adapter = self._base.build()._built.filter
+            filt = getattr(adapter, "filt", None)
+            if not isinstance(filt, XlingFilter):
+                raise ValueError(
+                    f"TenantClass({cls.name!r}): tau={cls.tau} needs the "
+                    "gateway built with filter='xling' (tau is the Xling "
+                    "XDT strictness)")
+            plan.filter(filt, tau=int(cls.tau), xdt=adapter.xdt_mode,
+                        fpr_tolerance=adapter.fpr_tolerance)
+        plan.on(probe=cls.probe)
+        plan.build()
+        assert plan.engine is self._engine  # fork shares the pinned R
+        return plan
+
+    # ------------------------------------------------------------- serving
+    def _resolve_eps(self, cls: TenantClass, eps) -> float:
+        """The EXECUTED radius for a request: the class default when
+        unspecified; an explicit eps snapped to the `eps_quantum` grid
+        (the snapped value is both the cache bucket and what the engine
+        runs — deterministic, reported on the ticket)."""
+        if eps is None:
+            return float(cls.eps)
+        eps = float(eps)
+        if not eps > 0.0:
+            raise ValueError(f"submit(eps={eps}): radius must be > 0")
+        if self.eps_quantum:
+            eps = round(self.eps_quantum * round(eps / self.eps_quantum), 9)
+            if not eps > 0.0:
+                eps = self.eps_quantum
+        return eps
+
+    def _group_state(self, gkey: tuple) -> _GroupState:
+        name, eps_key = gkey
+        gs = self._groups.get(gkey)
+        if gs is None:
+            cls = self._classes[name]
+            gs = _GroupState(
+                cls=cls, eps=float(eps_key),
+                session=self._plans[name].session(float(eps_key),
+                                                  depth=cls.depth),
+                controller=DepthController(cls.depth, cls.max_depth,
+                                           cls.slo_ms))
+            self._groups[gkey] = gs
+        return gs
+
+    def submit(self, tenant: str, Q, eps: Optional[float] = None) -> Ticket:
+        """Admit one request: cache-hit rows are answered immediately;
+        the rest queue in the request's compatibility group, which is
+        dispatched whenever `max_batch_rows` are pending (and at
+        `flush()`). Returns the request's `Ticket`."""
+        cls = self._classes.get(tenant)
+        if cls is None:
+            raise ValueError(f"submit({tenant!r}): unknown tenant class; "
+                             f"registered: {sorted(self._classes)}")
+        Q = np.atleast_2d(np.asarray(Q, np.float32))
+        if Q.ndim != 2 or Q.shape[1] != self._engine.dim or not len(Q):
+            raise ValueError(
+                f"submit({tenant!r}): queries have shape {Q.shape}; "
+                f"expected (k >= 1, {self._engine.dim})")
+        eps_exec = self._resolve_eps(cls, eps)
+        eps_key = round(eps_exec, 9)
+        ticket = Ticket(tenant, eps_exec, len(Q))
+        m = self._metrics[tenant]
+        m.admitted_requests += 1
+        m.admitted_queries += len(Q)
+
+        wv = self._engine.world_version
+        self._cache.note_world(wv)
+        hashes = fingerprint_rows(Q)
+        hit_pos, hit_counts, miss_pos = [], [], []
+        for i, h in enumerate(hashes):
+            c = self._cache.get((tenant, h, eps_key, wv))
+            if c is None:
+                miss_pos.append(i)
+            else:
+                hit_pos.append(i)
+                hit_counts.append(c)
+        ticket.meta["cache_hits"] = len(hit_pos)
+        m.cache_hit_queries += len(hit_pos)
+        m.cache_miss_queries += len(miss_pos)
+        if hit_pos:
+            ticket._fill(np.asarray(hit_pos, np.int64),
+                         np.asarray(hit_counts, np.int32))
+        if miss_pos:
+            pos = np.asarray(miss_pos, np.int64)
+            gkey = (tenant, eps_key)
+            self._coalescer.add(gkey, PendingRows(
+                ticket=ticket, rows=Q[pos], positions=pos,
+                hashes=[hashes[i] for i in miss_pos]))
+            while self._coalescer.pending_rows(gkey) >= self.max_batch_rows:
+                self._pump(gkey)
+        else:
+            m.observe_request(ticket._finish(), cls.slo_ms)
+        return ticket
+
+    def _pump(self, gkey: tuple) -> None:
+        """Dispatch one coalesced batch from a group's pending queue."""
+        Q, segments = self._coalescer.take(gkey, self.max_batch_rows)
+        if Q is None:
+            return
+        gs = self._group_state(gkey)
+        m = self._metrics[gs.cls.name]
+        m.batches += 1
+        if len(segments) > 1:
+            m.coalesced_batches += 1
+            m.coalesced_requests += len(segments)
+        gs.records.append(_BatchRecord(
+            segments=segments, world_version=self._engine.world_version,
+            t_submit=time.perf_counter(), n_rows=len(Q)))
+        self._scatter(gs, gs.session.submit(Q))
+
+    def _scatter(self, gs: _GroupState, results) -> None:
+        """Scatter completed batches' counts back into their tickets
+        (FIFO against the group's batch records), populate the cache
+        under the dispatch-time world version, finish tickets, and feed
+        the depth controller."""
+        if not results:
+            return
+        m = self._metrics[gs.cls.name]
+        eps_key = round(gs.eps, 9)
+        now = time.perf_counter()
+        for res in results:
+            rec = gs.records.popleft()
+            counts = np.asarray(res.counts)
+            for seg in rec.segments:
+                c = counts[seg.start:seg.stop]
+                seg.ticket._fill(seg.positions, c)
+                for h, cnt in zip(seg.hashes, c):
+                    self._cache.put(
+                        (gs.cls.name, h, eps_key, rec.world_version),
+                        int(cnt))
+                if seg.ticket.done:
+                    m.observe_request(seg.ticket._finish(), gs.cls.slo_ms)
+            new_depth = gs.controller.update((now - rec.t_submit) * 1e3)
+            if new_depth != gs.session.depth:
+                gs.session.set_depth(new_depth)
+
+    def flush(self, tenant: Optional[str] = None) -> None:
+        """Dispatch everything pending (regardless of batch fill) and
+        drain the sessions: on return, every admitted ticket (of
+        `tenant`, or of all tenants) is `done`."""
+        gkeys = set(self._coalescer.groups()) | set(self._groups)
+        for gkey in sorted(gkeys):
+            if tenant is not None and gkey[0] != tenant:
+                continue
+            while self._coalescer.pending_rows(gkey) > 0:
+                self._pump(gkey)
+            gs = self._groups.get(gkey)
+            if gs is not None:
+                self._scatter(gs, gs.session.flush())
+
+    def join(self, tenant: str, Q, eps: Optional[float] = None) -> Ticket:
+        """Synchronous convenience: `submit` + flush the request's
+        group; the returned ticket is always `done`."""
+        ticket = self.submit(tenant, Q, eps)
+        if not ticket.done:
+            self.flush(tenant)
+        return ticket
+
+    # ------------------------------------------------------------ mutation
+    def _require_mutable(self, op: str) -> None:
+        if not self.mutable:
+            raise RuntimeError(
+                f"{op}: this gateway is frozen — construct it with "
+                "mutable=True to serve a dynamic R (DESIGN.md §13/§14)")
+
+    def insert(self, rows) -> np.ndarray:
+        """Insert rows into the shared logical set (all tenants observe
+        them): flushes every pending request first, so in-flight results
+        reflect the pre-mutation world, then bumps the world version —
+        no cached count survives."""
+        self._require_mutable("insert()")
+        self.flush()
+        return self._base.insert(rows)
+
+    def delete(self, ids) -> None:
+        """Delete rows by id from the shared logical set (flushes
+        pending requests first; bumps the world version)."""
+        self._require_mutable("delete()")
+        self.flush()
+        self._base.delete(ids)
+
+    def compact(self) -> dict:
+        """Merge the delta / drop tombstones on the shared engine
+        (flushes pending requests first; bumps the world version).
+        Returns the engine's compaction stats."""
+        self._require_mutable("compact()")
+        self.flush()
+        return self._base.compact()
+
+    # ---------------------------------------------------------- inspection
+    @property
+    def world_version(self) -> int:
+        """The engine's logical-set version (cache-key component)."""
+        return self._engine.world_version
+
+    @property
+    def engine(self):
+        """The shared `JoinEngine` every tenant plan runs on."""
+        return self._engine
+
+    def plan(self, tenant: str) -> JoinPlan:
+        """The built `JoinPlan` serving a tenant class (shares the
+        gateway engine; its `run` is the per-request parity oracle)."""
+        return self._plans[tenant]
+
+    def report(self) -> dict:
+        """Serializable serving snapshot: world version, cache counters,
+        and per-tenant class config + resolved routes + metrics
+        (admitted/coalesced/cache-hit/SLO-miss counters, p50/p95) + live
+        group depths — the `describe()` of the serving layer."""
+        tenants = {}
+        for name, cls in self._classes.items():
+            desc = self._plans[name].describe()
+            groups = {
+                str(gkey[1]): {"depth": int(gs.session.depth),
+                               "pending_rows":
+                                   self._coalescer.pending_rows(gkey),
+                               "in_flight_batches": len(gs.records)}
+                for gkey, gs in self._groups.items() if gkey[0] == name}
+            tenants[name] = {
+                "eps": cls.eps, "recall_target": cls.recall_target,
+                "slo_ms": cls.slo_ms,
+                "verify": desc["verify"]["resolved"],
+                "probe": desc["exec"]["probe"]["resolved"],
+                "tau": desc["filter"]["tau"],
+                "metrics": self._metrics[name].report(),
+                "groups": groups,
+            }
+        return {
+            "world_version": self.world_version,
+            "mutable": self.mutable,
+            "eps_quantum": self.eps_quantum,
+            "max_batch_rows": self.max_batch_rows,
+            "n_index": int(self._engine.nr),
+            "cache": self._cache.report(),
+            "tenants": tenants,
+        }

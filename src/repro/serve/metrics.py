@@ -1,0 +1,101 @@
+"""Per-tenant serving metrics + the adaptive-depth controller
+(DESIGN.md §14).
+
+`TenantMetrics` carries the counters the gateway report surfaces per
+tenant — admitted / coalesced / cache-hit / SLO-miss counts plus a
+bounded window of request latencies for p50/p95 — and `DepthController`
+turns observed per-batch latency into a stream-depth target (AIMD
+against the tenant's SLO: a miss sheds one level of pipelining
+immediately; sustained headroom grows it back one level at a time up to
+the class ceiling).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+#: request latencies kept per tenant for the p50/p95 columns
+LATENCY_WINDOW = 512
+
+
+class TenantMetrics:
+    """Counters + latency window for one tenant (gateway report rows)."""
+
+    def __init__(self):
+        self.admitted_requests = 0      # submit() calls accepted
+        self.admitted_queries = 0       # query rows across them
+        self.served_requests = 0        # tickets fully scattered back
+        self.cache_hit_queries = 0      # rows answered from the cache
+        self.cache_miss_queries = 0     # rows that joined a batch
+        self.batches = 0                # engine batches dispatched
+        self.coalesced_batches = 0      # batches carrying > 1 request
+        self.coalesced_requests = 0     # requests that shared a batch
+        self.slo_misses = 0             # requests finishing past slo_ms
+        self._lat_ms: deque[float] = deque(maxlen=LATENCY_WINDOW)
+
+    def observe_request(self, latency_ms: float,
+                        slo_ms: Optional[float]) -> None:
+        """Record one finished request's admit->done latency and its SLO
+        outcome (no-op SLO accounting when the class has no SLO)."""
+        self.served_requests += 1
+        self._lat_ms.append(float(latency_ms))
+        if slo_ms is not None and latency_ms > slo_ms:
+            self.slo_misses += 1
+
+    def report(self) -> dict:
+        """Serializable counter snapshot with p50/p95 request latency."""
+        lat = np.asarray(self._lat_ms, np.float64)
+        return {
+            "admitted_requests": self.admitted_requests,
+            "admitted_queries": self.admitted_queries,
+            "served_requests": self.served_requests,
+            "cache_hit_queries": self.cache_hit_queries,
+            "cache_miss_queries": self.cache_miss_queries,
+            "batches": self.batches,
+            "coalesced_batches": self.coalesced_batches,
+            "coalesced_requests": self.coalesced_requests,
+            "slo_misses": self.slo_misses,
+            "p50_ms": float(np.percentile(lat, 50)) if len(lat) else None,
+            "p95_ms": float(np.percentile(lat, 95)) if len(lat) else None,
+        }
+
+
+class DepthController:
+    """AIMD stream-depth target against a latency SLO.
+
+    `update(lat_ms)` ingests one batch's submit->readback latency:
+    above the SLO, depth drops one level immediately (each queued batch
+    adds a full batch of latency, so shedding pipelining is the lever);
+    under half the SLO for three consecutive batches, depth grows one
+    level back, up to `max_depth`. Without an SLO the depth is pinned
+    at its initial value."""
+
+    #: consecutive well-under-SLO batches required before growing depth
+    GROW_AFTER = 3
+
+    def __init__(self, depth: int, max_depth: int,
+                 slo_ms: Optional[float]):
+        self.depth = max(int(depth), 0)
+        self.max_depth = max(int(max_depth), self.depth)
+        self.slo_ms = slo_ms
+        self._ok_streak = 0
+
+    def update(self, lat_ms: float) -> int:
+        """Feed one observed batch latency; returns the new target
+        depth."""
+        if self.slo_ms is None:
+            return self.depth
+        if lat_ms > self.slo_ms:
+            self._ok_streak = 0
+            self.depth = max(self.depth - 1, 0)
+        elif lat_ms < 0.5 * self.slo_ms:
+            self._ok_streak += 1
+            if self._ok_streak >= self.GROW_AFTER \
+                    and self.depth < self.max_depth:
+                self.depth += 1
+                self._ok_streak = 0
+        else:
+            self._ok_streak = 0
+        return self.depth

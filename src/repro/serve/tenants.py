@@ -1,0 +1,82 @@
+"""Tenant classes: the (eps, recall target, latency SLO) contract a
+serving tenant buys, mapped onto a built `JoinPlan` (DESIGN.md §14).
+
+A `TenantClass` is pure configuration — frozen, validated at
+construction — and the `Gateway` compiles each one into a frozen fork of
+its base plan (`JoinPlan.fork`): same pinned device-resident
+R/estimator, per-class verify backend / probe placement / Xling tau.
+`verify="auto"` resolves from the recall target: 1.0 -> the exact sweep,
+>= 0.95 -> IVF-PQ, anything looser -> LSH (explicit `verify=` always
+wins; `verify_params` tune the chosen index).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Optional
+
+
+@dataclass(frozen=True)
+class TenantClass:
+    """One tenant's serving contract.
+
+    name: unique tenant id (requests address it; metrics key on it).
+    eps: default join radius for this tenant's requests (an explicit
+        per-request eps overrides it, snapped to the gateway's eps
+        quantum).
+    recall_target: the recall the tenant pays for — resolves
+        `verify="auto"` to a backend (see module docstring) and is
+        reported alongside the measured counters.
+    slo_ms: per-request latency SLO (admit -> results scattered back);
+        None = best-effort (no SLO accounting, no depth adaptation).
+    verify: verification backend ("auto" | "exact" | "lsh" | "ivfpq" |
+        any candidate-producing join name, e.g. "learned").
+    verify_params: constructor params for the chosen verify index.
+    probe: probe placement ("auto" | "device" | "host", DESIGN.md §11).
+    tau: per-tenant Xling XDT strictness (None = inherit the gateway
+        filter's tau; requires the gateway to be built with a filter).
+    depth: initial async stream depth for this tenant's sessions.
+    max_depth: ceiling the adaptive-depth controller may grow back to.
+    """
+
+    name: str
+    eps: float
+    recall_target: float = 1.0
+    slo_ms: Optional[float] = None
+    verify: str = "auto"
+    verify_params: Mapping = field(default_factory=dict)
+    probe: str = "auto"
+    tau: Optional[int] = None
+    depth: int = 2
+    max_depth: int = 4
+
+    def __post_init__(self):
+        """Validate the contract at construction, not at first request."""
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"TenantClass(name={self.name!r}): expected a "
+                             "non-empty string")
+        if not self.eps > 0.0:
+            raise ValueError(f"TenantClass({self.name!r}): eps={self.eps} "
+                             "must be > 0")
+        if not 0.0 < self.recall_target <= 1.0:
+            raise ValueError(
+                f"TenantClass({self.name!r}): recall_target="
+                f"{self.recall_target} must be in (0, 1]")
+        if self.slo_ms is not None and not self.slo_ms > 0.0:
+            raise ValueError(f"TenantClass({self.name!r}): slo_ms="
+                             f"{self.slo_ms} must be > 0 (or None)")
+        if self.depth < 0 or self.max_depth < self.depth:
+            raise ValueError(
+                f"TenantClass({self.name!r}): need 0 <= depth "
+                f"(={self.depth}) <= max_depth (={self.max_depth})")
+
+    def resolved_verify(self) -> str:
+        """The verify backend this class actually runs: the explicit
+        `verify=` when named, else the recall target's resolution —
+        exact at 1.0, ivfpq at >= 0.95, lsh below."""
+        if self.verify != "auto":
+            return self.verify
+        if self.recall_target >= 1.0:
+            return "exact"
+        if self.recall_target >= 0.95:
+            return "ivfpq"
+        return "lsh"

@@ -33,6 +33,7 @@ METHOD_PARAMS = {
     "lsh": dict(k=12, l=10, n_probes=4, W=2.0),
     "kmeanstree": dict(branching=3, rho=0.05),
     "ivfpq": dict(C=32, n_probe=6, n_candidates=400),
+    "learned": dict(epochs=8),
 }
 
 

@@ -56,6 +56,51 @@ def test_kmeans_tree_recall(data, truth):
     assert rec > 0.7, rec
 
 
+def test_learned_join_recall(data, truth):
+    R, S, spec = data
+    j = make_join("learned", R, spec.metric, epochs=16)
+    cnt = j.query_counts(S, 0.45)
+    assert (cnt <= truth).all()          # verified candidates: no false pair
+    rec = np.minimum(cnt, truth).sum() / max(truth.sum(), 1)
+    assert rec > 0.95, rec
+
+
+def test_learned_join_selective_on_clustered_data():
+    """On data whose distance-to-pivot actually varies — unit-sphere
+    clusters at distinct ANGLES to the shared axis, so the centroid
+    sits off-center and every cluster lands in its own key band — the
+    window must PRUNE (mean candidate width well under |R|) while
+    keeping the recall floor. This is the non-vacuity check the
+    isotropic fixtures can't provide: there every key collapses to ~1
+    and the window spans all of R."""
+    rng = np.random.default_rng(3)
+    theta = 0.1 + 0.22 * np.arange(6)    # angles to the shared axis
+    axis = np.zeros(32)
+    axis[0] = 1.0
+    perp = rng.normal(size=(6, 32))
+    perp[:, 0] = 0.0
+    perp /= np.linalg.norm(perp, axis=1, keepdims=True)
+    c = np.cos(theta)[:, None] * axis + np.sin(theta)[:, None] * perp
+
+    def draw(per):
+        p = np.repeat(c, per, axis=0) + rng.normal(size=(6 * per, 32)) * 0.005
+        return (p / np.linalg.norm(p, axis=1, keepdims=True)
+                ).astype(np.float32)
+
+    R, S = draw(300), draw(20)
+    naive = make_join("naive", R, "cosine", backend="jnp")
+    truth = naive.query_counts(S, 0.002)
+    assert truth.sum() > 0               # clusters make real neighbors
+    j = make_join("learned", R, "cosine", epochs=16)
+    cnt = j.query_counts(S, 0.002)
+    assert (cnt <= truth).all()
+    rec = np.minimum(cnt, truth).sum() / max(truth.sum(), 1)
+    assert rec > 0.95, rec
+    cand = j.candidates(S, eps=0.002)
+    width = (cand >= 0).sum(axis=1).mean()
+    assert width < 0.5 * len(R), width   # the window actually prunes
+
+
 def test_ivfpq_recall(data, truth):
     R, S, spec = data
     j = make_join("ivfpq", R, spec.metric, C=32, n_probe=6, n_candidates=400)

@@ -1,0 +1,386 @@
+"""Serving gateway (DESIGN.md §14): scatter-back bit-parity, the
+eps-aware result cache under mutation, coalescing, adaptive depth, and
+the tenant-class contract.
+
+The headline contracts:
+
+* scatter-back parity — every ticket's counts are bit-identical to the
+  tenant's own `JoinPlan.run` on just that request's rows (per-row
+  counts are independent of batch composition), on both topologies and
+  in a forced-8-device subprocess;
+* cache soundness — hits are bit-identical, never cross eps buckets or
+  tenant classes, and NEVER survive a world-version bump: a randomized
+  insert/delete/compact sequence interleaved with REPEATED queries
+  stays pointwise bit-identical to a fresh `ShadowOracle` while the
+  cache demonstrably serves hits between mutations (non-vacuity);
+* one engine — all tenant plans share the gateway's pinned engine.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.serve import (Coalescer, DepthController, Gateway, PendingRows,
+                         ResultCache, TenantClass, fingerprint_rows)
+
+EPS = 0.45
+DIM = 16
+
+
+def _unit(rng, n, d=DIM):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _shadow_counts(live: dict, Q, eps, metric="cosine"):
+    world = np.stack(list(live.values()))
+    return np.asarray(ref.range_count(Q, world, eps, metric=metric))
+
+
+CLASSES = [
+    TenantClass("gold", eps=EPS, verify="exact"),
+    TenantClass("silver", eps=0.5, recall_target=0.9, verify="lsh",
+                verify_params=dict(k=10, l=8, n_probes=4, W=2.5),
+                slo_ms=10_000.0),
+]
+
+
+def _gateway(rng, n=240, classes=CLASSES, **kw):
+    R = _unit(rng, n)
+    return R, Gateway(R, classes, metric="cosine", backend="jnp", **kw)
+
+
+# ------------------------------------------------- scatter-back parity
+def test_scatter_parity_replicated():
+    """Interleaved sub-bucket requests from two classes coalesce into
+    shared batches, and each ticket's counts are bit-identical to the
+    tenant's own plan run alone on its rows."""
+    rng = np.random.default_rng(0)
+    R, gw = _gateway(rng)
+    assert gw.plan("gold").engine is gw.engine
+    assert gw.plan("silver").engine is gw.engine
+
+    reqs = [(CLASSES[i % 2].name, _unit(rng, int(rng.integers(3, 20))))
+            for i in range(10)]
+    tickets = [gw.submit(name, q) for name, q in reqs]
+    gw.flush()
+    for (name, q), t in zip(reqs, tickets):
+        assert t.done
+        want = np.asarray(gw.plan(name).run(q, t.eps).counts)
+        np.testing.assert_array_equal(t.counts, want, err_msg=name)
+
+    rep = gw.report()
+    m = rep["tenants"]["gold"]["metrics"]
+    assert m["admitted_requests"] == 5
+    assert m["coalesced_requests"] >= 2   # sub-bucket requests DID share
+    assert m["coalesced_batches"] >= 1
+
+
+def test_scatter_parity_ring():
+    from repro.launch.mesh import make_join_mesh
+    rng = np.random.default_rng(1)
+    R, gw = _gateway(rng, mesh=make_join_mesh(data=1, r=1),
+                     topology="ring")
+    reqs = [(CLASSES[i % 2].name, _unit(rng, 7)) for i in range(6)]
+    tickets = [gw.submit(name, q) for name, q in reqs]
+    gw.flush()
+    for (name, q), t in zip(reqs, tickets):
+        np.testing.assert_array_equal(
+            t.counts, np.asarray(gw.plan(name).run(q, t.eps).counts),
+            err_msg=name)
+
+
+def test_scatter_parity_learned_tenant():
+    """A frozen gateway serves the learned (RMI) route as a tenant
+    class; its scattered counts match its plan run."""
+    rng = np.random.default_rng(2)
+    classes = CLASSES + [TenantClass("rmi", eps=EPS, verify="learned",
+                                     verify_params=dict(epochs=8))]
+    R, gw = _gateway(rng, classes=classes)
+    q = _unit(rng, 9)
+    t = gw.join("rmi", q)
+    np.testing.assert_array_equal(
+        t.counts, np.asarray(gw.plan("rmi").run(q, EPS).counts))
+
+
+@pytest.mark.slow
+def test_gateway_subprocess_8dev():
+    """Forced 8-host-device subprocess: gateway scatter-back parity on
+    a replicated data mesh and a 4x2 ring mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import numpy as np, jax\n"
+        "from repro.launch.mesh import make_data_mesh, make_join_mesh\n"
+        "from repro.serve import Gateway, TenantClass\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(6)\n"
+        "def unit(n):\n"
+        "    x = rng.normal(size=(n, 16)).astype(np.float32)\n"
+        "    return x / np.linalg.norm(x, axis=1, keepdims=True)\n"
+        "R = unit(300)\n"
+        "classes = [TenantClass('gold', eps=0.45, verify='exact'),\n"
+        "           TenantClass('silver', eps=0.5, recall_target=0.9,\n"
+        "                       verify='lsh',\n"
+        "                       verify_params=dict(k=10, l=8, n_probes=4,\n"
+        "                                          W=2.5))]\n"
+        "for mesh, topo in ((make_data_mesh(), None),\n"
+        "                   (make_join_mesh(data=4, r=2), 'ring')):\n"
+        "    gw = Gateway(R, classes, backend='jnp', mesh=mesh,\n"
+        "                 topology=topo)\n"
+        "    reqs = [(classes[i % 2].name, unit(7)) for i in range(6)]\n"
+        "    tickets = [gw.submit(n, q) for n, q in reqs]\n"
+        "    gw.flush()\n"
+        "    for (n, q), t in zip(reqs, tickets):\n"
+        "        want = np.asarray(gw.plan(n).run(q, t.eps).counts)\n"
+        "        np.testing.assert_array_equal(t.counts, want)\n"
+        "print('GATEWAY_MESH_OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert "GATEWAY_MESH_OK" in out.stdout, out.stderr[-3000:]
+
+
+# ------------------------------------------------------ eps-aware cache
+def test_cache_hits_are_bit_identical():
+    rng = np.random.default_rng(3)
+    R, gw = _gateway(rng)
+    q = _unit(rng, 8)
+    t1 = gw.join("gold", q)
+    t2 = gw.join("gold", q)
+    assert t2.meta["cache_hits"] == len(q)
+    np.testing.assert_array_equal(t2.counts, t1.counts)
+    # partial overlap: only the repeated rows hit
+    q2 = np.concatenate([q[:3], _unit(rng, 4)])
+    t3 = gw.join("gold", q2)
+    assert t3.meta["cache_hits"] == 3
+    np.testing.assert_array_equal(t3.counts[:3], t1.counts[:3])
+
+
+def test_cache_is_eps_and_tenant_aware():
+    """Same rows at a different eps — or from a different class — must
+    not hit the other bucket's entries."""
+    rng = np.random.default_rng(4)
+    R, gw = _gateway(rng)
+    q = _unit(rng, 6)
+    gw.join("gold", q)
+    assert gw.join("gold", q, eps=0.6).meta["cache_hits"] == 0
+    assert gw.join("silver", q, eps=EPS).meta["cache_hits"] == 0
+    assert gw.join("gold", q).meta["cache_hits"] == len(q)
+
+
+def test_eps_quantum_snaps_buckets():
+    """Explicit radii snap to the quantum grid: nearby radii share one
+    bucket (and its cache entries), and the ticket reports the EXECUTED
+    eps."""
+    rng = np.random.default_rng(5)
+    R, gw = _gateway(rng, eps_quantum=0.05)
+    q = _unit(rng, 5)
+    t1 = gw.join("gold", q, eps=0.4501)
+    t2 = gw.join("gold", q, eps=0.4499)
+    assert t1.eps == t2.eps == 0.45
+    assert t2.meta["cache_hits"] == len(q)
+    np.testing.assert_array_equal(t2.counts, t1.counts)
+
+
+def test_cache_never_survives_world_bump():
+    """Randomized mutation sequence interleaved with REPEATED queries:
+    pointwise bit-identity vs a fresh shadow oracle, cache hits between
+    mutations (non-vacuity), zero hits on the first post-bump replay."""
+    rng = np.random.default_rng(6)
+    classes = [TenantClass("gold", eps=EPS, verify="exact"),
+               TenantClass("bulk", eps=EPS, recall_target=0.9,
+                           verify="lsh",
+                           verify_params=dict(k=10, l=8, n_probes=4,
+                                              W=2.5))]
+    R = _unit(rng, 240)
+    gw = Gateway(R, classes, backend="jnp", mutable=True,
+                 auto_compact_at=None)
+    live = {i: R[i] for i in range(len(R))}
+    q = _unit(rng, 10)
+
+    def check(post_bump):
+        t = gw.join("gold", q)
+        if post_bump:
+            assert t.meta["cache_hits"] == 0      # bump invalidated all
+        np.testing.assert_array_equal(t.counts, _shadow_counts(live, q, EPS))
+        t2 = gw.join("gold", q)                   # replay: all hits now
+        assert t2.meta["cache_hits"] == len(q)
+        np.testing.assert_array_equal(t2.counts, t.counts)
+        gw.join("bulk", q)                        # approx route stays live
+
+    check(post_bump=False)
+    wv = gw.world_version
+    ops = rng.choice(np.array(["insert", "delete", "compact"]),
+                     size=8, p=[0.5, 0.35, 0.15])
+    for op in ops:
+        if op == "insert":
+            rows = _unit(rng, int(rng.integers(1, 16)))
+            live.update(zip(map(int, gw.insert(rows)), rows))
+        elif op == "delete":
+            pool = np.fromiter(live, np.int64)
+            ids = rng.choice(pool, size=4, replace=False)
+            gw.delete(ids)
+            for i in ids:
+                live.pop(int(i))
+        else:
+            gw.compact()
+        assert gw.world_version == wv + 1
+        wv = gw.world_version
+        check(post_bump=True)
+    assert wv == len(ops)
+
+
+def test_mutation_flushes_pending_requests():
+    """A request admitted before a mutation completes against the
+    pre-mutation world: insert() flushes it first, and its counts match
+    the shadow oracle at SUBMIT time."""
+    rng = np.random.default_rng(7)
+    R, gw = _gateway(rng, classes=[TenantClass("gold", eps=EPS)],
+                     mutable=True, auto_compact_at=None)
+    live = {i: R[i] for i in range(len(R))}
+    q = _unit(rng, 6)
+    t = gw.submit("gold", q)               # sub-bucket: stays pending
+    assert not t.done
+    want = _shadow_counts(live, q, EPS)
+    rows = _unit(rng, 8)
+    live.update(zip(map(int, gw.insert(rows)), rows))
+    assert t.done                           # the mutation drained it
+    np.testing.assert_array_equal(t.counts, want)
+
+
+def test_result_cache_unit():
+    c = ResultCache(capacity=3)
+    c.note_world(0)
+    c.put(("t", b"a", 0.45, 0), 3)
+    assert c.get(("t", b"a", 0.45, 0)) == 3 and c.hits == 1
+    assert c.get(("t", b"b", 0.45, 0)) is None and c.misses == 1
+    for k in (b"b", b"c", b"d"):
+        c.put(("t", k, 0.45, 0), 1)
+    assert len(c) == 3                      # LRU bound
+    c.note_world(1)
+    assert len(c) == 0                      # generation cleared
+    h1, h2 = fingerprint_rows(np.eye(2, 4, dtype=np.float32))
+    assert h1 != h2 and isinstance(h1, bytes)
+
+
+# --------------------------------------------------- coalescer contract
+def test_coalescer_never_splits_requests():
+    co = Coalescer()
+    g = ("t", 0.45)
+    for n in (5, 4, 4):
+        rows = np.zeros((n, 3), np.float32)
+        co.add(g, PendingRows(ticket=None, rows=rows,
+                              positions=np.arange(n), hashes=[b""] * n))
+    Q, segs = co.take(g, max_rows=8)
+    assert len(Q) == 5 and len(segs) == 1   # 5+4 would split the budget
+    Q, segs = co.take(g, max_rows=8)
+    assert len(Q) == 8 and len(segs) == 2   # both 4s fit whole
+    assert (segs[0].start, segs[0].stop, segs[1].start) == (0, 4, 4)
+    assert co.take(g, max_rows=8) == (None, [])
+
+
+# ------------------------------------------------------- adaptive depth
+def test_depth_controller_aimd():
+    dc = DepthController(depth=2, max_depth=4, slo_ms=100.0)
+    assert dc.update(150.0) == 1            # miss: shed immediately
+    assert dc.update(150.0) == 0
+    assert dc.update(150.0) == 0            # floor
+    for _ in range(DepthController.GROW_AFTER):
+        d = dc.update(10.0)
+    assert d == 1                           # sustained headroom: +1
+    assert dc.update(60.0) == 1             # in-band resets the streak
+    dc2 = DepthController(depth=2, max_depth=4, slo_ms=None)
+    assert dc2.update(1e9) == 2             # no SLO: pinned
+
+
+def test_gateway_depth_adapts_to_slo():
+    rng = np.random.default_rng(8)
+    tight = [TenantClass("t", eps=EPS, slo_ms=1e-6, depth=2, max_depth=4)]
+    R, gw = _gateway(rng, classes=tight)
+    for _ in range(3):
+        gw.join("t", _unit(rng, 5))
+    rep = gw.report()["tenants"]["t"]
+    assert rep["groups"][str(EPS)]["depth"] == 0      # shed to floor
+    assert rep["metrics"]["slo_misses"] >= 1
+
+    loose = [TenantClass("t", eps=EPS, slo_ms=1e9, depth=0, max_depth=3)]
+    R, gw = _gateway(rng, classes=loose)
+    for _ in range(3 * DepthController.GROW_AFTER + 1):
+        gw.join("t", _unit(rng, 5))
+    assert gw.report()["tenants"]["t"]["groups"][str(EPS)]["depth"] == 3
+
+
+# --------------------------------------------------- contract/validation
+def test_validation_errors():
+    rng = np.random.default_rng(9)
+    R = _unit(rng, 64)
+    with pytest.raises(ValueError, match="at least one"):
+        Gateway(R, [])
+    with pytest.raises(ValueError, match="duplicate"):
+        Gateway(R, [TenantClass("a", eps=EPS), TenantClass("a", eps=0.5)])
+    with pytest.raises(ValueError, match="mutable"):
+        Gateway(R, [TenantClass("a", eps=EPS, verify="learned")],
+                mutable=True)
+    with pytest.raises(ValueError, match="share its params"):
+        Gateway(R, [TenantClass("a", eps=EPS, verify="lsh",
+                                verify_params=dict(k=8, l=4)),
+                    TenantClass("b", eps=EPS, verify="lsh",
+                                verify_params=dict(k=10, l=4))],
+                mutable=True)
+    gw = Gateway(R, [TenantClass("a", eps=EPS)])
+    with pytest.raises(ValueError, match="unknown tenant"):
+        gw.submit("nope", _unit(rng, 2))
+    with pytest.raises(ValueError, match="expected"):
+        gw.submit("a", np.zeros((2, DIM + 1), np.float32))
+    with pytest.raises(ValueError, match="must be > 0"):
+        gw.submit("a", _unit(rng, 2), eps=-0.1)
+    with pytest.raises(RuntimeError, match="frozen"):
+        gw.insert(_unit(rng, 2))
+    t = gw.submit("a", _unit(rng, 2))
+    with pytest.raises(RuntimeError, match="flush"):
+        t.counts
+    gw.flush()
+    assert t.counts.shape == (2,)
+    with pytest.raises(ValueError, match="recall_target"):
+        TenantClass("x", eps=EPS, recall_target=1.5)
+    with pytest.raises(ValueError, match="max_depth"):
+        TenantClass("x", eps=EPS, depth=3, max_depth=1)
+
+
+def test_tenant_class_auto_verify_resolution():
+    assert TenantClass("a", eps=1.0).resolved_verify() == "exact"
+    assert TenantClass("a", eps=1.0,
+                       recall_target=0.97).resolved_verify() == "ivfpq"
+    assert TenantClass("a", eps=1.0,
+                       recall_target=0.8).resolved_verify() == "lsh"
+    assert TenantClass("a", eps=1.0, recall_target=0.8,
+                       verify="exact").resolved_verify() == "exact"
+
+
+def test_report_shape():
+    rng = np.random.default_rng(10)
+    R, gw = _gateway(rng)
+    gw.join("gold", _unit(rng, 4))
+    rep = gw.report()
+    assert set(rep) == {"world_version", "mutable", "eps_quantum",
+                        "max_batch_rows", "n_index", "cache", "tenants"}
+    assert set(rep["tenants"]) == {"gold", "silver"}
+    trow = rep["tenants"]["gold"]
+    assert trow["verify"] == "exact"
+    m = trow["metrics"]
+    for key in ("admitted_requests", "admitted_queries", "served_requests",
+                "cache_hit_queries", "cache_miss_queries", "batches",
+                "coalesced_batches", "coalesced_requests", "slo_misses",
+                "p50_ms", "p95_ms"):
+        assert key in m
+    assert m["p50_ms"] is not None
+    import json
+    json.dumps(rep)                         # report is serializable
