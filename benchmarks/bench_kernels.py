@@ -1,8 +1,19 @@
-"""Kernel micro-benchmarks: the fused range_count + estimator-MLP paths.
+"""Kernel micro-benchmarks: the fused range_count + estimator-MLP paths,
+plus the ADC-rank formulations (DESIGN.md §15).
 
 On this CPU container we time the XLA:CPU jnp path (production fast path
 off-TPU) and validate the Pallas kernel in interpret mode; the TPU roofline
-numbers for the same shapes come from the dry-run (§Roofline)."""
+numbers for the same shapes come from the dry-run (§Roofline).
+
+`kernel/adc_rank` (the fused-formulation jnp path: shared per-segment
+LUT accumulate + top_k) is timed against `kernel/adc_chain` (the old
+transpose + take_along_axis + sum + top_k chain it replaced in
+`core/probe._ivfpq_block`) on the same inputs — the BENCH_<n>
+acceptance pair.  `kernel/range_count` additionally emits a
+``block_r=1024`` row: the per-eps masked accumulate shrank the kernel's
+largest temporary from the [Bq, Br, eps_chunk] bool broadcast (256 x
+512 x 8 = 1 MB at the old maximum tile) to one [Bq, Br] bool per eps
+step, which is what lets the R tile double."""
 from __future__ import annotations
 
 import time
@@ -46,6 +57,21 @@ def run() -> list:
         emit(f"kernel/range_count/{nq}x{nr}x{d}", dt * 1e6,
              f"gflops={flops/dt/1e9:.1f}")
 
+    # the widened R tile (DESIGN.md §15): per-eps masked accumulate ->
+    # block_r=1024 is a legal tile; validate it bit-exact in interpret
+    # mode (the note lines record the working-set change; '#' lines are
+    # ignored by run.py's parse_rows)
+    got = np.asarray(ops.range_count_hist(q[:64], r[:1024], eps,
+                                          metric="cosine",
+                                          backend="pallas", block_q=32,
+                                          block_r=1024, eps_chunk=4))
+    want = np.asarray(ref.range_count_hist(q[:64], r[:1024], eps, "cosine"))
+    assert (got == want).all()
+    print("# note: range_count eps working set: [256,512,8] bool broadcast "
+          "(1.0 MB, capped block_r at 512) -> one [256,1024] bool per eps "
+          "step (0.25 MB at block_r=1024)")
+    print("# note: block_r 512 -> 1024 verified bit-exact (interpret) above")
+
     # estimator MLP
     widths = (512, 512, 256, 128)
     dims = (301,) + widths + (1,)
@@ -65,6 +91,45 @@ def run() -> list:
     rows.append({"kernel": "fused_mlp", "n": 8192, "cpu_s": dt,
                  "flops": flops, "cpu_gflops": flops / dt / 1e9})
     emit("kernel/fused_mlp/8192", dt * 1e6, f"gflops={flops/dt/1e9:.1f}")
+
+    # ADC ranking: fused formulation (jnp path of kernels/adc_rank.py,
+    # what _ivfpq_block now runs) vs the old transpose+take_along_axis+
+    # top_k chain it replaced — same inputs, both jit'd, median of REPS
+    import jax
+
+    b, dim, m_seg, n_codes, C, n_cand = 256, 128, 8, 4096, 400, 200
+    qv = rng.normal(size=(b, dim)).astype(np.float32)
+    codebooks = rng.normal(size=(m_seg, 256, dim // m_seg)).astype(np.float32)
+    codes = rng.integers(0, 256, size=(n_codes, m_seg)).astype(np.uint8)
+    cand = rng.integers(-1, n_codes, size=(b, C)).astype(np.int32)
+    variants = {
+        "adc_rank": jax.jit(lambda *a: ops.adc_rank(*a, n_cand=n_cand,
+                                                    backend="jnp")),
+        "adc_chain": jax.jit(lambda *a: ops.adc_rank(*a, n_cand=n_cand,
+                                                     backend="ref")),
+    }
+    reps, times = 7, {}
+    for name, fn in variants.items():
+        np.asarray(fn(qv, codebooks, cand, codes))      # warm/compile
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            np.asarray(fn(qv, codebooks, cand, codes))
+            samples.append(time.perf_counter() - t0)
+        times[name] = float(np.median(samples))
+    ids = {name: np.asarray(fn(qv, codebooks, cand, codes))
+           for name, fn in variants.items()}
+    for row in range(b):                                # same sets, always
+        assert set(ids["adc_rank"][row]) == set(ids["adc_chain"][row])
+    speedup = times["adc_chain"] / times["adc_rank"]
+    for name in variants:
+        derived = (f"speedup_vs_chain={speedup:.3f}" if name == "adc_rank"
+                   else f"b={b},C={C},n_cand={n_cand}")
+        emit(f"kernel/{name}/{b}x{C}x{n_cand}", times[name] * 1e6, derived)
+        rows.append({"kernel": name, "b": b, "C": C, "n_cand": n_cand,
+                     "cpu_s": times[name],
+                     "speedup_vs_chain": (speedup if name == "adc_rank"
+                                          else None)})
     save_json("kernels", rows)
     return rows
 

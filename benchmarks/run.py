@@ -9,6 +9,13 @@ experiments/bench/*.json.
 (suite -> {row name -> us_per_call}, next free n) so the perf trajectory
 is tracked across PRs; ``--snapshot-out PATH`` pins an explicit path
 instead (the CI smoke run writes to a temp file).
+
+``--compare BENCH_<n>.json`` diffs this run against a committed
+snapshot: per-row deltas for every row present in BOTH (rows only on
+one side are listed as informational), and a non-zero exit if any
+previously-present row regressed by more than ``REGRESSION_PCT`` —
+the CI perf gate (scripts/ci.sh runs the kernels smoke against the
+latest committed snapshot).
 """
 from __future__ import annotations
 
@@ -21,6 +28,11 @@ import time
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
+
+#: --compare fails on any common row slower than baseline by more than
+#: this (smoke-scale timings are noisy; 25% is well past jitter for the
+#: kernel rows the CI gate compares)
+REGRESSION_PCT = 25.0
 
 
 class _Tee(io.TextIOBase):
@@ -56,6 +68,36 @@ def parse_rows(text: str) -> dict[str, float]:
     return rows
 
 
+def compare_snapshots(baseline: dict, current: dict[str, dict[str, float]],
+                      *, threshold_pct: float = REGRESSION_PCT,
+                      out=None) -> list[str]:
+    """Diff `current` (suite -> {row: us}) against a loaded `baseline`
+    snapshot payload.  Prints one line per common row (old, new, delta%)
+    and informational lines for rows present on only one side; returns
+    the rows regressed past `threshold_pct` (empty == gate passes)."""
+    out = sys.stdout if out is None else out
+    base_suites = baseline.get("suites", baseline)
+    regressed: list[str] = []
+    for suite in sorted(set(base_suites) & set(current)):
+        for row in sorted(set(base_suites[suite]) & set(current[suite])):
+            old, new = base_suites[suite][row], current[suite][row]
+            delta = (new - old) / old * 100.0 if old else float("inf")
+            flag = ""
+            if delta > threshold_pct:
+                regressed.append(row)
+                flag = f"  REGRESSION (> {threshold_pct:.0f}%)"
+            print(f"# compare {row}: {old:.1f} -> {new:.1f} us "
+                  f"({delta:+.1f}%){flag}", file=out, flush=True)
+        for row in sorted(set(base_suites[suite]) - set(current[suite])):
+            print(f"# compare {row}: in baseline only (not run)", file=out)
+        for row in sorted(set(current[suite]) - set(base_suites[suite])):
+            print(f"# compare {row}: new row ({current[suite][row]:.1f} us)",
+                  file=out)
+    for suite in sorted(set(current) - set(base_suites)):
+        print(f"# compare suite {suite}: not in baseline", file=out)
+    return regressed
+
+
 def next_snapshot_path(root: Path) -> Path:
     """BENCH_<n>.json with the next n after the largest existing one."""
     ns = [int(m.group(1)) for p in root.glob("BENCH_*.json")
@@ -67,22 +109,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: tab3,tab4,tab5,tab6,fig2,fig3,fig45,"
-                         "kernels,perf,xjoin,delta,serve")
+                         "kernels,perf,xjoin,ring,delta,serve")
     ap.add_argument("--snapshot", action="store_true",
                     help="write suite->us_per_call to the next free "
                          "top-level BENCH_<n>.json (perf trajectory "
                          "across PRs)")
     ap.add_argument("--snapshot-out", default=None,
                     help="explicit snapshot path (implies --snapshot)")
+    ap.add_argument("--compare", default=None, metavar="BENCH_N.json",
+                    help="diff this run's rows against a committed "
+                         "snapshot; exit 1 on any common row regressing "
+                         f"by more than {REGRESSION_PCT:.0f}%%")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only != "all" else None
     snapshot = args.snapshot or args.snapshot_out is not None
+    capture = snapshot or args.compare is not None
 
     from benchmarks import (bench_atcs, bench_delta, bench_e2e,
                             bench_filter, bench_generalization,
                             bench_kernels, bench_negative_portion,
-                            bench_perf_xjoin, bench_probe, bench_serve,
-                            bench_tradeoff, bench_xdt)
+                            bench_perf_xjoin, bench_probe, bench_ring,
+                            bench_serve, bench_tradeoff, bench_xdt)
     from benchmarks.common import SCALE
     suites = [
         ("tab3", "Table III negative-query portions", bench_negative_portion.run),
@@ -96,6 +143,8 @@ def main() -> None:
         ("perf", "Perf: XJoin paper-faithful vs optimized", bench_perf_xjoin.run),
         ("xjoin", "XJoin probe placement: host vs device, per topology",
          bench_probe.run),
+        ("ring", "Ring sweep schedule: overlapped vs serial, per r_shards",
+         bench_ring.run),
         ("delta", "Dynamic R: query cost vs delta occupancy",
          bench_delta.run),
         ("serve", "Serving gateway: coalesced vs single-stream",
@@ -107,7 +156,7 @@ def main() -> None:
         if want is not None and key not in want:
             continue
         print(f"# === {key}: {title} ===", flush=True)
-        tee = _Tee(sys.stdout) if snapshot else None
+        tee = _Tee(sys.stdout) if capture else None
         t0 = time.time()
         try:
             if tee is not None:
@@ -131,6 +180,18 @@ def main() -> None:
         payload = {"scale": SCALE, "suites": captured}
         path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
         print(f"# snapshot -> {path}", flush=True)
+
+    if args.compare is not None:
+        baseline = json.loads(Path(args.compare).read_text())
+        print(f"# compare vs {args.compare} "
+              f"(baseline scale={baseline.get('scale', '?')})", flush=True)
+        regressed = compare_snapshots(baseline, captured)
+        if regressed:
+            print(f"# compare FAILED: {len(regressed)} row(s) regressed "
+                  f"> {REGRESSION_PCT:.0f}%: {', '.join(regressed)}",
+                  file=sys.stderr, flush=True)
+            sys.exit(1)
+        print("# compare OK", flush=True)
 
 
 if __name__ == '__main__':

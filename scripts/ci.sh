@@ -150,3 +150,19 @@ rows = snap["suites"].get("kernels", {})
 assert rows, f"smoke snapshot captured no kernel rows: {snap}"
 print(f"snapshot OK ({len(rows)} rows, scale={snap['scale']})")
 EOF
+
+# perf gate: diff the smoke kernel rows against the latest committed
+# BENCH_<n>.json (kernel shapes are scale-independent, so smoke-vs-
+# committed is apples-to-apples); >25% regression on any common row
+# fails the build (benchmarks/run.py --compare)
+echo "== bench compare (perf gate) =="
+latest=$(ls BENCH_*.json 2>/dev/null | sort -V | tail -1)
+if [ -n "$latest" ]; then
+    REPRO_BENCH_SCALE=small REPRO_BENCH_OUT="$snap_dir" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.run --only kernels --compare "$latest" \
+        | grep "^# compare" || { echo "bench compare FAILED"; exit 1; }
+    echo "bench compare OK (vs $latest)"
+else
+    echo "no committed BENCH_*.json yet - compare skipped"
+fi

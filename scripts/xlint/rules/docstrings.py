@@ -25,7 +25,10 @@ CHECKED = (
     "src/repro/core/probe.py",
     "src/repro/core/topology.py",
     "src/repro/core/xjoin.py",
+    "src/repro/kernels/adc_rank.py",
+    "src/repro/kernels/lsh_gather.py",
     "src/repro/launch/serve.py",
+    "src/repro/launch/xla_flags.py",
 )
 
 

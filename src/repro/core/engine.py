@@ -56,6 +56,14 @@ This module is the execution layer that makes that true:
 Backend matrix (DESIGN.md §2): per-shard compute is the Pallas kernel on
 TPU ("pallas"), the blocked-jnp path elsewhere ("jnp"/"auto"), or the
 unblocked oracle ("ref" — no padding, used as the bit-for-bit reference).
+The backend also selects the probe-side kernels (DESIGN.md §15):
+`engine.backend` threads into the placed probe programs, which dispatch
+the LSH bucket gather and IVF-PQ ADC ranking through
+`kernels/lsh_gather.py` / `kernels/adc_rank.py` under "pallas" and
+their bit-identical jnp formulations otherwise.  Every compiled probe
+program is a module-level `lru_cache` registered here via
+`register_program_cache`, so `clear_program_cache()` evicts the whole
+backend-keyed matrix at once.
 """
 from __future__ import annotations
 
@@ -586,6 +594,13 @@ class JoinEngine:
             mesh, self.topology.q_spec(data_axis))
         self._upload_R(R)
         self._filter_progs: dict = {}
+        #: per-batch staging constants (DESIGN.md §5): streamed batches
+        #: re-stage the same radius scalar and — on unfiltered plans —
+        #: the same all-positive mask every submit; both depend only on
+        #: (value, shape bucket), so one upload serves the whole stream.
+        #: Bounded: distinct radii / shape buckets per engine are few.
+        self._eps_scalar_cache: dict = {}
+        self._allpos_cache: dict = {}
         # ---- dynamic-R state (DESIGN.md §13) ----------------------------
         #: compact automatically once delta_frac reaches this fraction of
         #: |R| (None = manual compaction only; JoinPlan.mutable sets it)
@@ -963,10 +978,30 @@ class JoinEngine:
         t0 = time.perf_counter()
         qp = self._pad_q(st.Q)
         st.qdev = self._put_q(qp)
-        st.eps_dev = jnp.asarray(st.eps, jnp.float32)
+        st.eps_dev = self._eps_scalar_cache.get(st.eps)
+        if st.eps_dev is None:
+            if len(self._eps_scalar_cache) > 64:
+                self._eps_scalar_cache.clear()
+            st.eps_dev = jnp.asarray(st.eps, jnp.float32)
+            self._eps_scalar_cache[st.eps] = st.eps_dev
         if predict is None and verdicts is None:
-            verdicts = np.ones((st.n,), bool)   # no filter: verify everything
-        if verdicts is not None:
+            # no filter: verify everything — the all-positive mask and its
+            # count depend only on (padded rows, batch rows), so the
+            # stream reuses one device-resident pair per shape bucket
+            cached = self._allpos_cache.get((len(qp), st.n))
+            if cached is None:
+                if len(self._allpos_cache) > 64:
+                    self._allpos_cache.clear()
+                pos_host = np.zeros((len(qp),), bool)
+                pos_host[:st.n] = True
+                cached = ((jax.device_put(pos_host, self._q_sharding)
+                           if self._q_sharding is not None
+                           else jnp.asarray(pos_host)),
+                          jnp.asarray(st.n, jnp.int32))
+                self._allpos_cache[(len(qp), st.n)] = cached
+            st.pos_dev, st.n_pos_dev = cached
+            st.n_pos = st.n
+        elif verdicts is not None:
             pos_host = np.zeros((len(qp),), bool)
             pos_host[:st.n] = np.asarray(verdicts, bool)
             st.n_pos = int(pos_host.sum())

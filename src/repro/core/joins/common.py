@@ -109,15 +109,64 @@ def _verify_block_impl(R, q, cand, eps, *, metric, tomb=None):
     return jnp.sum(valid & (d <= eps), axis=1, dtype=jnp.int32)
 
 
+#: candidate-axis tile of the live-chunked verify below: the lcm of the
+#: probe capacity quantum (engine.py `_stage_probe`) and the q block, so
+#: typical LSH capacities (l * n_probes * cap) pad by < one tile
+_LIVE_CHUNK = 64
+
+
+def _verify_block_live(R, q, cand, eps, *, metric, tomb=None,
+                       chunk=_LIVE_CHUNK):
+    """`_verify_block_impl` with cost scaled to LIVE candidates, not probe
+    capacity (DESIGN.md §15): multiprobe candidate lists are mostly -1
+    padding (empty buckets, dedup blanks), yet the R-row gather — the
+    verify's dominant cost — runs over the full width in the oracle form.
+    Sorting each row DESCENDING packs live ids to the front, so a
+    fori_loop with a traced trip count of ceil(max_live / chunk) gathers
+    only chunks that contain a live id.  Counts stay bit-identical to the
+    oracle: skipped chunks are all-pad (exactly zero contribution), each
+    surviving (q, id) pair's distance is the same f32 dot reduced over the
+    same axis, and the int32 partial sums add associatively."""
+    bq, C = cand.shape
+    cs = jnp.sort(cand, axis=1)[:, ::-1]
+    dup = jnp.concatenate([jnp.zeros((bq, 1), bool),
+                           cs[:, 1:] == cs[:, :-1]], axis=1)
+    valid = (cs >= 0) & ~dup
+    if tomb is not None:
+        valid &= tomb[jnp.maximum(cs, 0)] == 0
+    pad = (-C) % chunk
+    if pad:
+        cs = jnp.pad(cs, ((0, 0), (0, pad)), constant_values=-1)
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    n_live = jnp.max(jnp.sum(cs >= 0, axis=1))      # traced scalar bound
+
+    def body(i, acc):
+        c_sl = jax.lax.dynamic_slice_in_dim(cs, i * chunk, chunk, 1)
+        v_sl = jax.lax.dynamic_slice_in_dim(valid, i * chunk, chunk, 1)
+        x = R[jnp.maximum(c_sl, 0)]                  # [bq, chunk, d]
+        dots = jnp.einsum("qcd,qd->qc", x.astype(jnp.float32),
+                          q.astype(jnp.float32))
+        if metric == "cosine":
+            d = 1.0 - dots
+        else:
+            d = jnp.sqrt(jnp.maximum(2.0 - 2.0 * dots, 0.0))
+        return acc + jnp.sum(v_sl & (d <= eps), axis=1, dtype=jnp.int32)
+
+    return jax.lax.fori_loop(0, (n_live + chunk - 1) // chunk, body,
+                             jnp.zeros((bq,), jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "block"))
 def _verify_blocks(R, q, cand, eps, tomb=None, *, metric, block):
     """lax.map over q blocks — ONE device program for the whole candidate
-    set (q rows % block == 0), peak memory still O(block * C * d)."""
+    set (q rows % block == 0), peak memory still O(block * C * d); each
+    block runs the live-chunked form above (its max-live bound is per q
+    block, so dense rows never widen a sparse block's gather)."""
     nb = q.shape[0] // block
     qb = q.reshape(nb, block, q.shape[1])
     cb = cand.reshape(nb, block, cand.shape[1])
     out = jax.lax.map(
-        lambda xc: _verify_block_impl(R, xc[0], xc[1], eps, metric=metric,
+        lambda xc: _verify_block_live(R, xc[0], xc[1], eps, metric=metric,
                                       tomb=tomb),
         (qb, cb))
     return out.reshape(-1)

@@ -63,6 +63,7 @@ from repro.core.engine import register_program_cache
 from repro.core.joins.common import (_verify_block_impl, _verify_blocks,
                                      localized_shard_verify)
 from repro.core.topology import _data_size, _shard_mapped
+from repro.kernels import ops
 
 # ====================================================== shared LSH math
 # Bucket combination runs in int32 with two's-complement wraparound on
@@ -175,29 +176,28 @@ def _sq_dists(a, b):
 
 
 def _ivfpq_block(qb, centroids, lists, codes, codebooks, *, n_probe: int,
-                 n_cand: int):
+                 n_cand: int, backend: str = "jnp"):
     """One query tile: coarse-quantize, gather the probed lists, ADC-rank
-    the pool, keep the best n_cand ids. int32 [b, n_cand] (-1 padded)."""
+    the pool, keep the best n_cand ids. int32 [b, n_cand] (-1 padded).
+
+    The ADC ranking dispatches through `ops.adc_rank`
+    (kernels/adc_rank.py): the fused flash-style kernel under
+    backend="pallas", the bit-identical flat-LUT jnp formulation for
+    every other backend — host probing and "ref"-backend engines take
+    the jnp path too, so host/device candidate parity holds across the
+    whole backend matrix."""
     b = qb.shape[0]
     dc = _sq_dists(qb, centroids)
     _, probed = jax.lax.top_k(-dc, n_probe)                # [b, P]
     cand = lists[probed].reshape(b, -1)                    # [b, P*cap]
-    m, _, seg = codebooks.shape
-    qseg = qb.reshape(b, m, seg)
-    tables = (jnp.sum(qseg * qseg, -1)[:, :, None]
-              - 2.0 * jnp.einsum("bms,mcs->bmc", qseg, codebooks)
-              + jnp.sum(codebooks * codebooks, -1)[None])  # [b, m, 256]
-    code_blk = codes[jnp.maximum(cand, 0)].astype(jnp.int32)   # [b, C, m]
-    adc = jnp.take_along_axis(jnp.transpose(tables, (0, 2, 1)),
-                              code_blk, axis=1).sum(axis=2)
-    adc = jnp.where(cand < 0, jnp.inf, adc)
-    _, top = jax.lax.top_k(-adc, n_cand)
-    return jnp.take_along_axis(cand, top, axis=1)
+    be = "pallas" if backend == "pallas" else "jnp"
+    return ops.adc_rank(qb, codebooks, cand, codes, n_cand=n_cand,
+                        backend=be)
 
 
-@functools.partial(jax.jit, static_argnames=("n_probe", "n_cand"))
+@functools.partial(jax.jit, static_argnames=("n_probe", "n_cand", "backend"))
 def _ivfpq_probe_fn(q, centroids, lists, codes, codebooks, *, n_probe,
-                    n_cand):
+                    n_cand, backend="jnp"):
     # tile size divides the (static) row count exactly: the full ADC tile
     # when rows are a 64-multiple (the host wrapper and the engine's
     # default capacity buckets), its gcd otherwise (small block_q engines
@@ -207,7 +207,8 @@ def _ivfpq_probe_fn(q, centroids, lists, codes, codebooks, *, n_probe,
     qb = q.reshape(nb, blk, q.shape[1])
     out = jax.lax.map(
         lambda x: _ivfpq_block(x, centroids, lists, codes, codebooks,
-                               n_probe=n_probe, n_cand=n_cand), qb)
+                               n_probe=n_probe, n_cand=n_cand,
+                               backend=backend), qb)
     return out.reshape(nb * blk, -1)
 
 
@@ -251,34 +252,39 @@ def _gather_program(mesh, data_axis):
 
 @register_program_cache
 @functools.lru_cache(maxsize=128)
-def _lsh_probe_program(metric, W, n_probes, n_buckets):
+def _lsh_probe_program(metric, W, n_probes, n_buckets, backend="jnp"):
     """Compiled replicated LSH probe `(qpos, proj, bias, salt, tables) ->
     cand [q, l*p*cap]` — tables are runtime args, so every engine with
-    this geometry shares one executable."""
+    this geometry shares one executable.  The member-table gather +
+    multiprobe dedup runs through `ops.lsh_bucket_gather`
+    (kernels/lsh_gather.py): the fused Pallas kernel under
+    backend="pallas", the bit-identical direct-gather formulation
+    otherwise."""
     def run(qpos, proj, bias, salt, tables):
         codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
         pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
                              n_buckets=n_buckets)
-        cand = tables[jnp.arange(tables.shape[0])[None, :, None], pb]
-        return cand.reshape(qpos.shape[0], -1)
+        return ops.lsh_bucket_gather(tables, pb, backend=backend)
 
     return jax.jit(run)
 
 
 @register_program_cache
 @functools.lru_cache(maxsize=128)
-def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets):
+def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets,
+                            backend="jnp"):
     """Compiled ring LSH probe: each device probes its OWN per-shard
     member table (`_shard_lsh_tables` row-partition), producing the
     candidate axis sharded over `r` — ids stay local to the R shard that
-    will verify them, and neither tables nor candidates are gathered."""
+    will verify them, and neither tables nor candidates are gathered.
+    The per-shard gather dispatches through `ops.lsh_bucket_gather` like
+    the replicated program (same kernel, per-shard tables)."""
     def shard_fn(qpos, proj, bias, salt, tables):
         codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
         pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
                              n_buckets=n_buckets)
-        t = tables[0]                        # this device's shard table
-        cand = t[jnp.arange(t.shape[0])[None, :, None], pb]
-        return cand.reshape(qpos.shape[0], -1)
+        # tables[0]: this device's shard table
+        return ops.lsh_bucket_gather(tables[0], pb, backend=backend)
 
     mapped = _shard_mapped(shard_fn, mesh,
                            in_specs=(P(), P(), P(), P(), P(r_axis)),
@@ -477,7 +483,7 @@ class LSHProbe:
             tables = _device_put(tabs, mesh, engine.topology.probe_spec())
             prog = _lsh_ring_probe_program(
                 mesh, engine.topology.r_axis, j.metric, float(j.W),
-                int(j.n_probes), int(j.n_buckets))
+                int(j.n_probes), int(j.n_buckets), engine.backend)
             table_bytes = (tabs.nbytes // shards + j.proj.nbytes
                            + j.bias.nbytes + salt32.nbytes)
             cand_width = shards * tabs.shape[1] * j.n_probes * tabs.shape[3]
@@ -485,7 +491,8 @@ class LSHProbe:
         else:
             tables = _device_put(np.asarray(j.tables, np.int32), mesh)
             prog = _lsh_probe_program(j.metric, float(j.W),
-                                      int(j.n_probes), int(j.n_buckets))
+                                      int(j.n_probes), int(j.n_buckets),
+                                      engine.backend)
             table_bytes = (j.tables.nbytes + j.proj.nbytes + j.bias.nbytes
                            + salt32.nbytes)
             cand_width = j.l * j.n_probes * j.tables.shape[2]
@@ -522,7 +529,8 @@ class IVFPQProbe:
 
         def prog(qpos, centroids, lists, codes, codebooks):
             return _ivfpq_probe_fn(qpos, centroids, lists, codes, codebooks,
-                                   n_probe=int(j.n_probe), n_cand=n_cand)
+                                   n_probe=int(j.n_probe), n_cand=n_cand,
+                                   backend=engine.backend)
 
         table_bytes = (j.centroids.nbytes + j.lists.nbytes + j.codes.nbytes
                        + j.codebooks.nbytes)

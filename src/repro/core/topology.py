@@ -311,6 +311,14 @@ class RingSharded(Topology):
 
     name = "ring"
     r_axis: str = "r"
+    #: overlapped sweep schedule (DESIGN.md §15): the next query block's
+    #: `ppermute` is issued BEFORE the current histogram step so the hop
+    #: hides behind compute, and the partial counts combine via a ring
+    #: reduce-scatter (r_size - 1 hops of one [q_local, m] int32 row)
+    #: instead of a [r_size, q_local, m] buffer + full psum + take.
+    #: int32 addition is associative, so counts stay bit-identical to
+    #: the serial formulation (`overlap=False`, kept for benchmarking).
+    overlap: bool = True
 
     def r_shards(self, mesh) -> int:
         """Size of the mesh's ``r`` axis."""
@@ -381,14 +389,59 @@ class RingSharded(Topology):
         `psum`'d over ``r`` and each device keeps its own block's total.
         Padding rows are counted and subtracted in closed form
         (`_subtract_pad_rows`) using the traced per-shard valid count, so
-        one static-shape program serves every shard."""
+        one static-shape program serves every shard.
+
+        Two schedules (DESIGN.md §15):
+
+        * `overlap=True` (default) — the next block's `ppermute` is
+          issued BEFORE the current `inner(...)` histogram and consumed
+          after it, so the hop transfers while the MXU sweeps (XLA's
+          latency-hiding scheduler overlaps an async collective with
+          independent compute; `launch.xla_flags` enables the same on
+          GPU).  Partial counts combine via a ring reduce-scatter:
+          each block's running sum rides the ring absorbing one
+          device's contribution per hop, r_size - 1 hops of a single
+          [q_local, m] int32 row — no [r_size, q_local, m] buffer, no
+          full-buffer `psum`, no final `take`, and 2(r_size - 1) total
+          collectives vs the serial schedule's r_size.
+        * `overlap=False` — the original serial formulation (histogram,
+          park the partial in a per-position buffer, rotate, `psum` at
+          the end), kept as the benchmark baseline.
+
+        Both accumulate the same int32 partials (addition over ints is
+        associative + commutative), so counts are bit-identical."""
         self.validate(mesh, data_axis)
         r_size = self.r_shards(mesh)
         inner = _per_shard_hist(backend, metric, block_q, block_r,
                                 eps_chunk, None)
         perm = [(i, (i + 1) % r_size) for i in range(r_size)]
 
-        def sweep(q, r_shard, eps, nrv):
+        def sweep_overlap(q, r_shard, eps, nrv):
+            n_pad = r_shard.shape[0] - nrv[0]
+            qc = q
+            parts = []
+            for k in range(r_size):
+                qn = (jax.lax.ppermute(qc, self.r_axis, perm)
+                      if k < r_size - 1 else None)     # start the hop...
+                # the block in hand is k hops from home: parts[k] is this
+                # shard's contribution to block (me - k)
+                parts.append(_subtract_pad_rows(inner(qc, r_shard, eps),
+                                                eps, n_pad, metric))
+                if qn is not None:
+                    qc = qn                            # ...consume it here
+            # ring reduce-scatter: block b's running sum starts one hop
+            # past home (device b+1, = this device's parts[1]) and rides
+            # the ring absorbing each host device's contribution; after
+            # r_size - 1 hops of one [q_local, m] row each, the carry on
+            # every device is its own block's total.  r_size == 1
+            # compiles to zero collectives.
+            carry = parts[1 % r_size]
+            for j in range(1, r_size):
+                carry = jax.lax.ppermute(carry, self.r_axis, perm)
+                carry = carry + parts[(j + 1) % r_size]
+            return carry
+
+        def sweep_serial(q, r_shard, eps, nrv):
             n_pad = r_shard.shape[0] - nrv[0]
             me = jax.lax.axis_index(self.r_axis)
             buf = jnp.zeros((r_size, q.shape[0], eps.shape[0]), jnp.int32)
@@ -403,6 +456,7 @@ class RingSharded(Topology):
             buf = jax.lax.psum(buf, self.r_axis)
             return jnp.take(buf, me, axis=0)
 
+        sweep = sweep_overlap if self.overlap else sweep_serial
         mapped = _shard_mapped(
             sweep, mesh,
             in_specs=(P((self.r_axis, data_axis)), P(self.r_axis), P(),

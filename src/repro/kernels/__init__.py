@@ -2,7 +2,12 @@
 #   range_count.py — fused tiled pairwise-distance + eps-histogram
 #                    (ground-truth targets + join verification)
 #   fused_mlp.py   — VMEM-resident estimator inference
-# ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+#   lsh_gather.py  — fused LSH bucket-gather + multiprobe dedup
+#                    (device probing, DESIGN.md §15)
+#   adc_rank.py    — flash-style fused IVF-PQ ADC ranking (LUT build +
+#                    code gather + accumulate + streaming top-k)
+# ops.py holds the jit'd public wrappers (incl. the platform-derived
+# interpret= policy); ref.py the pure-jnp oracles.
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

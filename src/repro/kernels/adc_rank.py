@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: flash-style fused IVF-PQ ADC ranking.
+
+The IVF-PQ device probe (core/probe.py `_ivfpq_block`) used to rank the
+candidate pool through a generic XLA chain: build the full ``[b, m,
+256]`` LUT tensor, ``transpose`` it, gather per-candidate codes with
+``take_along_axis``, reduce over segments, then ``top_k`` — four HBM
+round-trips over intermediates larger than the inputs.  This kernel
+fuses the whole pipeline into one VMEM residency per query tile, in the
+spirit of flash attention's "never materialize the big intermediate":
+
+  1. **LUT build** — per PQ segment ``mi`` the ``[Bb, 256]`` distance
+     table ``|q_mi|^2 - 2 q_mi . c + |c|^2`` is one MXU matmul against
+     the VMEM-resident codebook slice (`lut_segment`, shared verbatim
+     with the jnp path).
+  2. **code gather** — the candidates' PQ code rows stream out of the
+     VMEM-resident ``[n, m]`` code table via a ``fori_loop`` of dynamic
+     row slices (no gather primitive inside Pallas kernels).
+  3. **accumulate** — the per-segment LUT lookup is a one-hot matmul
+     over the 256 codewords (exact: products are value*1.0/value*0.0
+     and adding zeros is exact), accumulated in ascending segment order.
+  4. **streaming top-k** — ``n_cand`` rounds of masked argmin selection
+     with first-index tie-breaking, which reproduces `jax.lax.top_k`'s
+     documented tie order exactly (lower index first).
+
+Bit-identity contract: the jnp path (`adc_rank_jnp`) accumulates the
+same per-segment lookups in the same ascending order and selects with
+`jax.lax.top_k`, so pallas and jnp candidate ids are bit-identical by
+construction — including inf ties from ``-1`` padding lanes and
+duplicate ids from overlapping inverted lists.  The pre-existing
+transpose+take_along_axis+top_k chain survives as `adc_rank_chain` (the
+ops-level "ref" backend and the benchmark baseline); its segment
+reduction order is whatever XLA picks for ``.sum()``, so it is
+value-identical but not guaranteed bit-identical on ties.
+
+VMEM budget at the default ``block_b=8`` (C = n_probe*cap candidates,
+typically <= 512; m <= 16 segments; codes n*m uint8): codebooks
+m*256*seg f32 <= 1 MB, code table <= a few MB for bench-scale n, onehot
+``[Bb, C, 256]`` f32 = 8*512*256*4 = 4 MB, LUT slice 8*256*4 = 8 KB —
+inside the ~16 MB budget.  The kernel engages when the code table fits
+VMEM (the replicated-probe regime).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.range_count import default_interpret
+
+
+def lut_segment(q_mi: jax.Array, cb_mi: jax.Array) -> jax.Array:
+    """f32 [b, 256] ADC table for ONE PQ segment: ``|q|^2 - 2 q.c +
+    |c|^2`` with q_mi [b, seg], cb_mi [256, seg].  The single source of
+    truth for both the jnp path and the kernel body — identical
+    primitive sequence means identical bits."""
+    dots = jax.lax.dot_general(q_mi, cb_mi, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    return (jnp.sum(q_mi * q_mi, -1)[:, None] - 2.0 * dots
+            + jnp.sum(cb_mi * cb_mi, -1)[None, :])
+
+
+def adc_rank_chain(q: jax.Array, codebooks: jax.Array, cand: jax.Array,
+                   codes: jax.Array, *, n_cand: int) -> jax.Array:
+    """The pre-kernel XLA chain (benchmark baseline / ops-level "ref"):
+    full-LUT einsum, transpose, take_along_axis, sum, top_k.
+
+    q f32 [b, dim], codebooks f32 [m, 256, seg], cand int32 [b, C]
+    (-1 padded), codes uint8 [n, m].  Returns int32 [b, n_cand].
+    """
+    b = q.shape[0]
+    m, _, seg = codebooks.shape
+    qseg = q.reshape(b, m, seg)
+    tables = (jnp.sum(qseg * qseg, -1)[:, :, None]
+              - 2.0 * jnp.einsum("bms,mcs->bmc", qseg, codebooks)
+              + jnp.sum(codebooks * codebooks, -1)[None])
+    code_blk = codes[jnp.maximum(cand, 0)].astype(jnp.int32)
+    adc = jnp.take_along_axis(jnp.transpose(tables, (0, 2, 1)),
+                              code_blk, axis=1).sum(axis=2)
+    adc = jnp.where(cand < 0, jnp.inf, adc)
+    _, top = jax.lax.top_k(-adc, n_cand)
+    return jnp.take_along_axis(cand, top, axis=1)
+
+
+def adc_rank_jnp(q: jax.Array, codebooks: jax.Array, cand: jax.Array,
+                 codes: jax.Array, *, n_cand: int) -> jax.Array:
+    """Flat-LUT formulation: per-segment ``[b, 256]`` tables looked up
+    and accumulated in ascending segment order — no ``[b, m, 256]``
+    tensor, no transpose, no ``[b, C, m]`` gather intermediate.  Same
+    contract as `adc_rank_chain`; bit-identical to the pallas kernel by
+    construction (see module docstring)."""
+    b = q.shape[0]
+    m, _, seg = codebooks.shape
+    qseg = q.reshape(b, m, seg)
+    code_blk = codes[jnp.maximum(cand, 0)].astype(jnp.int32)   # [b, C, m]
+    adc = jnp.zeros(cand.shape, jnp.float32)
+    for mi in range(m):
+        lut = lut_segment(qseg[:, mi], codebooks[mi])           # [b, 256]
+        adc = adc + jnp.take_along_axis(lut, code_blk[:, :, mi], axis=1)
+    adc = jnp.where(cand < 0, jnp.inf, adc)
+    _, top = jax.lax.top_k(-adc, n_cand)
+    return jnp.take_along_axis(cand, top, axis=1)
+
+
+def _kernel(q_ref, cb_ref, cand_ref, codes_ref, out_ref, *, n_cand: int):
+    qseg = q_ref[...].astype(jnp.float32)         # [Bb, m, seg]
+    cbs = cb_ref[...].astype(jnp.float32)         # [m, 256, seg]
+    cand = cand_ref[...]                          # [Bb, C] int32
+    codes = codes_ref[...].astype(jnp.int32)      # [n, m]
+    bb, c = cand.shape
+    m = qseg.shape[1]
+    safe = jnp.maximum(cand, 0)
+
+    # (2) fused code gather: candidate rows stream out of the resident
+    # code table one dynamic row slice per (query, candidate) lane
+    def gather(t, acc):
+        bi, ci = t // c, t % c
+        row = jax.lax.dynamic_slice(codes, (safe[bi, ci], 0), (1, m))
+        return jax.lax.dynamic_update_slice(acc, row[None], (bi, ci, 0))
+
+    code_blk = jax.lax.fori_loop(0, bb * c, gather,
+                                 jnp.zeros((bb, c, m), jnp.int32))
+
+    # (1)+(3) per-segment LUT build + one-hot accumulate, ascending mi
+    adc = jnp.zeros((bb, c), jnp.float32)
+    for mi in range(m):
+        lut = lut_segment(qseg[:, mi], cbs[mi])                 # [Bb, 256]
+        onehot = (code_blk[:, :, mi][:, :, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (bb, c, 256), 2)
+                  ).astype(jnp.float32)
+        adc = adc + jax.lax.dot_general(
+            onehot, lut, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    adc = jnp.where(cand < 0, jnp.inf, adc)
+
+    # (4) streaming top-k: n_cand masked argmin rounds; first-index
+    # tie-break among NOT-yet-taken lanes == lax.top_k's stable order
+    def select(k, st):
+        taken, out_ids = st
+        masked = jnp.where(taken, jnp.inf, adc)
+        v = jnp.min(masked, axis=1, keepdims=True)
+        pick = (masked == v) & ~taken
+        j = jnp.argmax(pick, axis=1)                            # [Bb]
+        ids = jnp.take_along_axis(cand, j[:, None], axis=1)
+        out_ids = jax.lax.dynamic_update_slice(out_ids, ids, (0, k))
+        taken = taken | (jax.lax.broadcasted_iota(jnp.int32, (bb, c), 1)
+                         == j[:, None])
+        return taken, out_ids
+
+    _, out_ids = jax.lax.fori_loop(
+        0, n_cand, select,
+        (jnp.zeros((bb, c), bool), jnp.zeros((bb, n_cand), jnp.int32)))
+    out_ref[...] = out_ids
+
+
+@functools.partial(jax.jit, static_argnames=("n_cand", "block_b", "interpret"))
+def adc_rank_pallas(q: jax.Array, codebooks: jax.Array, cand: jax.Array,
+                    codes: jax.Array, *, n_cand: int, block_b: int = 8,
+                    interpret: bool | None = None) -> jax.Array:
+    """Padded-shape kernel entry: q rows must be a block_b multiple
+    (padding handled by ops.adc_rank).  Same contract as `adc_rank_jnp`,
+    bit-identical output.  `interpret=None` derives the mode from the
+    runtime platform (compiled on TPU, interpret elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, dim = q.shape
+    m, _, seg = codebooks.shape
+    n = codes.shape[0]
+    c = cand.shape[1]
+    assert b % block_b == 0 and m * seg == dim and n_cand <= c
+
+    kernel = functools.partial(_kernel, n_cand=n_cand)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, m, seg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, 256, seg), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_cand), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_cand), jnp.int32),
+        interpret=interpret,
+    )(q.reshape(b, m, seg), codebooks, cand, codes)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.range_count import default_interpret
+
 
 def _make_kernel(n_layers: int):
     def kernel(x_ref, *refs):
@@ -37,10 +39,14 @@ def _make_kernel(n_layers: int):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def mlp_forward_pallas(params, x: jax.Array, *, block_n: int = 256,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """params: tuple of (w [din,dout], b [1,dout]) pairs, final dout == 1.
     x: [n, d0] with n % block_n == 0. Returns f32 [n].
+    `interpret=None` derives the mode from the runtime platform
+    (compiled on TPU, interpret elsewhere).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, d0 = x.shape
     assert n % block_n == 0
     n_layers = len(params)

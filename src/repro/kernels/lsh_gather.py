@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused LSH bucket-gather + multiprobe dedup.
+
+Device-side LSH probing (core/probe.py, DESIGN.md §11) turns probe
+bucket ids into candidate ids by indexing the member tables:
+``cand[q, t, j] = tables[t, pb[q, t, j]]``.  As a plain XLA gather this
+materializes the full ``[q, l, n_probes]`` index tensor in HBM and
+re-reads the (multi-MB) member table per probe.  This kernel keeps one
+table's ``[B, cap]`` bucket matrix resident in VMEM for a whole grid
+column and emits the candidate block directly.
+
+Fused multiprobe **dedup**: `_lsh_multiprobe` pads its probe schedule by
+repeating the identity probe, so duplicate bucket ids within one
+(query, table) pair are common — every duplicate block is pure wasted
+verify bandwidth.  Probe j whose bucket id equals an earlier probe
+j' < j of the same pair emits an all ``-1`` block instead (``-1`` is the
+existing empty-slot sentinel), which preserves the candidate *set* and
+the verified counts exactly (verification already sort-dedups ids and
+masks ``-1``) while letting the verify stage skip the repeats.
+
+TPU formulation (no gather primitive inside Pallas kernels):
+  * grid ``(q_blocks, l)`` — per step the probe block ``[Bq, n_probes]``
+    and ONE table ``[B, cap]`` are VMEM-resident.
+  * the row gather is a one-hot MXU matmul: ``onehot[Bq, B] @ table[B,
+    cap]``.  int32 ids are split into 16-bit halves gathered as f32
+    (both halves < 2**16 are exact in f32; products are value*1.0 or
+    value*0.0 and adding zeros is exact), then recombined in int32 — the
+    result is bit-identical to a direct gather for every int32 id, not
+    just ids below the f32 24-bit window.
+  * dedup masks are plain VPU compares against the earlier probes of the
+    same block (the schedule length ``n_probes`` is static and small).
+
+VMEM budget: table ``B*cap`` int32 plus its two f32 half tables (3x) and
+the ``[Bq, B]`` f32 one-hot.  At the default ``block_q=128`` with
+B=8192, cap=16: 8192*16*4*3 = 1.5 MB + 128*8192*4 = 4 MB, comfortably
+inside the ~16 MB budget; the kernel engages when one table's buckets
+fit VMEM (the replicated-probe regime — exactly where the XLA gather
+was the bottleneck).
+
+The jnp path (`lsh_bucket_gather_jnp`) is the reference formulation:
+direct advanced-indexing gather + the same dedup mask.  Both paths
+consume and produce only integers, so they are bit-identical by
+construction — the device-probe parity tests compare them exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.range_count import default_interpret
+
+
+def lsh_probe_dup_mask(pb: jax.Array) -> jax.Array:
+    """bool [..., n_probes]: True where the probe's bucket id equals an
+    EARLIER probe of the same (query, table) pair — the blocks the fused
+    gather replaces with ``-1``.  Shared by the jnp path, the kernel
+    (loop form of the same compares), and the tests."""
+    n_probes = pb.shape[-1]
+    eq = pb[..., :, None] == pb[..., None, :]
+    earlier = jnp.tril(jnp.ones((n_probes, n_probes), bool), k=-1)
+    return jnp.any(eq & earlier, axis=-1)
+
+
+def lsh_bucket_gather_jnp(tables: jax.Array, pb: jax.Array) -> jax.Array:
+    """Reference formulation: XLA gather + dedup mask.
+
+    tables int32 [l, B, cap] (-1 padded buckets), pb int32
+    [q, l, n_probes] probe bucket ids.  Returns int32
+    [q, l*n_probes*cap] candidate ids, duplicate probes blanked to -1.
+    """
+    q = pb.shape[0]
+    cand = tables[jnp.arange(tables.shape[0])[None, :, None], pb]
+    dup = lsh_probe_dup_mask(pb)
+    cand = jnp.where(dup[..., None], jnp.int32(-1), cand)
+    return cand.reshape(q, -1)
+
+
+def _kernel(pb_ref, lo_ref, hi_ref, out_ref, *, n_probes: int, cap: int):
+    pb = pb_ref[:, 0, :]                          # [Bq, n_probes] int32
+    lo = lo_ref[0]                                # [B, cap] f32 (id+1 & 0xffff)
+    hi = hi_ref[0]                                # [B, cap] f32 (id+1 >> 16)
+    bq = pb.shape[0]
+    nb = lo.shape[0]
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (bq, nb), 1)
+    for j in range(n_probes):
+        onehot = (iota_b == pb[:, j][:, None]).astype(jnp.float32)
+        g_lo = jax.lax.dot_general(onehot, lo, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        g_hi = jax.lax.dot_general(onehot, hi, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        blk = ((g_hi.astype(jnp.int32) << 16)
+               | g_lo.astype(jnp.int32)) - 1     # undo the +1 shift
+        dup = jnp.zeros((bq,), bool)
+        for jp in range(j):
+            dup = dup | (pb[:, j] == pb[:, jp])
+        blk = jnp.where(dup[:, None], jnp.int32(-1), blk)
+        out_ref[:, 0, j * cap:(j + 1) * cap] = blk
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def lsh_bucket_gather_pallas(tables: jax.Array, pb: jax.Array, *,
+                             block_q: int = 128,
+                             interpret: bool | None = None) -> jax.Array:
+    """Padded-shape kernel entry: pb rows must be a block_q multiple
+    (padding handled by ops.lsh_bucket_gather).  Same contract as
+    `lsh_bucket_gather_jnp`, bit-identical output.  `interpret=None`
+    derives the mode from the runtime platform (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
+    q, l, n_probes = pb.shape
+    _, nb, cap = tables.shape
+    assert q % block_q == 0
+    shifted = tables.astype(jnp.int32) + 1       # ids >= -1 -> values >= 0
+    lo = (shifted & 0xFFFF).astype(jnp.float32)
+    hi = (shifted >> 16).astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, n_probes=n_probes, cap=cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(q // block_q, l),
+        in_specs=[
+            pl.BlockSpec((block_q, 1, n_probes), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, nb, cap), lambda i, t: (t, 0, 0)),
+            pl.BlockSpec((1, nb, cap), lambda i, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, n_probes * cap),
+                               lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, l, n_probes * cap), jnp.int32),
+        interpret=interpret,
+    )(pb, lo, hi)
+    return out.reshape(q, -1)

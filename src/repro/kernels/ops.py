@@ -10,6 +10,9 @@ Backend selection:
 
 All padding/unpadding (row blocks, eps-chunk multiples, feature-dim
 alignment) is handled here so kernels only ever see aligned shapes.
+Kernel `interpret=` mode is derived from the runtime platform at these
+call sites (`range_count.default_interpret`: compiled on TPU, interpret
+elsewhere) — a TPU run can never silently interpret.
 """
 from __future__ import annotations
 
@@ -20,7 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.adc_rank import (adc_rank_chain, adc_rank_jnp,
+                                    adc_rank_pallas)
 from repro.kernels.fused_mlp import mlp_forward_pallas
+from repro.kernels.lsh_gather import (lsh_bucket_gather_jnp,
+                                      lsh_bucket_gather_pallas)
 from repro.kernels.range_count import range_count_hist_pallas
 
 
@@ -100,10 +107,9 @@ def range_count_hist(q, r, eps_grid, *, metric: str = "cosine",
         mp = (-m) % eps_chunk
         # pad eps grid with +inf-like large values, slice the extra cols off
         egp = jnp.concatenate([eps_grid, jnp.full((mp,), jnp.inf, jnp.float32)])
-        interpret = jax.default_backend() != "tpu"
         out = range_count_hist_pallas(qp, rp, egp, metric=metric, nr_valid=nr,
                                       block_q=block_q, block_r=block_r,
-                                      eps_chunk=eps_chunk, interpret=interpret)
+                                      eps_chunk=eps_chunk, interpret=None)
         return out[:nq, :m]
 
     raise ValueError(f"unknown backend {be!r}")
@@ -124,7 +130,53 @@ def mlp_forward(params, x, *, backend: str = "auto", block_n: int = 256) -> jax.
         return ref.mlp_forward(params, x)
     n = x.shape[0]
     xp = _pad_rows(x, block_n)
-    interpret = jax.default_backend() != "tpu"
     out = mlp_forward_pallas(tuple((jnp.asarray(w), jnp.asarray(b)) for w, b in params),
-                             xp, block_n=block_n, interpret=interpret)
+                             xp, block_n=block_n, interpret=None)
     return out[:n]
+
+
+def lsh_bucket_gather(tables, pb, *, backend: str = "auto",
+                      block_q: int = 128) -> jax.Array:
+    """LSH member-table gather + multiprobe dedup (kernels/lsh_gather.py).
+
+    tables int32 [l, B, cap], pb int32 [q, l, n_probes].  Returns int32
+    [q, l*n_probes*cap] candidate ids; duplicate probe blocks blanked to
+    -1.  All backends are bit-identical by construction (integer-only);
+    "ref"/"jnp" take the direct-gather formulation, "pallas" the fused
+    one-hot kernel (interpret mode derived from the platform).  Safe to
+    call inside jitted programs — padding here is traceable."""
+    be = _resolve(backend)
+    if be in ("jnp", "ref"):
+        return lsh_bucket_gather_jnp(tables, pb)
+    if be == "pallas":
+        nq = pb.shape[0]
+        pbp = _pad_rows(pb, block_q)
+        return lsh_bucket_gather_pallas(tables, pbp, block_q=block_q)[:nq]
+    raise ValueError(f"unknown backend {be!r}")
+
+
+def adc_rank(q, codebooks, cand, codes, *, n_cand: int,
+             backend: str = "auto", block_b: int = 8) -> jax.Array:
+    """IVF-PQ ADC candidate ranking (kernels/adc_rank.py).
+
+    q f32 [b, dim], codebooks f32 [m, 256, seg], cand int32 [b, C]
+    (-1 padded), codes uint8 [n, m].  Returns the n_cand best candidate
+    ids int32 [b, n_cand].  "jnp" (flat per-segment LUT accumulate) and
+    "pallas" (fused kernel) are bit-identical by construction; "ref" is
+    the pre-kernel transpose+take_along_axis+top_k chain (value-
+    identical, tie order unspecified) kept as baseline/oracle.  Safe to
+    call inside jitted programs."""
+    be = _resolve(backend)
+    if be == "ref":
+        return adc_rank_chain(q, codebooks, cand, codes, n_cand=n_cand)
+    if be == "jnp":
+        return adc_rank_jnp(q, codebooks, cand, codes, n_cand=n_cand)
+    if be == "pallas":
+        b = q.shape[0]
+        qp = _pad_rows(q, block_b)
+        cp = jnp.concatenate(
+            [cand, jnp.full((qp.shape[0] - b,) + cand.shape[1:], -1,
+                            cand.dtype)], axis=0)
+        return adc_rank_pallas(qp, codebooks, cp, codes, n_cand=n_cand,
+                               block_b=block_b)[:b]
+    raise ValueError(f"unknown backend {be!r}")

@@ -10,17 +10,28 @@ TPU adaptation (vs the paper's CPU loop / a CUDA candidate-list port):
     d_cos = 1 - q.r,  d_l2 = sqrt(2 - 2 q.r), so one bf16 matmul with f32
     accumulation yields the whole tile.
   * The m-bin eps histogram is fused into the same VMEM residency: the
-    distance tile is compared against eps chunks (VPU) and accumulated into
-    an int32 [Q_blk, m] block, so the m-candidate grid used by ATCS costs a
-    single sweep over R instead of m sweeps.
+    distance tile is compared against ONE eps at a time (a per-eps masked
+    accumulate on the VPU) and the per-eps counts land in an int32
+    [Q_blk, m] block, so the m-candidate grid used by ATCS costs a single
+    sweep over R instead of m sweeps.  The compare working set is a
+    single [Q_blk, R_blk] bool — it used to be a [Q_blk, R_blk,
+    eps_chunk] broadcast, which at the default tile was the largest
+    temporary in the kernel and capped block_r at 512.
   * Grid is (q_blocks, r_blocks) with the r axis innermost ("arbitrary"
     semantics): the output block for a fixed q block is revisited across r
     steps and accumulated in place — the canonical Pallas reduction layout.
 
-VMEM budget at the default tile (Bq=256, Br=512, d<=1024, m<=128):
-  q tile 256x1024 f32 = 1 MB, r tile 512x1024 f32 = 2 MB, distance tile
-  256x512 f32 = 0.5 MB, out 256x128 i32 = 0.125 MB, eps-chunk compare
-  256x512x8 bool = 1 MB  =>  ~4.6 MB < 16 MB VMEM.
+VMEM budget at the widened tile (Bq=256, Br=1024, d<=1024, m<=128):
+  q tile 256x1024 f32 = 1 MB, r tile 1024x1024 f32 = 4 MB, distance tile
+  256x1024 f32 = 1 MB, out 256x128 i32 = 0.125 MB, per-eps compare
+  256x1024 bool = 0.25 MB  =>  ~6.4 MB < 16 MB VMEM (the old eps-chunk
+  broadcast was 256x512x8 bool = 1 MB at Br=512 and would have been 2 MB
+  at Br=1024 — the per-eps accumulate is what lets block_r grow to 1024
+  with headroom).
+
+`eps_chunk` survives only as the eps-grid PADDING quantum (callers pad m
+to a multiple of it so one executable serves nearby grid sizes); the
+kernel loop itself is per-eps.
 """
 from __future__ import annotations
 
@@ -31,8 +42,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def default_interpret() -> bool:
+    """Platform-derived `interpret=` default for every kernel in this
+    package: compiled on TPU, interpret mode elsewhere (the kernel body
+    runs as jnp ops for correctness validation).  Callers that pass
+    `interpret=None` get this policy, so a TPU run can never silently
+    fall into interpret mode (ISSUE 9 satellite)."""
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(q_ref, r_ref, eps_ref, out_ref, *, metric: str, nr_valid: int,
-            block_r: int, eps_chunk: int):
+            block_r: int):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -59,12 +79,13 @@ def _kernel(q_ref, r_ref, eps_ref, out_ref, *, metric: str, nr_valid: int,
     acc = jnp.zeros(out_ref.shape, jnp.int32)     # [Bq, m_padded]
 
     def body(c, acc):
-        e = jax.lax.dynamic_slice(eps, (c * eps_chunk,), (eps_chunk,))
-        cnt = jnp.sum(d[:, :, None] <= e[None, None, :], axis=1,
-                      dtype=jnp.int32)            # [Bq, eps_chunk]
-        return jax.lax.dynamic_update_slice(acc, cnt, (0, c * eps_chunk))
+        # per-eps masked accumulate: the compare temporary is one
+        # [Bq, Br] bool, not the old [Bq, Br, eps_chunk] broadcast
+        e = jax.lax.dynamic_slice(eps, (c,), (1,))
+        cnt = jnp.sum(d <= e[0], axis=1, dtype=jnp.int32)   # [Bq]
+        return jax.lax.dynamic_update_slice(acc, cnt[:, None], (0, c))
 
-    acc = jax.lax.fori_loop(0, m_padded // eps_chunk, body, acc)
+    acc = jax.lax.fori_loop(0, m_padded, body, acc)
     out_ref[...] += acc
 
 
@@ -73,21 +94,26 @@ def _kernel(q_ref, r_ref, eps_ref, out_ref, *, metric: str, nr_valid: int,
 def range_count_hist_pallas(q: jax.Array, r: jax.Array, eps_grid: jax.Array,
                             *, metric: str = "cosine", nr_valid: int | None = None,
                             block_q: int = 256, block_r: int = 512,
-                            eps_chunk: int = 8, interpret: bool = True) -> jax.Array:
+                            eps_chunk: int = 8,
+                            interpret: bool | None = None) -> jax.Array:
     """Padded-shape entry point. q [nq,d], r [nr,d] (nq % block_q == 0,
     nr % block_r == 0, eps_grid [m] with m % eps_chunk == 0, sorted).
     Returns int32 [nq, m]. Padding/unpadding lives in ops.range_count_hist.
+    `interpret=None` derives the mode from the runtime platform
+    (`default_interpret`): compiled on TPU, interpret elsewhere.
     """
     nq, d = q.shape
     nr = r.shape[0]
     m = eps_grid.shape[0]
     assert nq % block_q == 0 and nr % block_r == 0 and m % eps_chunk == 0
     nr_valid = nr if nr_valid is None else nr_valid
+    if interpret is None:
+        interpret = default_interpret()
     eps2d = eps_grid.astype(jnp.float32).reshape(1, m)
 
     grid = (nq // block_q, nr // block_r)
     kernel = functools.partial(_kernel, metric=metric, nr_valid=nr_valid,
-                               block_r=block_r, eps_chunk=eps_chunk)
+                               block_r=block_r)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,0 +1,76 @@
+"""XLA flag helpers: async-collective overlap + forced host devices.
+
+The overlapped ring sweep (core/topology.py `RingSharded(overlap=True)`,
+DESIGN.md §15) issues the next query block's `ppermute` BEFORE the
+current histogram step and combines partial counts with a ring
+reduce-scatter, so the hop transfers while the MXU sweeps.  On
+TPU the compiler overlaps async collectives with independent compute by
+default; on GPU the equivalent behavior sits behind XLA flags
+(`--xla_gpu_enable_async_collectives`, the latency-hiding scheduler,
+and the high-priority async stream).  This module centralizes those
+flags so launch scripts and benchmark subprocesses compose them instead
+of hand-rolling `XLA_FLAGS` strings.
+
+Functions, not import-time mutation — importing this module touches
+neither the environment nor jax device state (the mesh-module rule,
+DESIGN.md §7).  `apply_xla_flags` must run BEFORE the first jax import
+in the target process: XLA parses the variable once at backend
+initialization, which is why the benchmark harness passes these through
+subprocess environments rather than calling `apply_xla_flags` in an
+already-initialized process.
+"""
+from __future__ import annotations
+
+import os
+
+#: GPU overlap flags (SNIPPETS.md launch idiom): async collectives +
+#: latency-hiding scheduler so a started `ppermute` transfers behind
+#: independent compute, plus the high-priority async stream so the
+#: collective is not queued behind the sweep kernels it should overlap.
+GPU_OVERLAP_FLAGS: tuple[str, ...] = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def overlap_flags(platform: str | None = None) -> tuple[str, ...]:
+    """Flags enabling collective/compute overlap for `platform` (default:
+    probe the environment variable-free way — `platform=None` returns the
+    GPU set, the only platform that needs explicit flags; TPU overlaps by
+    default and CPU ignores them)."""
+    if platform in (None, "gpu", "cuda", "rocm"):
+        return GPU_OVERLAP_FLAGS
+    return ()
+
+
+def host_device_count_flag(n: int) -> str:
+    """`--xla_force_host_platform_device_count=<n>`: fake n host devices
+    so CPU subprocesses can host multi-shard meshes (the ring-topology
+    tests/benches drive `make_join_mesh(r=...)` through this)."""
+    if n < 1:
+        raise ValueError(f"host_device_count_flag({n}): need n >= 1")
+    return f"--xla_force_host_platform_device_count={n}"
+
+
+def compose_xla_flags(*flags: str, env: dict | None = None) -> str:
+    """The XLA_FLAGS value combining `env`'s existing flags with `flags`
+    (existing first, duplicates dropped, order preserved)."""
+    env = os.environ if env is None else env
+    parts = [p for p in env.get("XLA_FLAGS", "").split() if p]
+    for f in flags:
+        if f not in parts:
+            parts.append(f)
+    return " ".join(parts)
+
+
+def apply_xla_flags(*flags: str, env: dict | None = None) -> str:
+    """Merge `flags` into `env['XLA_FLAGS']` (default `os.environ`) and
+    return the new value.  Call BEFORE the process first imports jax —
+    XLA reads the variable once at backend init; an already-initialized
+    process will not pick the flags up (pass them to a subprocess env
+    instead, see benchmarks/bench_ring.py)."""
+    env = os.environ if env is None else env
+    merged = compose_xla_flags(*flags, env=env)
+    env["XLA_FLAGS"] = merged
+    return merged

@@ -238,6 +238,62 @@ def test_verify_candidates_backend_parity(world):
     np.testing.assert_array_equal(got_dev, want)
 
 
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_live_chunked_verify_oracle_parity(world, metric):
+    """The live-chunked verify (_verify_block_live, DESIGN.md §15) is
+    bit-identical to the oracle form on the shapes that stress its
+    schedule: all-pad rows (zero trip count), dup-heavy rows, full-width
+    rows (every chunk live), a candidate width that does not divide the
+    chunk, and a tombstone mask riding along."""
+    import jax.numpy as jnp
+    from repro.core.joins.common import (_LIVE_CHUNK, _verify_block_impl,
+                                         _verify_block_live)
+    R, Q, _ = world
+    Rj = jnp.asarray(R)
+    rng = np.random.default_rng(11)
+    tomb = jnp.asarray((rng.random(len(R)) < 0.15).astype(np.int32))
+    cases = []
+    for C in (_LIVE_CHUNK * 3, _LIVE_CHUNK - 9, 1):
+        sparse = rng.integers(-1, len(R), size=(32, C)).astype(np.int32)
+        sparse[rng.random(size=sparse.shape) > 0.15] = -1
+        sparse[0] = -1                          # an all-pad row
+        dense = rng.integers(0, len(R), size=(32, C)).astype(np.int32)
+        dense[:, : C // 2] = dense[:, C // 2:][:, : C // 2] \
+            if C > 1 else dense[:, :1]          # heavy duplication
+        cases += [sparse, dense, np.full((32, C), -1, np.int32)]
+    q = jnp.asarray(Q[:32])
+    for cand in cases:
+        for tb in (None, tomb):
+            want = np.asarray(_verify_block_impl(
+                Rj, q, jnp.asarray(cand), np.float32(0.9), metric=metric,
+                tomb=tb))
+            got = np.asarray(_verify_block_live(
+                Rj, q, jnp.asarray(cand), np.float32(0.9), metric=metric,
+                tomb=tb))
+            np.testing.assert_array_equal(got, want)
+
+
+def test_stream_staging_constant_caches(world):
+    """Unfiltered streams re-stage the same radius scalar and all-positive
+    mask every batch; the engine uploads each once per (value, shape
+    bucket) and reuses the device arrays (DESIGN.md §5) — and the cached
+    route stays bit-identical to the one-shot join."""
+    R, Q, _ = world
+    j = make_join("naive", R, "l2", backend="jnp")
+    eng = j.engine
+    want = j.query_counts(Q, 0.8)
+    batches = [Q[:64], Q[64:128], Q[128:]]
+    got = np.concatenate([r.counts for r in eng.stream(batches, 0.8)])
+    np.testing.assert_array_equal(got, want)
+    assert len(eng._eps_scalar_cache) == 1      # one radius staged once
+    keys = set(eng._allpos_cache)
+    assert len(keys) == 2                       # 64-row + 29-row buckets
+    st = eng._stage_filter(Q[:64], 0.8)
+    assert st.eps_dev is eng._eps_scalar_cache[0.8]
+    assert st.pos_dev is eng._allpos_cache[(st.qdev.shape[0], 64)][0]
+    assert set(eng._allpos_cache) == keys       # no new upload
+
+
 def test_engine_filter_program_cache_stable(world):
     """device_predict_fn must hand back a memoized fn so the engine's
     program cache hits across run() calls — one compiled filter program per
