@@ -1,0 +1,190 @@
+"""Auto-planner rows (DESIGN.md §16): planned vs exhaustive grid vs
+static defaults, on a uniform and a deliberately skewed workload.
+
+For each workload the suite streams the SAME serving-shaped batches
+through (a) the configuration `JoinPlan.auto()` picks, (b) every
+configuration in a small exhaustive grid over verify backend x probe
+placement (including the skew-aware re-bucketed LSH variant), and
+(c) the three static recall-table defaults the planner replaces
+(exact / lsh-device / ivfpq-device — `TenantClass.resolved_verify`).
+All plans run unfiltered so the rows isolate execution-config cost,
+and every plan is timed in interleaved rounds with the row taking the
+best round (the bench_probe/bench_ring methodology: scheduler noise is
+one-sided, so min is the faithful cost).
+
+Each grid config is also scored for recall against the exact ground
+truth, and configs below the planner's recall floor are excluded from
+the "best grid" reference (on the skewed workload plain LSH overflows
+its bucket caps and silently drops ~20% of memberships — beating an
+infeasible config is not a win, and the planner itself rejects it).
+
+Rows: ``planner/<workload>-planned`` (derived: the chosen config and
+its ratio vs the best RECALL-FEASIBLE grid config and the worst static
+default — the BENCH_<n> acceptance numbers: planned >= 0.95x best-grid
+everywhere, planned strictly faster than the worst default on the
+skewed workload) and ``planner/<workload>-grid-<config>`` for every
+grid entry, feasible or not, with its measured recall.  The
+skewed workload plants a dense cluster (one fifth of R within a tight
+ball) so the LSH occupancy histogram trips the re-bucketing trigger.
+Runs at a fixed smoke n regardless of REPRO_BENCH_SCALE.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, get_data, save_json
+
+N = 4000
+EPS = 0.45
+BATCH, NBATCH = 64, 20
+WARM, REPS = 2, 5
+RECALL = 0.85
+
+LSH = dict(k=14, l=10, n_probes=4, W=2.5)
+IVFPQ = dict(C=64, n_probe=8, n_candidates=400)
+
+#: the static recall-table resolutions the planner replaces
+#: (TenantClass.resolved_verify: 1.0 -> exact, >= 0.95 -> ivfpq, else lsh)
+DEFAULTS = ("exact", "lsh-device", "ivfpq-device")
+
+
+def _skewed_workload(seed: int = 0):
+    """Synthetic skewed set: 1/5 of R packed into one tight cluster (a
+    single LSH bucket's worth of mass), the rest uniform on the sphere;
+    queries drawn near R rows.  The cluster is what trips the planner's
+    re-bucketing trigger."""
+    rng = np.random.default_rng(seed)
+    d = 32
+    n_hot = N // 5
+    bg = rng.normal(size=(N - n_hot, d))
+    center = rng.normal(size=(1, d))
+    hot = center + 0.05 * rng.normal(size=(n_hot, d))
+    R = np.concatenate([bg, hot]).astype(np.float32)
+    R /= np.linalg.norm(R, axis=1, keepdims=True)
+    S = R[rng.choice(N, BATCH * NBATCH, replace=True)]
+    S = S + 0.02 * rng.normal(size=S.shape).astype(np.float32)
+    S /= np.linalg.norm(S, axis=1, keepdims=True)
+    return R.astype(np.float32), S.astype(np.float32)
+
+
+def _grid(R, metric):
+    """{config key: built plan} over the exhaustive verify x probe grid
+    (replicated topology — the ring rows live in bench_ring), sharing
+    one engine so R uploads once."""
+    from repro.core import JoinPlan
+
+    def plan(verify, params, probe, engine):
+        p = (JoinPlan(R, metric).filter("none").search("naive")
+             .verify(verify, **params).on(backend="jnp"))
+        if probe is not None:
+            p = p.on(probe=probe)
+        if engine is not None:
+            p = p.on(engine=engine)
+        return p.build()
+
+    plans = {}
+    plans["exact"] = plan("exact", {}, None, None)
+    engine = plans["exact"].engine
+    for probe in ("device", "host"):
+        plans[f"lsh-{probe}"] = plan("lsh", LSH, probe, engine)
+        plans[f"ivfpq-{probe}"] = plan("ivfpq", IVFPQ, probe, engine)
+    plans["lsh+rebucket-device"] = plan(
+        "lsh", dict(LSH, rebucket_hot=4.0), "device", engine)
+    return plans
+
+
+def _recalls(plans: dict, batches, eps: float) -> dict:
+    """{config: verified-pair recall vs the exact plan's ground truth}.
+    Approximate verifies never emit false positives (candidates are
+    verified exactly), so total-count ratio IS recall."""
+    totals = {name: sum(int(np.sum(res.counts))
+                        for res in plan.stream(batches, eps, depth=2))
+              for name, plan in plans.items()}
+    truth = max(totals["exact"], 1)
+    return {name: t / truth for name, t in totals.items()}
+
+
+def _chosen_key(explain: dict) -> str:
+    """Map a planner choice onto this suite's grid keys."""
+    ch = explain["chosen"]
+    if ch["verify"] == "exact":
+        return "exact"
+    return f"{ch['verify']}-{ch['probe']}"
+
+
+def _paired_stream_ms(plans: dict, batches, eps: float) -> dict:
+    """{name: best wall-clock ms} of one full streamed pass per plan,
+    interleaved rounds, best-of-REPS (see module docstring)."""
+    def one(plan):
+        t0 = time.perf_counter()
+        list(plan.stream(batches, eps, depth=2))
+        return time.perf_counter() - t0
+
+    samples: dict = {name: [] for name in plans}
+    for _ in range(WARM + REPS):
+        for name, plan in plans.items():
+            samples[name].append(one(plan))
+    return {name: float(np.min(ts[WARM:])) * 1e3
+            for name, ts in samples.items()}
+
+
+def run() -> list:
+    from repro.core import JoinPlan
+
+    Rg, Sg, spec = get_data("glove", N)
+    Rs, Ss = _skewed_workload()
+    workloads = {
+        "uniform": (Rg, Sg[: BATCH * NBATCH], spec.metric, EPS),
+        "skewed": (Rs, Ss, "cosine", 0.3),
+    }
+
+    rows = []
+    for wl, (R, S, metric, eps) in workloads.items():
+        batches = [S[i * BATCH:(i + 1) * BATCH] for i in range(NBATCH)]
+        batches = [b for b in batches if len(b)]
+        nq = sum(len(b) for b in batches)
+
+        planned = JoinPlan(R, metric).filter("none").auto(
+            eps, S[:256], recall=RECALL, seed=0)
+        key = _chosen_key(planned.explain())
+        grid = _grid(R, metric)
+        recall = _recalls(grid, batches, eps)
+        ms = _paired_stream_ms(dict(grid, planned=planned), batches, eps)
+
+        grid_ms = {k: v for k, v in ms.items() if k != "planned"}
+        feasible = {k: v for k, v in grid_ms.items()
+                    if recall[k] >= RECALL}
+        best_key = min(feasible, key=feasible.get)
+        worst_default = max(DEFAULTS, key=lambda k: grid_ms[k])
+        vs_best = ms["planned"] / max(feasible[best_key], 1e-9)
+        vs_worst = ms["planned"] / max(grid_ms[worst_default], 1e-9)
+        emit(f"planner/{wl}-planned", ms["planned"] * 1e3 / nq,
+             f"chosen={key} vs_best={vs_best:.3f}"
+             f" vs_worst_default={vs_worst:.3f}({worst_default})")
+        for cfg in sorted(grid_ms):
+            tag = [f"recall={recall[cfg]:.3f}"]
+            if cfg not in feasible:
+                tag.append("infeasible")
+            if cfg == best_key:
+                tag.append("grid_best")
+            if cfg == worst_default:
+                tag.append("worst_default")
+            emit(f"planner/{wl}-grid-{cfg}", grid_ms[cfg] * 1e3 / nq,
+                 ",".join(tag))
+        rows.append({"workload": wl, "chosen": key, "eps": eps,
+                     "planned_us": ms["planned"] * 1e3 / nq,
+                     "grid_us": {k: v * 1e3 / nq
+                                 for k, v in grid_ms.items()},
+                     "recall": {k: round(v, 4)
+                                for k, v in recall.items()},
+                     "best": best_key, "worst_default": worst_default,
+                     "vs_best": vs_best, "vs_worst_default": vs_worst,
+                     "explain": planned.explain()})
+    save_json("planner", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -133,6 +133,49 @@ print(f"gateway smoke OK (world_version={rep['world_version']}, "
       f"gold p50={rep['tenants']['gold']['metrics']['p50_ms']:.1f}ms)")
 EOF
 
+# auto-planner smoke (DESIGN.md §16): plan a deliberately skewed smoke
+# dataset, assert the explain() rationale is well-formed and the chosen
+# configuration runs bit-identically to an identically-configured twin
+# on the `ref` kernel backend — whatever the planner picks, the result
+# is still the oracle's
+echo "== auto-planner smoke (skewed corpus, ref-twin parity) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+import numpy as np
+from repro.core import JoinPlan
+from repro.core.planner import REBUCKET_HOT
+
+rng = np.random.default_rng(0)
+def unit(x):
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+
+bg = rng.normal(size=(450, 24))
+hot = rng.normal(size=(1, 24)) + 0.03 * rng.normal(size=(150, 24))
+R = unit(np.concatenate([bg, hot]))
+Q = unit(rng.normal(size=(32, 24)))
+
+plan = JoinPlan(R, "cosine").filter("none").auto(0.4, Q, recall=0.9, seed=0)
+ex = json.loads(json.dumps(plan.explain()))       # machine-readable
+ch = ex["chosen"]
+assert ex["candidates"] and ex["skew"]["hashed_rows"] == len(R)
+assert ch["verify"] in ("exact", "lsh", "lsh+rebucket", "ivfpq")
+
+# identically-configured twin on the ref kernel backend
+twin = JoinPlan(R, "cosine").filter("none").search("naive")
+if ch["verify"] == "exact":
+    twin = twin.verify("exact")
+elif ch["verify"].startswith("lsh"):
+    params = {} if ch["verify"] == "lsh" else dict(rebucket_hot=REBUCKET_HOT)
+    twin = twin.verify("lsh", **params)
+else:
+    twin = twin.verify("ivfpq")
+twin = twin.on(backend="ref", block=int(ch["block"])).build()
+a = np.asarray(plan.run(Q, 0.4).counts)
+np.testing.assert_array_equal(a, np.asarray(twin.run(Q, 0.4).counts))
+print(f"planner smoke OK (chosen={ch['verify']}/{ch['probe']}"
+      f"/{ch['topology']}{ch['r_shards']}, est={ch['est_us']}us/q)")
+EOF
+
 # smoke-scale perf snapshot: proves the BENCH_<n>.json trajectory pipeline
 # (benchmarks/run.py --snapshot) end-to-end without touching the tracked
 # top-level snapshots — the real per-PR snapshot is written deliberately

@@ -22,6 +22,7 @@ from xlint.core import LintFile, Rule, Violation
 CHECKED = (
     "src/repro/core/api.py",
     "src/repro/core/engine.py",
+    "src/repro/core/planner.py",
     "src/repro/core/probe.py",
     "src/repro/core/topology.py",
     "src/repro/core/xjoin.py",

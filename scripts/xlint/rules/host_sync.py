@@ -50,6 +50,11 @@ HOT_FUNCTIONS = {
     "src/repro/core/api.py": {
         "PlanSession.submit", "PlanSession.flush",
     },
+    # planner measurement programs: one sanctioned histogram readback per
+    # auto() (annotated allow-host-sync), nothing on the per-batch path
+    "src/repro/core/planner.py": {
+        "measure_skew", "measure_workload",
+    },
     "src/repro/serve/gateway.py": {
         "Gateway.submit", "Gateway._pump", "Gateway._scatter",
         "Gateway.flush",

@@ -40,6 +40,7 @@ remain as thin legacy shims over `JoinPlan`.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Iterable, Iterator, Optional, Protocol,
@@ -299,7 +300,7 @@ class JoinPlan:
     fused-skipping and async-streaming machinery."""
 
     _ON_KEYS = ("mesh", "backend", "block", "engine", "cache_key",
-                "topology", "r_shards", "probe")
+                "topology", "r_shards", "probe", "plan")
 
     def __init__(self, R: np.ndarray, metric: str = "cosine"):
         self._R = np.asarray(R, np.float32)
@@ -310,12 +311,19 @@ class JoinPlan:
         self._exec: dict = {"mesh": None, "backend": "auto", "block": 512,
                             "engine": None, "cache_key": None,
                             "topology": None, "r_shards": None,
-                            "probe": "auto"}
+                            "probe": "auto", "plan": None}
         self._built: Optional[_BuiltPlan] = None
         self._device_filter_cache: dict = {}
         self._mutable = False
         self._auto_compact_at: Optional[float] = None
         self._seen_compactions = 0
+        #: set by the auto-planner (core/planner.py, DESIGN.md §16): the
+        #: machine-readable plan rationale on planner-produced plans, the
+        #: chosen stream depth, and — on `on(plan="auto")` lazy plans —
+        #: the planned delegate built at first run/session
+        self._planner_explain: Optional[dict] = None
+        self._planned_depth: Optional[int] = None
+        self._auto_delegate: Optional["JoinPlan"] = None
 
     # ------------------------------------------------------------ builders
     def filter(self, filt="xling", **opts) -> "JoinPlan":
@@ -326,6 +334,7 @@ class JoinPlan:
         instance, or a callable `fn(Q, eps) -> bool [q]`."""
         self._filter_spec = (filt, dict(opts))
         self._built = None
+        self._auto_delegate = None
         return self
 
     def search(self, method="naive", **params) -> "JoinPlan":
@@ -334,6 +343,7 @@ class JoinPlan:
         Searcher instance already built over this plan's R."""
         self._search_spec = (method, dict(params))
         self._built = None
+        self._auto_delegate = None
         return self
 
     def verify(self, backend="auto", **params) -> "JoinPlan":
@@ -353,6 +363,7 @@ class JoinPlan:
         actually participates."""
         self._verify_spec = (backend, dict(params))
         self._built = None
+        self._auto_delegate = None
         return self
 
     def on(self, **opts) -> "JoinPlan":
@@ -369,15 +380,23 @@ class JoinPlan:
         where the approximate verify route's index probe runs; "auto"
         picks the device whenever the searcher advertises
         `device_probe`, "device" requires it and fails at build when
-        unavailable). `describe()["exec"]["topology"]` /
+        unavailable), `plan` (None | "auto" — "auto" defers to the
+        cost-based planner, DESIGN.md §16: the first run/session
+        measures the workload and delegates to the planner-chosen
+        configuration; explicit knobs set here are respected as pinned
+        constraints). `describe()["exec"]["topology"]` /
         `describe()["exec"]["probe"]` report the resolved placement
         including per-device R and probe-table bytes."""
         unknown = set(opts) - set(self._ON_KEYS)
         if unknown:
             raise ValueError(f"on(): unknown option(s) {sorted(unknown)}; "
                              f"expected {list(self._ON_KEYS)}")
+        if opts.get("plan") not in (None, "auto"):
+            raise ValueError(f"on(plan={opts['plan']!r}): expected None or "
+                             "'auto' (the cost-based planner)")
         self._exec.update(opts)
         self._built = None
+        self._auto_delegate = None
         return self
 
     def mutable(self, auto_compact_at: Optional[float] = 0.5) -> "JoinPlan":
@@ -743,7 +762,11 @@ class JoinPlan:
 
     def run(self, Q: np.ndarray, eps: float) -> JoinResult:
         """One synchronous join pass: fused filter (or uploaded host
-        verdicts) -> compact -> verify through the engine."""
+        verdicts) -> compact -> verify through the engine. Under
+        `on(plan="auto")` the first call plans (measure-then-choose,
+        DESIGN.md §16) and every call delegates to the chosen plan."""
+        if self._exec["plan"] == "auto":
+            return self._planned_delegate(Q, eps).run(Q, eps)
         self.build()
         Q = np.asarray(Q, np.float32)
         t0 = time.perf_counter()
@@ -757,7 +780,7 @@ class JoinPlan:
         return self._wrap(res, len(Q), eps, t_host)
 
     def stream(self, batches: Iterable[np.ndarray], eps: float, *,
-               depth: int = 2) -> Iterator[JoinResult]:
+               depth: Optional[int] = None) -> Iterator[JoinResult]:
         """Serving form: yield one JoinResult per query batch, in order,
         through the engine's asynchronous double-buffered pipeline
         (DESIGN.md §5) — batch k+1's programs dispatch while batch k's
@@ -768,15 +791,84 @@ class JoinPlan:
             yield from sess.submit(Q)
         yield from sess.flush()
 
-    def session(self, eps: float, *, depth: int = 2) -> "PlanSession":
+    def session(self, eps: float, *,
+                depth: Optional[int] = None) -> "PlanSession":
         """Open a push-interface serving session at a fixed radius: the
         caller-driven form of `stream` (the serve gateway submits coalesced
         batches as they form rather than pulling from one iterable,
         DESIGN.md §14). Returns a `PlanSession` — `submit(Q)` /
         `flush()` yield `JoinResult`s in FIFO order, bit-identical to
         per-batch `run`; `set_depth()` retargets the in-flight bound
-        mid-stream."""
+        mid-stream. `depth=None` uses the planner-chosen depth on
+        planner-produced plans and 2 otherwise; under `on(plan="auto")`
+        the session opens on the planner-chosen delegate."""
+        if self._exec["plan"] == "auto":
+            return self._planned_delegate(None, eps).session(eps,
+                                                             depth=depth)
+        if depth is None:
+            depth = self._planned_depth or 2
         return PlanSession(self, eps, depth=depth)
+
+    # ------------------------------------------------------ auto-planning
+    def _planned_delegate(self, Q, eps: float) -> "JoinPlan":
+        """The planner-chosen plan backing `on(plan="auto")` — planned at
+        the first run/session against that call's queries and radius,
+        then reused for the plan's lifetime (builders reset it)."""
+        if self._mutable:
+            raise RuntimeError(
+                "on(plan='auto') on a mutable plan would leave this handle "
+                "mutating a different engine than the one serving queries — "
+                "call plan.auto(eps) explicitly and mutate the returned "
+                "plan (DESIGN.md §16)")
+        if self._auto_delegate is None:
+            self._auto_delegate = self.auto(eps, Q)
+        return self._auto_delegate
+
+    def auto(self, eps: float, Q: Optional[np.ndarray] = None, *,
+             recall: float = 0.9, err: float = 0.1,
+             confidence: float = 0.95, seed: int = 0) -> "JoinPlan":
+        """Measure-then-choose (DESIGN.md §16): return a new frozen,
+        fully-specified `JoinPlan` picked by the cost-based planner for
+        this plan's R at radius `eps`.
+
+        The planner draws an error-bounded query sample from `Q` (or
+        from R itself when `Q` is None — the serve gateway's query-free
+        path), measures selectivity / filter skip rate / LSH bucket
+        skew / delta occupancy with cheap probe-free programs, prices a
+        pruned candidate grid with BENCH-calibrated constants, and
+        applies the winner — splitting hot LSH buckets (skew-aware
+        re-bucketing) when the measured occupancy trips the overflow
+        trigger. Explicit knobs on THIS plan (`on(topology= ...)`,
+        `on(probe=...)`, a by-name `verify(...)`, a shared engine) are
+        respected as pinned constraints. `recall` is the acceptance
+        floor gating approximate verifies (1.0 forces the exact sweep);
+        `err`/`confidence` set the Hoeffding sample bound; `seed` makes
+        the whole pass deterministic. The returned plan carries the
+        machine-readable rationale in `explain()` and reports it under
+        `describe()["planner"]`."""
+        from repro.core import planner as _planner
+        chosen, explain = _planner.plan_auto(
+            self, Q, float(eps), recall=recall, err=err,
+            confidence=confidence, seed=seed)
+        chosen._exec["plan"] = None         # the choice is final: no
+        chosen._planner_explain = explain   # recursive re-planning
+        return chosen
+
+    def explain(self) -> dict:
+        """The planner's machine-readable rationale for this plan:
+        measured workload/skew stats, calibrated cost constants,
+        per-candidate cost estimates, rejection reasons, and the chosen
+        configuration. Only planner-produced plans carry one — call
+        `plan.auto(eps, Q)` (or run once under `on(plan="auto")` and
+        take `describe()["planner"]`)."""
+        if self._planner_explain is not None:
+            return json.loads(json.dumps(self._planner_explain))
+        if self._auto_delegate is not None:
+            return self._auto_delegate.explain()
+        raise RuntimeError(
+            "explain(): this plan was not produced by the auto-planner — "
+            "call plan.auto(eps, Q) for a planned plan, or run once under "
+            "on(plan='auto') (DESIGN.md §16)")
 
     # ------------------------------------------------------------ sharing
     def fork(self) -> "JoinPlan":
@@ -950,6 +1042,17 @@ class JoinPlan:
                 "delta_frac": float(st.engine.delta_frac),
                 "n_tombstones": int(st.engine.n_tombstones),
                 "compactions": int(st.engine.n_compactions)}),
+            # the auto-planner's rationale (DESIGN.md §16): None unless
+            # this plan was produced by auto(); the full machine-readable
+            # record is plan.explain()
+            "planner": (None if self._planner_explain is None else {
+                "chosen": dict(self._planner_explain["chosen"]),
+                "calibration":
+                    self._planner_explain["constants"]["calibration"],
+                "sample": dict(self._planner_explain["sample"]),
+                "rejected": [dict(r)
+                             for r in self._planner_explain["rejected"]],
+            }),
         }
 
     @property

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core.joins.common import build_capacity_table, verify_candidates
 from repro.core.probe import (LSHProbe, lsh_bucket_ids, lsh_hash_codes,
-                              lsh_probe_buckets)
+                              lsh_probe_buckets, split_hot_buckets)
 
 _PRIMES = (73856093, 19349663, 83492791, 32452843, 67867967, 86028121,
            49979687, 29996224275833, 982451653, 15485863, 2038074743,
@@ -35,7 +35,9 @@ class LSHJoin:
 
     def __init__(self, R: np.ndarray, metric: str, *, k: int = 18, l: int = 10,
                  n_probes: int = 4, W: float = 2.5, n_buckets: int | None = None,
-                 cap: int | None = None, seed: int = 0, **_):
+                 cap: int | None = None, seed: int = 0,
+                 rebucket_hot: float | None = None, max_fanout: int = 8,
+                 **_):
         self.R = np.asarray(R, np.float32)
         self.metric = metric
         self.k, self.l, self.n_probes, self.W = k, l, n_probes, W
@@ -48,13 +50,34 @@ class LSHJoin:
         self.salt = rng.integers(1, 2 ** 31, size=(l, k)).astype(np.int64)
         codes = self._hash_codes(self.R)                     # [n, l, k] int
         buckets = self._combine(codes)                       # [n, l]
-        occ = np.stack([np.bincount(buckets[:, t], minlength=self.n_buckets)
+        #: skew-aware re-bucketing (DESIGN.md §16, `rebucket_hot=`):
+        #: buckets hotter than rebucket_hot x the mean occupancy split on
+        #: extra median-thresholded hyperplanes; `expand` maps each
+        #: original bucket to its children and probing expands through it
+        #: (candidate sets — hence verified counts — unchanged).
+        self.expand = None
+        self.rebucket_info = None
+        n_total = self.n_buckets
+        if rebucket_hot is not None:
+            split = split_hot_buckets(buckets, self.R,
+                                      n_buckets=self.n_buckets,
+                                      hot_factor=float(rebucket_hot),
+                                      max_fanout=int(max_fanout), seed=seed)
+            if split is not None:
+                buckets, self.expand, n_total, self.rebucket_info = split
+        self.n_total_buckets = n_total
+        occ = np.stack([np.bincount(buckets[:, t], minlength=n_total)
                         for t in range(l)])                  # [l, B]
         if cap is None:
             # size the bucket capacity at the p99.9 occupancy so the table
             # stays dense; overflow drops rows — counted below, no longer
             # silently (the overflow_frac satellite of ISSUE 5).
             cap = int(max(2, np.quantile(occ.reshape(-1), 0.999)))
+        if self.expand is not None:
+            # post-split occupancy is the binding width: an explicit cap=
+            # is an upper bound, never a reason to pad every child bucket
+            # back out to the pre-split hot-tail width
+            cap = int(max(2, min(cap, occ.max())))
         self.cap = cap
         #: fraction of (row, table) memberships dropped by bucket-capacity
         #: overflow at build time — the index's silent-candidate-loss
@@ -68,7 +91,7 @@ class LSHJoin:
                 f"n_buckets={self.n_buckets}); recall degrades — raise "
                 "cap= or n_buckets=", RuntimeWarning, stacklevel=2)
         self.tables = np.stack([
-            build_capacity_table(buckets[:, t], self.n_buckets, cap)
+            build_capacity_table(buckets[:, t], n_total, cap)
             for t in range(l)])                              # [l, B, cap]
 
     # -- hashing -------------------------------------------------------------
@@ -95,6 +118,11 @@ class LSHJoin:
         directly. Runs the same compiled math as `device_probe()`."""
         pb = self._probe_buckets(Q)                          # [q, l, p]
         q = len(Q)
+        if self.expand is not None:
+            # re-bucketed index: expand every probed bucket to all of its
+            # children (same expansion the device programs apply)
+            pb = self.expand[np.arange(self.l)[None, :, None], pb] \
+                     .reshape(q, self.l, -1)                 # [q, l, p*F]
         cand = self.tables[np.arange(self.l)[None, :, None], pb]  # [q, l, p, cap]
         return cand.reshape(q, -1)
 

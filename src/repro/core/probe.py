@@ -166,6 +166,120 @@ def lsh_probe_buckets(X, proj, bias, salt, *, metric: str, W: float,
         n_buckets=int(n_buckets)))[:n]
 
 
+# ==================================== bucket histograms + re-bucketing
+# Skew-aware re-bucketing (DESIGN.md §16): when a few LSH buckets are
+# far above the mean occupancy (clustered data), the auto capacity —
+# sized at the occupancy p99.9 — is gated by that hot tail: every bucket
+# slot pays the hot bucket's width, and under the ring topology the one
+# shard holding the cluster's rows gates the whole SPMD sweep.  The
+# transform splits each hot bucket's ROWS on extra hyperplanes
+# (median-thresholded so the split is balanced) into `fanout` child
+# buckets appended after the original id space, and records an
+# `expand[l, B, fanout]` map; probing keeps the ORIGINAL multiprobe
+# schedule and simply expands every probed bucket to all of its children
+# (non-hot buckets expand to themselves + an always-empty filler
+# bucket).  Because a query probes every child of each probed bucket,
+# the candidate id SET per query is exactly the pre-split set whenever
+# no bucket overflows its capacity — bit-identical verified counts (the
+# parity the tests enforce) — while the per-bucket capacity drops to the
+# post-split occupancy and capacity overflow can only shrink (hot
+# buckets now own `fanout` slots).
+
+
+def bucket_occupancy(tables: np.ndarray) -> np.ndarray:
+    """Retained-entry occupancy histogram int64 [l, B] of a member table
+    [l, B, cap] (-1 padded) — the planner's skew measurement input."""
+    return (np.asarray(tables) >= 0).sum(axis=2)
+
+
+def bucket_skew_stats(occ: np.ndarray) -> dict:
+    """Skew summary of an occupancy histogram [l, B] (flattened): Gini
+    coefficient, top-16 mass fraction, and the max/mean-nonzero ratio
+    (`hot_factor` — the planner's re-bucketing trigger scale)."""
+    flat = np.sort(np.asarray(occ, np.float64).reshape(-1))
+    total = float(flat.sum())
+    n = len(flat)
+    if total <= 0 or n == 0:
+        return {"gini": 0.0, "top16_mass": 0.0, "hot_factor": 0.0,
+                "mean_nonzero": 0.0, "max": 0}
+    cum = np.cumsum(flat)
+    gini = float(1.0 - 2.0 * np.sum(cum) / (total * n) + 1.0 / n)
+    nz = flat[flat > 0]
+    return {
+        "gini": gini,
+        "top16_mass": float(flat[-16:].sum() / total),
+        "hot_factor": float(flat[-1] / nz.mean()),
+        "mean_nonzero": float(nz.mean()),
+        "max": int(flat[-1]),
+    }
+
+
+def split_hot_buckets(buckets: np.ndarray, X: np.ndarray, *,
+                      n_buckets: int, hot_factor: float,
+                      max_fanout: int = 8, seed: int = 0):
+    """Split hot buckets of a raw assignment [n, l] on extra hyperplanes.
+
+    A bucket is HOT when its occupancy exceeds ``max(hot_factor *
+    mean-nonzero-occupancy, 4)``.  Each hot bucket's rows are
+    partitioned by the sign pattern of ``log2(fanout)`` fresh random
+    projections, thresholded at the per-(table, bucket, plane) MEDIAN so
+    children come out balanced for any metric.  Children are appended
+    after the original ``n_buckets`` ids plus one trailing always-empty
+    filler bucket (the expansion slot for non-hot buckets).
+
+    Returns ``None`` when nothing is hot, else ``(buckets2 [n, l],
+    expand [l, n_buckets, fanout] int32, n_total_buckets, info)`` where
+    ``info`` is the machine-readable summary `JoinPlan.explain()`
+    surfaces.  The transform only relabels rows — the union of any
+    original bucket's children is exactly that bucket's row set, the
+    candidate-set-preservation invariant."""
+    buckets = np.asarray(buckets)
+    n, l = buckets.shape
+    occ = np.stack([np.bincount(buckets[:, t], minlength=n_buckets)
+                    for t in range(l)])
+    nz = occ[occ > 0]
+    mean_nz = float(nz.mean()) if len(nz) else 0.0
+    threshold = max(hot_factor * mean_nz, 4.0)
+    hot = occ > threshold
+    if not hot.any():
+        return None
+    max_occ = int(occ.max())
+    fanout = 2
+    while fanout < max_fanout and max_occ / fanout > threshold:
+        fanout *= 2
+    s = int(math.log2(fanout))
+    rng = np.random.default_rng(seed)
+    proj2 = rng.normal(size=(l, s, X.shape[1])).astype(np.float32)
+    H = np.einsum("nd,lsd->nls", np.asarray(X, np.float32), proj2)
+    n_hot_max = int(hot.sum(axis=1).max())
+    filler = n_buckets + n_hot_max * fanout
+    n_total = filler + 1
+    expand = np.full((l, n_buckets, fanout), filler, np.int32)
+    expand[:, :, 0] = np.arange(n_buckets, dtype=np.int32)[None, :]
+    buckets2 = buckets.copy()
+    for t in range(l):
+        for i, b in enumerate(np.nonzero(hot[t])[0]):
+            base = n_buckets + i * fanout
+            expand[t, b] = base + np.arange(fanout, dtype=np.int32)
+            rows = np.nonzero(buckets[:, t] == b)[0]
+            bits = np.zeros(len(rows), np.int32)
+            for j in range(s):
+                h = H[rows, t, j]
+                bits |= (h > np.median(h)).astype(np.int32) << j
+            buckets2[rows, t] = base + bits
+    occ2 = np.stack([np.bincount(buckets2[:, t], minlength=n_total)
+                     for t in range(l)])
+    info = {
+        "n_hot": int(hot.sum()),
+        "fanout": fanout,
+        "threshold": float(threshold),
+        "max_occ_before": max_occ,
+        "max_occ_after": int(occ2.max()),
+        "n_total_buckets": n_total,
+    }
+    return buckets2, expand, n_total, info
+
+
 # =================================================== shared IVF-PQ math
 _IVFPQ_BLOCK = 64      # query tile of the blocked ADC scan
 
@@ -292,6 +406,55 @@ def _lsh_ring_probe_program(mesh, r_axis, metric, W, n_probes, n_buckets,
     return jax.jit(mapped)
 
 
+def _expand_pb(pb, expand):
+    """[q, l, p] probed bucket ids -> [q, l, p*fanout] via the re-bucket
+    expansion map [l, B, fanout] (trace-safe; shared by both expanded
+    programs so replicated and ring candidates agree bit-for-bit)."""
+    q, l, p = pb.shape
+    pb2 = expand[jnp.arange(l)[None, :, None], pb]     # [q, l, p, F]
+    return pb2.reshape(q, l, p * expand.shape[2])
+
+
+@register_program_cache
+@functools.lru_cache(maxsize=128)
+def _lsh_expand_probe_program(metric, W, n_probes, n_buckets, backend="jnp"):
+    """`_lsh_probe_program` with skew-aware re-bucketing (DESIGN.md
+    §16): the multiprobe schedule is unchanged (bucket domain [0, B)),
+    then every probed bucket expands to its child buckets through the
+    runtime `expand` map before the member-table gather.  The gather's
+    dedup blanks the repeated filler slots exactly like repeated identity
+    probes, so counts stay bit-identical to the un-rebucketed path."""
+    def run(qpos, proj, bias, salt, expand, tables):
+        codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
+        pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
+                             n_buckets=n_buckets)
+        return ops.lsh_bucket_gather(tables, _expand_pb(pb, expand),
+                                     backend=backend)
+
+    return jax.jit(run)
+
+
+@register_program_cache
+@functools.lru_cache(maxsize=128)
+def _lsh_ring_expand_probe_program(mesh, r_axis, metric, W, n_probes,
+                                   n_buckets, backend="jnp"):
+    """Ring variant of the expanded probe: the expansion map is
+    replicated (it indexes the GLOBAL bucket space, identical on every
+    shard) while the member tables stay row-partitioned over `r` —
+    candidate ids remain local to the R shard that verifies them."""
+    def shard_fn(qpos, proj, bias, salt, expand, tables):
+        codes = _lsh_codes(qpos, proj, bias, metric=metric, W=W)
+        pb = _lsh_multiprobe(codes, salt, metric=metric, n_probes=n_probes,
+                             n_buckets=n_buckets)
+        return ops.lsh_bucket_gather(tables[0], _expand_pb(pb, expand),
+                                     backend=backend)
+
+    mapped = _shard_mapped(shard_fn, mesh,
+                           in_specs=(P(), P(), P(), P(), P(), P(r_axis)),
+                           out_specs=P(None, r_axis))
+    return jax.jit(mapped)
+
+
 @register_program_cache
 @functools.lru_cache(maxsize=128)
 def _probe_verify_program(mesh, data_axis, metric, block, backend):
@@ -369,7 +532,8 @@ def clear_probe_program_cache() -> None:
     `_PROGRAM_CACHES` registry instead of calling here. Programs rebuild
     transparently."""
     for cache in (_gather_program, _lsh_probe_program,
-                  _lsh_ring_probe_program, _probe_verify_program,
+                  _lsh_ring_probe_program, _lsh_expand_probe_program,
+                  _lsh_ring_expand_probe_program, _probe_verify_program,
                   _ring_probe_verify_program):
         cache.cache_clear()
 
@@ -477,26 +641,47 @@ class LSHProbe:
         shards = engine.topology.probe_shards(mesh)
         small = (_device_put(j.proj, mesh), _device_put(j.bias, mesh),
                  _device_put(salt32, mesh))
+        expand = getattr(j, "expand", None)
+        fanout = 1 if expand is None else int(expand.shape[2])
+        if expand is not None:
+            # re-bucketed index (DESIGN.md §16): the expansion map rides
+            # along replicated; probe width grows by the fanout while the
+            # table capacity shrinks to the post-split occupancy
+            small = small + (_device_put(np.asarray(expand, np.int32),
+                                         mesh),)
         if shards > 1:
             tabs = _shard_lsh_tables(j.tables, shards,
                                      engine.nr_padded // shards)
             tables = _device_put(tabs, mesh, engine.topology.probe_spec())
-            prog = _lsh_ring_probe_program(
-                mesh, engine.topology.r_axis, j.metric, float(j.W),
-                int(j.n_probes), int(j.n_buckets), engine.backend)
+            if expand is None:
+                prog = _lsh_ring_probe_program(
+                    mesh, engine.topology.r_axis, j.metric, float(j.W),
+                    int(j.n_probes), int(j.n_buckets), engine.backend)
+            else:
+                prog = _lsh_ring_expand_probe_program(
+                    mesh, engine.topology.r_axis, j.metric, float(j.W),
+                    int(j.n_probes), int(j.n_buckets), engine.backend)
             table_bytes = (tabs.nbytes // shards + j.proj.nbytes
                            + j.bias.nbytes + salt32.nbytes)
-            cand_width = shards * tabs.shape[1] * j.n_probes * tabs.shape[3]
+            cand_width = (shards * tabs.shape[1] * j.n_probes * fanout
+                          * tabs.shape[3])
             cand_sharded = True
         else:
             tables = _device_put(np.asarray(j.tables, np.int32), mesh)
-            prog = _lsh_probe_program(j.metric, float(j.W),
-                                      int(j.n_probes), int(j.n_buckets),
-                                      engine.backend)
+            if expand is None:
+                prog = _lsh_probe_program(j.metric, float(j.W),
+                                          int(j.n_probes),
+                                          int(j.n_buckets), engine.backend)
+            else:
+                prog = _lsh_expand_probe_program(
+                    j.metric, float(j.W), int(j.n_probes),
+                    int(j.n_buckets), engine.backend)
             table_bytes = (j.tables.nbytes + j.proj.nbytes + j.bias.nbytes
                            + salt32.nbytes)
-            cand_width = j.l * j.n_probes * j.tables.shape[2]
+            cand_width = j.l * j.n_probes * fanout * j.tables.shape[2]
             cand_sharded = False
+        if expand is not None:
+            table_bytes += expand.nbytes
         return PlacedProbe(engine, name=self.name, probe_fn=prog,
                            state=small + (tables,),
                            cand_sharded=cand_sharded,

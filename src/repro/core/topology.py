@@ -196,6 +196,21 @@ class Topology:
         """Bytes of R resident on EACH device under this placement."""
         raise NotImplementedError
 
+    def sweep_collectives(self, r_shards: int) -> int:
+        """Cross-device collectives issued by ONE sweep/probe dispatch
+        under this placement at `r_shards` R shards (the planner's
+        communication cost hook, DESIGN.md §16): 0 for a replicated R,
+        the ring-schedule hop count for sharded placements.  Takes the
+        shard count, not a mesh — the planner prices candidate
+        configurations before any mesh exists."""
+        return 0
+
+    def verify_collectives(self, r_shards: int) -> int:
+        """Collectives per candidate-verify dispatch at `r_shards` R
+        shards: 0 when counts are device-local, 1 for the sharded
+        placements' combining `psum`."""
+        return 0
+
     def hist_program(self, mesh, data_axis, backend, metric, block_q,
                      block_r, eps_chunk, nr_valid):
         """Compiled sweep `(q, r, eps, nrv) -> int32 [n, m]` over this
@@ -377,6 +392,19 @@ class RingSharded(Topology):
     def per_device_r_bytes(self, nr_padded: int, dim: int, mesh) -> int:
         """Each device holds one R shard: padded rows / r_shards."""
         return int(nr_padded) // self.r_shards(mesh) * int(dim) * 4
+
+    def sweep_collectives(self, r_shards: int) -> int:
+        """PR 9 ring schedule (DESIGN.md §15): the overlapped sweep
+        issues ``r - 1`` query-rotation ppermutes plus ``r - 1``
+        reduce-scatter hops = ``2 (r - 1)``; the serial sweep issues
+        ``r - 1`` rotations plus one combining psum = ``r``."""
+        r = int(r_shards)
+        return 2 * (r - 1) if self.overlap else r
+
+    def verify_collectives(self, r_shards: int) -> int:
+        """Sharded candidate verification combines per-shard counts with
+        one `psum` over ``r``."""
+        return 1
 
     def hist_program(self, mesh, data_axis, backend, metric, block_q,
                      block_r, eps_chunk, nr_valid):

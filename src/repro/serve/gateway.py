@@ -138,6 +138,18 @@ class Gateway:
         classes to engine-rebuildable verify backends (exact/lsh/ivfpq)
         and require classes naming the same backend to agree on its
         params (one engine-cached index per backend name).
+    planner / replan_at: "auto" (default) plans every `verify="auto"`
+        class with `recall_target < 1.0` and no `verify_params` through
+        the cost-based planner (core/planner.py, DESIGN.md §16) instead
+        of the static recall table — the planner measures R (query-free
+        index-self sample) and picks verify backend / probe placement /
+        block / initial depth, splitting hot LSH buckets when the skew
+        measurement trips the overflow trigger; "off" restores the
+        static resolution. Planned classes RE-plan when the engine's
+        `world_version` has advanced past their plan and `delta_frac`
+        has reached `replan_at` — the class's pending requests flush
+        first, its groups rebuild on the new plan, and `report()`
+        counts the re-plans.
     """
 
     def __init__(self, R, classes: Iterable[TenantClass], *,
@@ -147,7 +159,8 @@ class Gateway:
                  eps_quantum: Optional[float] = None,
                  max_batch_rows: Optional[int] = None,
                  cache_capacity: int = 65536, mutable: bool = False,
-                 auto_compact_at: Optional[float] = 0.5):
+                 auto_compact_at: Optional[float] = 0.5,
+                 planner: str = "auto", replan_at: float = 0.25):
         classes = list(classes)
         if not classes:
             raise ValueError("Gateway: at least one TenantClass is required")
@@ -158,8 +171,15 @@ class Gateway:
         if eps_quantum is not None and not eps_quantum > 0.0:
             raise ValueError(f"Gateway(eps_quantum={eps_quantum}): must be "
                              "> 0 (or None for exact-eps buckets)")
+        if planner not in ("auto", "off"):
+            raise ValueError(f"Gateway(planner={planner!r}): expected "
+                             "'auto' or 'off'")
+        if not replan_at > 0.0:
+            raise ValueError(f"Gateway(replan_at={replan_at}): must be > 0")
         self.mutable = bool(mutable)
         self.eps_quantum = eps_quantum
+        self.planner = planner
+        self.replan_at = float(replan_at)
         self._classes = {c.name: c for c in classes}
 
         base = JoinPlan(R, metric).search("naive").on(
@@ -180,6 +200,9 @@ class Gateway:
         self._plans: dict[str, JoinPlan] = {}
         self._metrics = {c.name: TenantMetrics() for c in classes}
         self._verify_name_params: dict[str, dict] = {}
+        self._class_depth: dict[str, int] = {}
+        self._planned_world: dict[str, int] = {}
+        self._replans: dict[str, int] = {}
         for cls in classes:
             self._plans[cls.name] = self._build_tenant_plan(cls)
         self._cache = ResultCache(cache_capacity)
@@ -187,12 +210,48 @@ class Gateway:
         self._groups: dict[tuple, _GroupState] = {}
 
     # -------------------------------------------------------- construction
+    def _use_planner(self, cls: TenantClass) -> bool:
+        """Whether a class's configuration comes from the cost-based
+        planner: planner="auto" and the class left everything to
+        resolve — `verify="auto"`, no `verify_params`, a recall target
+        below 1.0 (1.0 contractually pins the exact sweep; the static
+        table already answers it and planning would just burn a
+        measurement pass)."""
+        return (self.planner == "auto" and cls.verify == "auto"
+                and not cls.verify_params and cls.recall_target < 1.0)
+
     def _build_tenant_plan(self, cls: TenantClass) -> JoinPlan:
         """Fork the base plan for one tenant class: shared engine (and
-        fitted filter), per-class verify/probe/tau."""
+        fitted filter), per-class verify/probe/tau — the verify backend,
+        probe placement, block, and initial depth coming from the
+        cost-based planner when `_use_planner` says so (the plan's
+        `describe()["planner"]` carries the rationale)."""
         plan = self._base.fork()
         verify = cls.resolved_verify()
         params = dict(cls.verify_params)
+        probe = cls.probe
+        explain = None
+        self._class_depth[cls.name] = cls.depth
+        if self._use_planner(cls):
+            # tau must land BEFORE planning so the measured skip rate is
+            # this class's, not the base plan's
+            self._apply_class_tau(plan, cls)
+            from repro.core import planner as planner_mod
+            _, explain = planner_mod.plan_auto(
+                plan, None, float(cls.eps), recall=cls.recall_target,
+                seed=0)
+            ch = explain["chosen"]
+            if ch["verify"] == "lsh+rebucket":
+                verify = "lsh"
+                params = {"rebucket_hot": planner_mod.REBUCKET_HOT}
+            else:
+                verify, params = ch["verify"], {}
+            if probe == "auto":
+                probe = "auto" if ch["probe"] == "-" else ch["probe"]
+            plan.on(block=int(ch["block"]))
+            self._class_depth[cls.name] = min(
+                max(cls.depth, int(ch["depth"])), cls.max_depth)
+            self._planned_world[cls.name] = self._engine.world_version
         if self.mutable:
             if verify not in VERIFY_BACKENDS:
                 raise ValueError(
@@ -221,20 +280,28 @@ class Gateway:
                 plan.verify(verify, **params)
         else:
             plan.verify(verify, **params)
-        if cls.tau is not None:
-            adapter = self._base.build()._built.filter
-            filt = getattr(adapter, "filt", None)
-            if not isinstance(filt, XlingFilter):
-                raise ValueError(
-                    f"TenantClass({cls.name!r}): tau={cls.tau} needs the "
-                    "gateway built with filter='xling' (tau is the Xling "
-                    "XDT strictness)")
-            plan.filter(filt, tau=int(cls.tau), xdt=adapter.xdt_mode,
-                        fpr_tolerance=adapter.fpr_tolerance)
-        plan.on(probe=cls.probe)
+        self._apply_class_tau(plan, cls)
+        plan.on(probe=probe)
         plan.build()
+        if explain is not None:
+            plan._planner_explain = explain
         assert plan.engine is self._engine  # fork shares the pinned R
         return plan
+
+    def _apply_class_tau(self, plan: JoinPlan, cls: TenantClass) -> None:
+        """Swap the class's tau onto the shared fitted Xling estimator
+        (no refit — only the XDT threshold re-calibrates)."""
+        if cls.tau is None:
+            return
+        adapter = self._base.build()._built.filter
+        filt = getattr(adapter, "filt", None)
+        if not isinstance(filt, XlingFilter):
+            raise ValueError(
+                f"TenantClass({cls.name!r}): tau={cls.tau} needs the "
+                "gateway built with filter='xling' (tau is the Xling "
+                "XDT strictness)")
+        plan.filter(filt, tau=int(cls.tau), xdt=adapter.xdt_mode,
+                    fpr_tolerance=adapter.fpr_tolerance)
 
     # ------------------------------------------------------------- serving
     def _resolve_eps(self, cls: TenantClass, eps) -> float:
@@ -258,11 +325,12 @@ class Gateway:
         gs = self._groups.get(gkey)
         if gs is None:
             cls = self._classes[name]
+            depth0 = self._class_depth[name]    # planner-chosen when planned
             gs = _GroupState(
                 cls=cls, eps=float(eps_key),
                 session=self._plans[name].session(float(eps_key),
-                                                  depth=cls.depth),
-                controller=DepthController(cls.depth, cls.max_depth,
+                                                  depth=depth0),
+                controller=DepthController(depth0, cls.max_depth,
                                            cls.slo_ms))
             self._groups[gkey] = gs
         return gs
@@ -281,6 +349,7 @@ class Gateway:
             raise ValueError(
                 f"submit({tenant!r}): queries have shape {Q.shape}; "
                 f"expected (k >= 1, {self._engine.dim})")
+        self._maybe_replan(cls)
         eps_exec = self._resolve_eps(cls, eps)
         eps_key = round(eps_exec, 9)
         ticket = Ticket(tenant, eps_exec, len(Q))
@@ -373,6 +442,26 @@ class Gateway:
             if gs is not None:
                 self._scatter(gs, gs.session.flush())
 
+    def _maybe_replan(self, cls: TenantClass) -> None:
+        """Re-plan one planned class when the world has moved past its
+        plan: the engine's `world_version` advanced AND the pending
+        delta reached `replan_at` (the measured stats the plan was
+        priced on — selectivity, delta occupancy — are stale enough to
+        re-measure). The class's pending requests flush first and its
+        groups rebuild on the new plan, so no in-flight batch ever
+        crosses plans; results stay exact either way — re-planning
+        moves cost, not counts."""
+        if not self._use_planner(cls):
+            return
+        if (self._engine.world_version == self._planned_world.get(cls.name)
+                or self._engine.delta_frac < self.replan_at):
+            return
+        self.flush(cls.name)
+        for gkey in [k for k in self._groups if k[0] == cls.name]:
+            del self._groups[gkey]
+        self._plans[cls.name] = self._build_tenant_plan(cls)
+        self._replans[cls.name] = self._replans.get(cls.name, 0) + 1
+
     def join(self, tenant: str, Q, eps: Optional[float] = None) -> Ticket:
         """Synchronous convenience: `submit` + flush the request's
         group; the returned ticket is always `done`."""
@@ -448,6 +537,12 @@ class Gateway:
                 "verify": desc["verify"]["resolved"],
                 "probe": desc["exec"]["probe"]["resolved"],
                 "tau": desc["filter"]["tau"],
+                # the auto-planner's rationale + re-plan counter
+                # (DESIGN.md §16): None for statically-resolved classes
+                "planner": (None if desc["planner"] is None else dict(
+                    desc["planner"],
+                    replans=self._replans.get(name, 0),
+                    planned_world=self._planned_world.get(name))),
                 "metrics": self._metrics[name].report(),
                 "groups": groups,
             }

@@ -1,0 +1,423 @@
+"""Cost-based auto-planner (core/planner.py, DESIGN.md §16).
+
+Covers: the Hoeffding sample-bound closed form and the sample sources;
+skew-aware LSH re-bucketing (verified-count bit-parity with the plain
+index, overflow_frac strictly non-increasing, cap reduction, no-op on
+uniform data, and `split_hot_buckets`'s candidate-set-preservation
+invariant); the satellite-2 hot-bucket overflow trigger replacing plain
+LSH in the candidate grid; the randomized-stats property that `choose`
+and `JoinPlan.auto()` never emit a configuration `build()` would
+reject; byte-determinism of `explain()` for a fixed seed + sample;
+pinned-knob and error paths of `auto()` / `.on(plan="auto")`; the
+gateway's planned-tenant parity, report rationale, and
+mutation-triggered re-planning; the `--compare` minimum-gate floor
+(satellite 1); and — in a forced-8-device subprocess — ring-pinned
+planning parity plus explain determinism on both topologies.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import JoinPlan, make_join, planner
+from repro.core.planner import (OVERFLOW_TRIGGER, REBUCKET_HOT, Candidate,
+                                choose, draw_sample, enumerate_candidates,
+                                estimate_cost, measure_skew, sample_bound)
+from repro.core.probe import split_hot_buckets
+
+LSH_PARAMS = dict(k=10, l=8, n_probes=4, W=2.5)
+EPS = 0.4
+
+
+def _unit(rng, n, d=32):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _skewed(rng, n=1200, d=32, hot_frac=0.25):
+    """Corpus with one dense cluster — a deliberately hot LSH bucket."""
+    n_hot = int(n * hot_frac)
+    bg = rng.normal(size=(n - n_hot, d))
+    hot = rng.normal(size=(1, d)) + 0.03 * rng.normal(size=(n_hot, d))
+    R = np.concatenate([bg, hot]).astype(np.float32)
+    return R / np.linalg.norm(R, axis=1, keepdims=True)
+
+
+# ============================================================= sampling
+def test_sample_bound_closed_form():
+    import math
+    for err, conf in ((0.1, 0.95), (0.05, 0.99), (0.2, 0.9)):
+        want = math.ceil(math.log(2.0 / (1.0 - conf)) / (2.0 * err * err))
+        assert sample_bound(err, conf) == want
+    # tighter error or higher confidence can only cost more samples
+    assert sample_bound(0.05, 0.95) > sample_bound(0.1, 0.95)
+    assert sample_bound(0.1, 0.99) > sample_bound(0.1, 0.95)
+
+
+@pytest.mark.parametrize("err,conf", [(0.0, 0.95), (1.0, 0.95),
+                                      (0.1, 0.0), (0.1, 1.0), (-0.1, 0.5)])
+def test_sample_bound_validates(err, conf):
+    with pytest.raises(ValueError):
+        sample_bound(err, conf)
+
+
+def test_draw_sample_sources():
+    rng = np.random.default_rng(0)
+    R, Q = _unit(rng, 500), _unit(rng, 400)
+    s, meta = draw_sample(Q, R, err=0.1, confidence=0.95, seed=1)
+    assert meta["source"] == "queries" and len(s) == meta["bound"]
+    assert all(any(np.array_equal(row, q) for q in Q) for row in s[:3])
+    s2, meta2 = draw_sample(None, R, err=0.1, confidence=0.95, seed=1)
+    assert meta2["source"] == "index-self"
+    # fewer rows than the bound: take them all
+    s3, meta3 = draw_sample(Q[:7], R, err=0.1, confidence=0.95, seed=1)
+    assert len(s3) == 7 and meta3["bound"] > 7
+
+
+# ======================================================== re-bucketing
+@pytest.fixture(scope="module")
+def skewed_data():
+    rng = np.random.default_rng(7)
+    return _skewed(rng), _unit(rng, 40)
+
+
+def _counts(plan, Q, eps=EPS):
+    return np.asarray(plan.run(Q, eps).counts)
+
+
+def test_rebucket_count_parity_and_overflow(skewed_data):
+    """Re-bucketing preserves verified counts bit-exactly (probing
+    expands every probed bucket to ALL children) while overflow — the
+    silent membership loss — strictly recovers on the hot corpus."""
+    R, Q = skewed_data
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plain = make_join("lsh", R, "cosine", **LSH_PARAMS)
+        reb = make_join("lsh", R, "cosine", rebucket_hot=REBUCKET_HOT,
+                        **LSH_PARAMS)
+    assert reb.rebucket_info is not None and reb.expand is not None
+    assert reb.overflow_frac < plain.overflow_frac
+    assert (reb.rebucket_info["max_occ_after"]
+            < reb.rebucket_info["max_occ_before"])
+    # bit-parity holds when capacity binds on NEITHER side (a non-binding
+    # explicit cap): re-bucketing is then a pure relabeling and probing
+    # recovers every original candidate.  Under the auto-cap the counts
+    # legitimately differ — plain LSH silently drops memberships (19%+
+    # here) that the split recovers, which is the recall win above.
+    cap = int(len(R))
+    for probe in ("host", "device"):
+        p1 = (JoinPlan(R, "cosine").filter("none").search("naive")
+              .verify("lsh", cap=cap, **LSH_PARAMS)
+              .on(backend="jnp", probe=probe).build())
+        p2 = (JoinPlan(R, "cosine").filter("none").search("naive")
+              .verify("lsh", cap=cap, rebucket_hot=REBUCKET_HOT,
+                      **LSH_PARAMS)
+              .on(backend="jnp", probe=probe).build())
+        np.testing.assert_array_equal(_counts(p2, Q), _counts(p1, Q))
+
+
+def test_split_noop_on_flat_occupancy():
+    """Nothing hot -> split_hot_buckets declines (returns None)."""
+    rng = np.random.default_rng(3)
+    n, l, n_buckets = 512, 4, 128
+    buckets = np.stack([rng.permutation(n) % n_buckets
+                        for _ in range(l)], axis=1)     # occ exactly 4
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    assert split_hot_buckets(buckets, X, n_buckets=n_buckets,
+                             hot_factor=REBUCKET_HOT) is None
+
+
+def test_rebucket_candidate_sets_on_uniform():
+    """On an already-uniform corpus the split (if any fires at the
+    sparse-occupancy floor) changes nothing observable: per-query
+    candidate SETS are identical under a non-binding cap."""
+    rng = np.random.default_rng(3)
+    R, Q = _unit(rng, 400), _unit(rng, 10)
+    cap = len(R)
+    plain = make_join("lsh", R, "cosine", cap=cap, **LSH_PARAMS)
+    reb = make_join("lsh", R, "cosine", cap=cap, rebucket_hot=REBUCKET_HOT,
+                    **LSH_PARAMS)
+    c1, c2 = plain.candidates(Q), reb.candidates(Q)
+    for i in range(len(Q)):
+        assert (set(c1[i].tolist()) - {-1}) == (set(c2[i].tolist()) - {-1})
+
+
+def test_split_hot_buckets_preserves_row_sets(skewed_data):
+    """The invariant behind count parity: the union of a bucket's
+    children holds exactly the original bucket's rows."""
+    R, _ = skewed_data
+    join = make_join("lsh", R, "cosine", **LSH_PARAMS)
+    codes = join._hash_codes(R)
+    buckets = join._combine(codes)
+    out = split_hot_buckets(buckets, R, n_buckets=join.n_buckets,
+                            hot_factor=REBUCKET_HOT)
+    assert out is not None
+    buckets2, expand, n_total, info = out
+    assert info["n_hot"] >= 1 and info["fanout"] >= 2
+    l = buckets.shape[1]
+    for t in range(l):
+        for b in np.unique(buckets[:, t]):
+            rows = set(np.nonzero(buckets[:, t] == b)[0].tolist())
+            kids = expand[t, b]
+            rows2 = set(np.nonzero(np.isin(buckets2[:, t], kids))[0].tolist())
+            assert rows2 == rows
+
+
+# ============================================== satellite 2: the trigger
+def test_hot_bucket_trips_overflow_trigger(skewed_data):
+    R, _ = skewed_data
+    skew = measure_skew(R, "cosine", seed=0, verify_params=LSH_PARAMS)
+    assert skew["overflow_est"] > OVERFLOW_TRIGGER
+    cands, rejected = enumerate_candidates(skew, recall=0.9, n_devices=1,
+                                           pinned={})
+    verifies = {c.verify for c in cands}
+    assert "lsh+rebucket" in verifies and "lsh" not in verifies
+    reasons = [r["reason"] for r in rejected if r.get("verify") == "lsh"]
+    assert any("re-bucketing" in r for r in reasons)
+
+
+def test_uniform_keeps_plain_lsh():
+    rng = np.random.default_rng(11)
+    R = _unit(rng, 800)
+    skew = measure_skew(R, "cosine", seed=0, verify_params=LSH_PARAMS)
+    assert skew["overflow_est"] <= OVERFLOW_TRIGGER
+    cands, rejected = enumerate_candidates(skew, recall=0.9, n_devices=1,
+                                           pinned={})
+    verifies = {c.verify for c in cands}
+    assert "lsh" in verifies and "lsh+rebucket" not in verifies
+
+
+# ================================== property: never an invalid config
+def test_choose_never_returns_invalid_config():
+    """Randomized measured stats: whatever the numbers say, the chosen
+    candidate is a buildable configuration (the acceptance property)."""
+    rng = np.random.default_rng(42)
+    for trial in range(40):
+        workload = {"pos_rate": float(rng.uniform(0, 1)),
+                    "exact_us_per_query": float(rng.uniform(1, 5000)),
+                    "delta_frac": float(rng.uniform(0, 0.5)),
+                    "selectivity": float(rng.uniform(0, 0.01))}
+        cap = float(rng.uniform(2, 200))
+        skew = {"overflow_est": float(rng.uniform(0, 0.3)),
+                "hot_factor": float(rng.uniform(1, 40)),
+                "max_occ": int(rng.uniform(2, 2000)),
+                "cap_est": cap,
+                "sb_occ": float(rng.uniform(1, cap)),
+                "sb_occ_rebucket": float(rng.uniform(1, cap))}
+        consts = dict(planner.DEFAULT_CONSTANTS,
+                      machine_scale=float(rng.uniform(0.2, 5)))
+        recall = float(rng.choice([0.8, 0.9, 0.95, 0.99, 1.0]))
+        n_devices = int(rng.choice([1, 2, 8]))
+        best, scored, rejected = choose(
+            workload, skew, consts, recall=recall, n_devices=n_devices,
+            n=int(rng.uniform(100, 1_000_000)), pinned={})
+        assert best.verify in ("exact", "lsh", "lsh+rebucket", "ivfpq")
+        if recall >= 1.0:
+            assert best.verify == "exact"
+        elif recall >= 0.95:
+            assert best.verify in ("exact", "ivfpq")
+        assert best.probe == "-" if best.verify == "exact" \
+            else best.probe in ("device", "host")
+        assert best.block in (256, 512) and best.depth in (2, 4)
+        if best.topology == "ring":
+            assert best.r_shards >= 2 and n_devices >= 2
+        else:
+            assert best.r_shards == 1
+        assert all(e["us_per_query"] >= 0 for _, e in scored)
+
+
+def test_auto_always_builds_and_runs():
+    rng = np.random.default_rng(5)
+    for R, recall in ((_unit(rng, 300), 0.9), (_skewed(rng, 600), 0.85),
+                      (_unit(rng, 300), 1.0)):
+        Q = _unit(rng, 16)
+        plan = JoinPlan(R, "cosine").filter("none").auto(
+            EPS, Q, recall=recall, seed=0)
+        counts = _counts(plan, Q)
+        assert counts.shape == (16,)
+        ex = plan.explain()
+        assert ex["chosen"]["verify"] in ("exact", "lsh", "lsh+rebucket",
+                                          "ivfpq")
+        if recall >= 1.0:
+            assert ex["chosen"]["verify"] == "exact"
+            np.testing.assert_array_equal(
+                counts, _counts(JoinPlan(R, "cosine").verify("exact")
+                                .on(backend="jnp").build(), Q))
+
+
+# ========================================================== determinism
+def test_explain_byte_deterministic():
+    rng = np.random.default_rng(9)
+    R, Q = _skewed(rng, 500), _unit(rng, 32)
+
+    def dump():
+        plan = JoinPlan(R, "cosine").filter("none").auto(
+            EPS, Q, recall=0.9, seed=3)
+        return json.dumps(plan.explain(), sort_keys=True)
+
+    d1, d2 = dump(), dump()
+    assert d1 == d2
+
+
+def test_auto_respects_pins_and_errors():
+    rng = np.random.default_rng(13)
+    R, Q = _unit(rng, 300), _unit(rng, 16)
+    base = JoinPlan(R, "cosine").filter("none")
+    # by-name verify pins the verify axis
+    plan = base.verify("lsh", **LSH_PARAMS).auto(EPS, Q, recall=0.9, seed=0)
+    assert plan.explain()["chosen"]["verify"].startswith("lsh")
+    # explicit probe pins placement
+    plan = base.verify("auto").on(probe="host").auto(EPS, Q, recall=0.9,
+                                                     seed=0)
+    ch = plan.explain()["chosen"]
+    assert ch["verify"] == "exact" or ch["probe"] == "host"
+    with pytest.raises(ValueError, match="recall"):
+        base.auto(EPS, Q, recall=1.5)
+    with pytest.raises(ValueError, match="search"):
+        base.search(make_join("lsh", R, "cosine", **LSH_PARAMS)).auto(EPS, Q)
+
+
+def test_on_plan_auto_lazy_delegate():
+    rng = np.random.default_rng(17)
+    R, Q = _unit(rng, 300), _unit(rng, 16)
+    lazy = (JoinPlan(R, "cosine").filter("none").search("naive")
+            .verify("auto").on(plan="auto"))
+    explicit = JoinPlan(R, "cosine").filter("none").auto(EPS, Q, seed=0)
+    np.testing.assert_array_equal(_counts(lazy, Q), _counts(explicit, Q))
+    assert lazy.explain()["chosen"] == explicit.explain()["chosen"]
+    with pytest.raises(ValueError, match="plan"):
+        JoinPlan(R, "cosine").on(plan="lsh")
+    with pytest.raises(RuntimeError, match="mutable"):
+        (JoinPlan(R, "cosine").mutable().on(plan="auto")).run(Q, EPS)
+
+
+def test_auto_mutable_plan_stays_correct():
+    rng = np.random.default_rng(19)
+    R, Q = _unit(rng, 300), _unit(rng, 16)
+    plan = (JoinPlan(R, "cosine").filter("none").mutable()
+            .auto(EPS, Q, recall=1.0, seed=0))
+    new = _unit(rng, 40)
+    plan.insert(new)
+    plan.delete(np.arange(10))
+    from repro.kernels import ref
+    world = np.concatenate([R[10:], new])
+    np.testing.assert_array_equal(
+        _counts(plan, Q),
+        np.asarray(ref.range_count(Q, world, EPS, metric="cosine")))
+
+
+# ============================================================== gateway
+def test_gateway_planner_parity_and_report():
+    from repro.serve import Gateway, TenantClass
+    rng = np.random.default_rng(21)
+    R = _skewed(rng, 500)
+    classes = [TenantClass("bulk", eps=EPS, recall_target=0.9),
+               TenantClass("gold", eps=EPS, verify="exact")]
+    gw = Gateway(R, classes, backend="jnp")
+    q = _unit(rng, 9)
+    t = gw.join("bulk", q)
+    np.testing.assert_array_equal(
+        t.counts, np.asarray(gw.plan("bulk").run(q, EPS).counts))
+    rep = gw.report()
+    assert rep["tenants"]["bulk"]["planner"] is not None
+    assert rep["tenants"]["bulk"]["planner"]["replans"] == 0
+    assert rep["tenants"]["gold"]["planner"] is None  # explicit verify
+    # planner="off" restores the static recall table
+    gw_off = Gateway(R, classes, backend="jnp", planner="off")
+    assert gw_off.report()["tenants"]["bulk"]["planner"] is None
+
+
+def test_gateway_replans_after_mutation():
+    from repro.serve import Gateway, TenantClass
+    rng = np.random.default_rng(23)
+    R = _unit(rng, 400)
+    cls = TenantClass("bulk", eps=EPS, recall_target=0.9)
+    gw = Gateway(R, [cls], backend="jnp", mutable=True, replan_at=0.05)
+    q = _unit(rng, 8)
+    gw.join("bulk", q)
+    gw.insert(_unit(rng, 60))                 # delta_frac 60/460 > 0.05
+    t = gw.join("bulk", q)
+    rep = gw.report()["tenants"]["bulk"]["planner"]
+    assert rep["replans"] == 1
+    np.testing.assert_array_equal(
+        t.counts, np.asarray(gw.plan("bulk").run(q, EPS).counts))
+    gw.join("bulk", q)                        # no second bump -> no replan
+    assert gw.report()["tenants"]["bulk"]["planner"]["replans"] == 1
+
+
+# ================================== satellite 1: the --compare floor
+def test_compare_floor_exempts_fast_rows(capsys):
+    from benchmarks.run import compare_snapshots
+    baseline = {"suites": {"ring": {"ring/r1": 9.0, "ring/r2": 10.0},
+                           "kernels": {"kernels/big": 100.0}}}
+    current = {"ring": {"ring/r1": 18.0, "ring/r2": 10.5},
+               "kernels": {"kernels/big": 200.0}}
+    regressed = compare_snapshots(baseline, current)
+    out = capsys.readouterr().out
+    assert regressed == ["kernels/big"]       # past the floor: gated
+    assert "jitter-exempt" in out             # under the floor: flagged only
+
+
+# =========================================== forced-8-device subprocess
+@pytest.mark.slow
+def test_planner_subprocess_8dev():
+    """Forced 8-host-device subprocess: ring appears in the candidate
+    grid, a ring-pinned auto() plan keeps exact-count parity with the
+    replicated exact sweep, explain() is byte-deterministic under both
+    pinned topologies, and re-bucketed LSH keeps verified-count parity
+    with the plain index on BOTH topologies (non-binding cap)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'\n"
+        "import json\n"
+        "import numpy as np, jax\n"
+        "from repro.core import JoinPlan\n"
+        "assert len(jax.devices()) == 8\n"
+        "rng = np.random.default_rng(6)\n"
+        "def unit(n):\n"
+        "    x = rng.normal(size=(n, 16)).astype(np.float32)\n"
+        "    return x / np.linalg.norm(x, axis=1, keepdims=True)\n"
+        "R, Q = unit(400), unit(12)\n"
+        "want = np.asarray(JoinPlan(R, 'cosine').verify('exact')\n"
+        "                  .on(backend='jnp').build().run(Q, 0.4).counts)\n"
+        "for pins in ({}, dict(topology='ring', r_shards=2)):\n"
+        "    def plan():\n"
+        "        p = JoinPlan(R, 'cosine').filter('none')\n"
+        "        if pins: p = p.on(**pins)\n"
+        "        return p.auto(0.4, Q, recall=1.0, seed=0)\n"
+        "    p1, p2 = plan(), plan()\n"
+        "    e1 = json.dumps(p1.explain(), sort_keys=True)\n"
+        "    e2 = json.dumps(p2.explain(), sort_keys=True)\n"
+        "    assert e1 == e2, pins\n"
+        "    if pins:\n"
+        "        assert p1.explain()['chosen']['topology'] == 'ring'\n"
+        "    np.testing.assert_array_equal(\n"
+        "        np.asarray(p1.run(Q, 0.4).counts), want)\n"
+        "unpinned = JoinPlan(R, 'cosine').filter('none').auto(\n"
+        "    0.4, Q, recall=0.9, seed=0)\n"
+        "assert any('ring' in c['config']\n"
+        "           for c in unpinned.explain()['candidates'])\n"
+        "hot = np.concatenate([R, R[:1] + 0.02 * unit(120)])\n"
+        "hot = hot / np.linalg.norm(hot, axis=1, keepdims=True)\n"
+        "LSH = dict(k=10, l=8, n_probes=4, W=2.5, cap=len(hot))\n"
+        "for pins in ({}, dict(topology='ring', r_shards=2)):\n"
+        "    def lsh_plan(**extra):\n"
+        "        return (JoinPlan(hot, 'cosine').filter('none')\n"
+        "                .search('naive').verify('lsh', **LSH, **extra)\n"
+        "                .on(backend='jnp', **pins).build())\n"
+        "    c1 = np.asarray(lsh_plan().run(Q, 0.4).counts)\n"
+        "    c2 = np.asarray(lsh_plan(rebucket_hot=4.0).run(Q, 0.4).counts)\n"
+        "    np.testing.assert_array_equal(c2, c1), pins\n"
+        "print('PLANNER_8DEV_OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert "PLANNER_8DEV_OK" in out.stdout, out.stderr[-3000:]
